@@ -1,0 +1,76 @@
+"""TPU-motivation benchmark (DESIGN.md Sec. 2): MXU-eligible flop share.
+
+On TPU the substitution base case is VPU-serial (no MXU work); the
+paper's inversion swap turns those flops into batched GEMMs.  This
+bench counts, for the It-Inv-TRSM schedule at varying n0:
+
+  * GEMM flops (solve multiplies + trailing updates + inversion
+    doubling-level matmuls) — MXU-eligible,
+  * substitution flops (what the baseline spends serially),
+
+and reports the MXU-eligible fraction plus the paper's flop overhead
+(the extra n*n0^2-ish inversion work, Sec. VII-D: F = n^2k/p + n0^2n/p).
+
+Also wall-clock sanity on CPU: inversion-based local solve vs row
+substitution (even on CPU the batched form wins by a large factor for
+small n0 — the latency-bound regime the paper attacks)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flop_model(n, k, n0):
+    m = n // n0
+    gemm_solve = m * n0 * n0 * k * 2                 # L~_ii @ B_i
+    gemm_update = sum((n - (i + 1) * n0) * n0 * k * 2 for i in range(m))
+    gemm_inv = sum((n0 // (2 * s)) * 2 * (2 * s ** 3)
+                   for s in [2 ** j for j in range(int(np.log2(n0)))]) * m
+    return gemm_solve, gemm_update, gemm_inv
+
+
+def run(report):
+    from repro.core import blocked
+
+    n, k = 512, 128
+    rows = []
+    for n0 in [8, 32, 128, 512]:
+        gs, gu, gi = flop_model(n, k, n0)
+        sub_flops = n * n * k          # the baseline's substitution flops
+        mxu = gs + gu + gi
+        frac = (gs + gu) / (gs + gu + gi)
+        overhead = gi / (gs + gu)
+        rows.append(dict(n0=n0, gemm=mxu, inv_overhead=overhead,
+                         useful_frac=frac))
+        report(f"n0={n0:4d}: GEMM flops={mxu:.2e} "
+               f"(inversion overhead={overhead * 100:.1f}%, "
+               f"useful={frac * 100:.1f}%) — baseline substitution flops "
+               f"{sub_flops:.2e} are 0% MXU-eligible")
+
+    # wall-clock: batched inversion+GEMM vs row-by-row substitution
+    rng = np.random.default_rng(0)
+    L = jnp.asarray(np.tril(rng.standard_normal((n, n))) + n * np.eye(n),
+                    jnp.float32)
+    B = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    it = jax.jit(lambda l, b: blocked.it_inv_trsm_local(l, b, 64))
+    fs = jax.jit(blocked.forward_substitution)
+    it(L, B).block_until_ready()
+    fs(L, B).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        it(L, B).block_until_ready()
+    t_it = (time.perf_counter() - t0) / 20
+    t0 = time.perf_counter()
+    for _ in range(20):
+        fs(L, B).block_until_ready()
+    t_fs = (time.perf_counter() - t0) / 20
+    report(f"wall-clock (CPU, n={n}, k={k}): It-Inv(n0=64)={t_it * 1e3:.2f}ms"
+           f"  row-substitution={t_fs * 1e3:.2f}ms  "
+           f"speedup={t_fs / t_it:.1f}x")
+    rows.append(dict(t_it_inv_ms=t_it * 1e3, t_subst_ms=t_fs * 1e3,
+                     speedup=t_fs / t_it))
+    return rows

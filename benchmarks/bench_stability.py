@@ -1,0 +1,67 @@
+"""Numerical stability of inversion-based TRSM (the Du Croz/Higham
+claim the paper's Sec. I leans on: triangular inversion is stable,
+unlike general inversion).
+
+Sweep condition number kappa(L); compare forward error of:
+  * substitution TRSM (baseline),
+  * It-Inv-TRSM with diagonal-block inversion (the paper: only n0-sized
+    blocks are inverted),
+  * full-inverse multiply X = L^{-1} B (what the paper's blocking
+    AVOIDS for large n).
+
+Expected: block-inversion tracks substitution closely across kappa; the
+full inverse drifts as kappa grows — matching the paper's design point
+that selective (block) inversion preserves stability."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_tril_with_cond(n, cond, seed=0):
+    """Lower-triangular with controlled condition: D(I + N) with small
+    strictly-lower N (kappa(I+N) modest) and a graded diagonal spanning
+    the target range, so kappa(L) ~ cond."""
+    rng = np.random.default_rng(seed)
+    N = np.tril(rng.standard_normal((n, n)), -1) * (0.5 / n)
+    d = np.logspace(0, -np.log10(cond), n)
+    return (np.diag(d) @ (np.eye(n) + N)).astype(np.float64)
+
+
+def run(report):
+    from repro.core import blocked
+
+    jax.config.update("jax_enable_x64", False)   # stress in f32
+    n, k, n0 = 256, 32, 32
+    rows = []
+    for cond in [1e1, 1e3, 1e5, 1e7]:
+        L64 = make_tril_with_cond(n, cond)
+        rng = np.random.default_rng(1)
+        X64 = rng.standard_normal((n, k))
+        B64 = L64 @ X64
+        L = jnp.asarray(L64, jnp.float32)
+        B = jnp.asarray(B64, jnp.float32)
+
+        x_sub = np.asarray(
+            jax.scipy.linalg.solve_triangular(L, B, lower=True), np.float64)
+        x_inv_blk = np.asarray(
+            blocked.it_inv_trsm_local(L, B, n0), np.float64)
+        li = blocked.tri_inv_doubling(L)
+        x_full = np.asarray(li @ B, np.float64)
+
+        def err(x):
+            return np.linalg.norm(x - X64) / np.linalg.norm(X64)
+
+        rows.append(dict(cond=cond, sub=err(x_sub), blk=err(x_inv_blk),
+                         full=err(x_full)))
+        report(f"kappa={cond:.0e}: substitution={err(x_sub):.2e}  "
+               f"block-inv(n0={n0})={err(x_inv_blk):.2e}  "
+               f"full-inv={err(x_full):.2e}")
+    # block inversion stays within ~100x of substitution error
+    for r in rows:
+        if r["sub"] > 0:
+            assert r["blk"] < max(200 * r["sub"], 1e-4), r
+    report("block-inversion error tracks substitution across kappa (OK)")
+    return rows

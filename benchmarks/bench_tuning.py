@@ -1,0 +1,41 @@
+"""Paper Sec. VIII validation: regime selection and a-priori optimal
+parameters (p1, p2, n0, r1, r2) across the (n, k, p) space, from the
+closed forms and from the feasibility-snapped argmin tuner."""
+
+from __future__ import annotations
+
+import math
+
+
+def run(report):
+    from repro.core import tuning
+
+    rows = []
+    cases = [
+        # (n, k, p) spanning the three regimes of Fig. 1
+        (1 << 10, 1 << 16, 512),       # n < 4k/p       -> 1D
+        (1 << 14, 1 << 10, 64),        # middle         -> 3D
+        (1 << 16, 1 << 10, 64),        # hmm boundary
+        (1 << 18, 1 << 8, 64),         # n > 4k sqrt(p) -> 2D
+        (1 << 14, 1 << 14, 256),       # square         -> 3D
+    ]
+    for (n, k, p) in cases:
+        t = tuning.tuning_table(n, k, p)
+        ideal, plan = t["ideal"], t["plan"]
+        rows.append(dict(n=n, k=k, p=p, regime=ideal["regime"],
+                         ideal_p1=ideal["p1"], plan_p1=plan["p1"],
+                         ideal_n0=ideal["n0"], plan_n0=plan["n0"],
+                         r1=plan["r1"], r2=plan["r2"]))
+        report(f"n=2^{int(math.log2(n))} k=2^{int(math.log2(k))} p={p}: "
+               f"regime={ideal['regime']} "
+               f"ideal p1={ideal['p1']:.1f} n0={ideal['n0']:.0f} | "
+               f"snapped p1={plan['p1']} p2={plan['p2']} n0={plan['n0']} "
+               f"r1={plan['r1']} r2={plan['r2']}")
+        # feasibility invariants
+        assert plan["p1"] ** 2 * plan["p2"] == p
+        assert n % plan["n0"] == 0
+    # regime boundaries behave per Sec. VIII
+    assert tuning.regime(10, 1 << 16, 512) == "1d"
+    assert tuning.regime(1 << 18, 1 << 8, 64) == "2d"
+    report("regime boundaries OK (n<4k/p -> 1D, n>4k sqrt(p) -> 2D)")
+    return rows

@@ -1,0 +1,290 @@
+"""Regenerate EXPERIMENTS.md from the dry-run artifacts
+(experiments/dryrun/*.json), benchmark results (benchmarks/results.json)
+and the perf-iteration log (experiments/perf_log.json).
+
+    PYTHONPATH=src python experiments/make_report.py
+"""
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+ROOT = os.path.join(HERE, "..")
+
+
+def load_cells():
+    recs = [json.load(open(f))
+            for f in sorted(glob.glob(os.path.join(HERE, "dryrun",
+                                                   "*.json")))]
+    base = [r for r in recs if "__" not in
+            os.path.basename(r.get("arch", "")) and "kv_dtype" not in
+            ("",) and True]
+    # baseline cells have no tag: filenames arch__shape__mesh.json
+    out = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        name = os.path.basename(f)[:-5]
+        if name.count("__") == 2:
+            out.append(json.load(open(f)))
+    return out
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def dryrun_table(cells, mesh):
+    lines = ["| arch | shape | status | chips | compile s | mem/dev GB "
+             "| collective ops (HLO) |",
+             "|---|---|---|---:|---:|---:|---|"]
+    for r in cells:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | — | — "
+                         f"| — | {r['reason'][:58]} |")
+            continue
+        mem = r.get("memory", {})
+        mg = (mem.get("temp_size_in_bytes", 0)
+              + mem.get("argument_size_in_bytes", 0)) / 1e9
+        ops = ",".join(sorted(r.get("collectives", {}).keys())) or "none"
+        lines.append(f"| {r['arch']} | {r['shape']} | ok | "
+                     f"{r['n_chips']} | {r['compile_s']:.1f} | "
+                     f"{mg:.1f} | {ops} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    lines = ["| arch | shape | bottleneck | t_compute s | t_memory s | "
+             "t_collective s | MODEL/HLO | roofline frac | one-line fix |",
+             "|---|---|---|---:|---:|---:|---:|---:|---|"]
+    fixes = {
+        ("compute",): "already MXU-bound; fuse/quantify remat waste",
+        ("memory",): "int8 KV cache / fewer weight streams (see Perf A)",
+        ("collective",): "fewer microbatches (FSDP gathers) or TP "
+                         "re-roling (see Perf B)",
+    }
+    for r in cells:
+        if r["mesh"] != "single" or r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        fix = fixes[(ro["bottleneck"],)]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['bottleneck']} | "
+            f"{fmt_e(ro['t_compute'])} | {fmt_e(ro['t_memory'])} | "
+            f"{fmt_e(ro['t_collective'])} | {ro['useful_ratio']:.2f} | "
+            f"{ro['roofline_fraction']:.3f} | {fix} |")
+    return "\n".join(lines)
+
+
+def trsm_scale_section():
+    path = os.path.join(HERE, "trsm_scale.json")
+    if not os.path.exists(path):
+        return "_run experiments/trsm_scale_dryrun.py first_"
+    rows = json.load(open(path))
+    lines = ["| algo | grid | n | k | n0 | compile s | traced S | "
+             "traced W | temp/dev GB |",
+             "|---|---|---:|---:|---:|---:|---:|---:|---:|"]
+    for r in rows:
+        lines.append(
+            f"| {r['algo']} | {r['p1']}x{r['p1']}x{r['p2']} (p={r['p']})"
+            f" | {r['n']} | {r['k']} | {r['n0']} | {r['compile_s']} | "
+            f"{r['traced']['S']:.0f} | {r['traced']['W']:.2e} | "
+            f"{r['temp_gb']:.2f} |")
+    # latency ratios per (grid, k)
+    pairs = {}
+    for r in rows:
+        pairs.setdefault((r["p"], r["k"]), {})[r["algo"]] = r
+    extra = []
+    for (p, k), d in pairs.items():
+        if "it_inv" in d and "rec" in d:
+            ratio = d["rec"]["traced"]["S"] / d["it_inv"]["traced"]["S"]
+            extra.append(f"* p={p}, k={k}: traced latency improvement "
+                         f"**{ratio:.1f}x** (It-Inv vs Rec)")
+    return "\n".join(lines) + "\n\n" + "\n".join(extra)
+
+
+def perf_section():
+    path = os.path.join(HERE, "perf_log.json")
+    if not os.path.exists(path):
+        return "_run experiments/perf_hillclimb.py first_"
+    log = json.load(open(path))
+    out = []
+    for cell, iters in log["cells"].items():
+        out.append(f"\n### {cell}\n")
+        for it in iters:
+            tag = "CONFIRMED" if it["confirmed"] else "REFUTED"
+            out.append(f"**{it['iteration']}** [{tag}]")
+            out.append(f"- hypothesis: {it['hypothesis']}")
+            out.append(f"- before: `{json.dumps(it['before'])}`")
+            out.append(f"- after: `{json.dumps(it['after'])}`")
+            out.append(f"- {it['note']}")
+            out.append("")
+    return "\n".join(out)
+
+
+def bench_section():
+    path = os.path.join(ROOT, "benchmarks", "results.json")
+    if not os.path.exists(path):
+        return "_run python -m benchmarks.run first_"
+    res = json.load(open(path))
+    lines = ["| bench | status | seconds |", "|---|---|---:|"]
+    for name, r in res.items():
+        lines.append(f"| {name} | {r['status']} | "
+                     f"{r.get('seconds', '—')} |")
+    return "\n".join(lines)
+
+
+TEMPLATE = """# EXPERIMENTS
+
+All artifacts regenerable: `experiments/dryrun/*.json` (via
+`python -m repro.launch.dryrun`), `benchmarks/results.json` (via
+`python -m benchmarks.run`), `experiments/perf_log.json` (via
+`python experiments/perf_hillclimb.py`); this file via
+`python experiments/make_report.py`.
+
+## Paper-validation
+
+The paper has no wall-clock experiments — its results ARE its cost
+tables.  We validate them by *tracing the implementations*: every
+collective in `repro.core` goes through `repro.core.comm`, which
+records the paper's alpha-beta-gamma cost from static shapes at trace
+time.  One benchmark per paper table:
+
+{bench}
+
+Key outcomes (see benchmarks/results.json for numbers):
+
+* **Sec. III MM table**: traced W matches the closed form to the word
+  (exact equality across 5 grid/shape combos); our mesh-native schedule
+  drops the paper's two O(nk log p / p) rectangular-grid transposes.
+* **Sec. V inversion**: traced W = 0.66–0.82x the paper's closed form —
+  the SPMD batched-doubling schedule beats the shrinking-subgrid
+  constant (beyond-paper); latency stays polylog.
+* **Sec. IX comparison**: 3D-regime latency improvement reproduced
+  (model 60x at n/k=64, p=512 vs the Theta((n/k)^{{1/6}}p^{{2/3}})=128
+  prediction — same order), 2D bandwidth improvement = log2(p) exactly,
+  1D parity with the predicted extra log p latency for inversion.
+* **Stability** (Du Croz/Higham): block-inversion forward error tracks
+  substitution across kappa(L) in 1e1..1e7 (f32); selective inversion
+  is as stable as substitution for the block sizes the paper uses.
+* **GEMM fraction** (TPU motivation): the inversion swap converts 100%
+  of base-case substitution flops (VPU-serial, 0% MXU) into batched
+  GEMMs with <1.1% inversion overhead at n0<=32 (13% at n0=128).
+
+## Dry-run
+
+`src/repro/launch/dryrun.py` lowers + compiles every (arch x shape)
+cell with full production shardings (FSDP x TP x EP + sequence-sharded
+KV caches) on both meshes, 512 forced host devices.  **All 40 cells x 2
+meshes: 64 ok + 16 documented skips, 0 failures.**  Skips are exactly
+the 8 full-attention archs x long_500k (quadratic-cost by definition)
+x 2 meshes, per DESIGN.md Sec. 6.
+
+### single pod (16 x 16 = 256 chips)
+
+{dry_single}
+
+### multi-pod (2 x 16 x 16 = 512 chips; proves the "pod" axis shards)
+
+{dry_multi}
+
+Memory note: `memory_analysis()` on the CPU backend reports the
+partitioned module's buffer sizes; decode cells fit v5e HBM (e.g.
+llama3-405b decode_32k: 8.6 GB/dev KV cache + 3.2 GB/dev params).
+Small/mid train cells fit after the Perf-F memory sweep (vocab-over-TP
+embedding, flash-backward remat, vocab padding); the 3 biggest archs'
+train cells additionally need bf16 moments + deeper microbatching
+(Perf cell D) and, for llama3-405b at 256 chips, optimizer offload or
+the 512-chip mesh.
+
+End-to-end evidence: `examples/train_lm.py` trained the ~134M preset
+for 120 steps on the synthetic pipeline (loss 10.63 -> 10.48, ~21k
+tok/s host CPU; log in `experiments/train_100m_log.txt`), with async
+checkpoints and bit-exact restart (tests/test_substrate.py).
+
+### The TRSM engine itself at pod scale
+
+`experiments/trsm_scale_dryrun.py` lowers + compiles It-Inv-TRSM and
+Rec-TRSM on 8x8x4 = 256 and 16x16x2 = 512 device grids (ShapeDtypeStruct
+inputs, full cyclic-layout shard_map), with trace-time S/W recorded:
+
+{trsm_scale}
+
+The paper's headline — the pre-inversion algorithm needs an order of
+magnitude fewer critical-path messages — is measured here at production
+scale on the real lowered programs (the recursive baseline's S grows
+with its n/n0 sequential base cases; It-Inv stays at
+(n/n0) log p + log^2 p).
+
+## Roofline (single pod, per step)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI.  Terms from the ANALYTIC model (`repro.roofline.model`), which is
+scan-trip-count-exact; XLA `cost_analysis()` counts while bodies once
+and is kept in the artifacts as `compiled_raw` (the flop model is
+validated against an UNROLLED compile in tests/test_roofline.py, within
+30%).  Collective bytes of one scan iteration and the collective op set
+come from the compiled HLO (`collectives` field).  MODEL/HLO =
+useful-flops ratio = 6*N_matmul*D / analytic flops (N excludes the
+embedding gather, so 1.00 means zero redundant compute).
+
+{roofline}
+
+Reading: big dense/MoE train cells are compute-bound at 0.93–0.98
+useful fraction (remat recompute is the gap); prefill is compute-bound;
+decode is memory-bound by KV-cache reads (the roofline fraction is an
+MFU-style number — decode at fixed batch is bandwidth-limited by
+construction, see Perf cell A); small models and whisper/xlstm are
+collective-bound (FSDP+TP overhead vs tiny matmuls).
+
+## Perf — hillclimb log (3 cells)
+
+Cells chosen per the assignment: worst roofline fraction
+(smollm decode), most collective-bound (arctic train), most
+representative of the paper's technique (the KFAC-CA preconditioner's
+CA-TRSM solves).  Paper-faithful baselines are recorded first; the
+beyond-paper changes are marked.
+
+{perf}
+
+### Perf summary
+
+| cell | dominant term before | after | change |
+|---|---:|---:|---|
+| A smollm-360m/decode_32k | t_mem 1.64e-3 s | 8.48e-4 s | int8 KV cache (1.94x); structural bandwidth floor reached |
+| B arctic-480b/train_4k | t_coll 2.38 s | 1.48 s serialized / 2.04 s overlapped bound | mb 8->2 (1.6x) + overlap headroom; fsdp_all REFUTED by napkin math (16x worse) |
+| C granite-8b/kfac-trsm | rec 3.28e-3 s (k=512) | inv 4.78e-4 s | paper technique 6.9x at k<<n; REFUTED at n=k on ICI (bandwidth), wins 1.5x on DCN -> method=auto |
+| D llama3-405b/train_4k | args 22.0 GB, temps 116.6 GB | args 14.7 GB, temps 70.5 GB | bf16 moments + mb 8->16 (memory fit; cell stays compute-bound 0.98 useful) |
+| E smollm-360m/train_4k | t_coll 7.71e-2 s (collective-bound, frac 0.585) | t_coll 4.34e-2 s (compute-bound, frac 0.742) | shard_mode=fsdp_all + mb=1: TP re-roled into FSDP+SP for the small model |
+| F memory-fit sweep | qwen3-multi 323 GB / smollm 152 GB / whisper 116 GB temps | 13.3 / 16.9 / 5.4 GB | vocab-over-TP embedding + flash-backward remat + vocab padding (fleet-wide fixes) |
+
+Stop criterion: each cell ended on a structural bound (A: bandwidth
+floor at fixed batch; B: overlap bound; C: model argmin bracketed; D:
+remaining temps are backend-aliasing artifacts) — further <5% moves.
+
+Beyond-paper deltas recorded: mesh-native MM (drops 2 transposes),
+batched-doubling inversion (W 0.66–0.82x of paper), all-to-all phase-1
+(2 collectives vs O(log^2 p)), int8 KV cache, int8 cross-pod gradient
+compression, model-driven rec/inv auto-dispatch.
+"""
+
+
+def main():
+    cells = load_cells()
+    md = TEMPLATE.format(
+        bench=bench_section(),
+        dry_single=dryrun_table(cells, "single"),
+        dry_multi=dryrun_table(cells, "multi"),
+        roofline=roofline_table(cells),
+        trsm_scale=trsm_scale_section(),
+        perf=perf_section(),
+    )
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write(md)
+    print(f"wrote {out} ({len(md)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Communication-avoiding TRSM (Wicky/Solomonik/Hoefler, CS.DC 2016).
+
+Public API:
+
+    trsm(L, B, grid, method="inv"|"rec", ...)   distributed solve L X = B
+    tri_inv.invert(L, grid)                     distributed L^{-1}
+    cholesky.cholesky(A, grid)                  distributed chol via inversion
+    mm3d.matmul(L, X, grid)                     Sec. III 3D matmul
+    tuning.tune(n, k, p)                        Sec. VIII a-priori parameters
+    comm.trace()                                alpha-beta-gamma cost tracing
+"""
+
+from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
+
+
+def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
+         machine=None, lower: bool = True, transpose: bool = False,
+         **kw):
+    """Solve op(L) X = B on a TrsmGrid.
+
+    method="inv":  It-Inv-TRSM (paper Secs. VI-VII, the contribution).
+    method="rec":  recursive baseline (paper Sec. IV).
+    method="auto": beyond-paper — pick by the alpha-beta-gamma model
+                   instantiated with the machine constants (the paper's
+                   trade wins on high-alpha networks / k << n; the
+                   recursive solver wins bandwidth-bound square solves
+                   on low-alpha ICI).
+    lower/transpose: upper-triangular and transposed solves reduce to
+    the lower case by the reversal identity (DESIGN.md Sec. 3); the
+    reversal is an index permutation applied at distribution time.
+    n0 defaults to the Sec. VIII tuned block size.
+    """
+    if transpose:
+        # op(L) = L^T: L^T X = B  <=>  reversed lower solve on L^T
+        return trsm(L.T, B, grid, method=method, n0=n0, machine=machine,
+                    lower=not lower, **kw)
+    if not lower:
+        # U X = B with U upper: (J U J) is lower; solve on reversed data
+        Xr = trsm(L[::-1, ::-1], B[::-1], grid, method=method, n0=n0,
+                  machine=machine, lower=True, **kw)
+        return Xr[::-1]
+    n, k = B.shape
+    if method == "auto":
+        from repro.core import tuning
+        method, _, _ = tuning.choose_method(n, k, grid.p, machine)
+    if method == "inv":
+        from repro.core import inv_trsm, tuning
+        if n0 is None:
+            plan = tuning.tune_for_grid(n, k, grid)
+            n0 = plan.n0
+        return inv_trsm.solve(L, B, grid, n0, **kw)
+    if method == "rec":
+        from repro.core import rec_trsm
+        return rec_trsm.solve(L, B, grid, n0=n0, **kw)
+    raise ValueError(method)

@@ -1,0 +1,189 @@
+"""Local (single-device) blocked triangular primitives.
+
+These are the numerical building blocks and oracles for the distributed
+algorithms in this package:
+
+* ``tri_inv_doubling`` — bottom-up ("recursive doubling") triangular
+  inversion.  This is the SPMD-friendly re-derivation of the paper's
+  RecTriInv (Sec. V): level ``l`` finalizes the off-diagonal block of every
+  diagonal ``2^(l+1)``-block with two batched GEMMs
+  (``inv([[A,0],[B,C]]) = [[A^-1,0],[-C^-1 B A^-1, C^-1]]``).
+* ``block_diag_invert`` — invert only the ``n/n0`` diagonal blocks
+  (the paper's Diagonal-Inverter output ``L~``).
+* ``it_inv_trsm_local`` — the single-device schedule of It-Inv-TRSM
+  (Sec. VI): multiply by pre-inverted diagonal blocks + trailing GEMM
+  updates; no substitution in the sweep.
+* ``rec_trsm_local`` — the recursive baseline (Sec. IV) with a
+  substitution base case.
+* reversal identities to reduce upper/transposed solves to the lower case.
+
+Everything is pure jnp and jit-friendly (static shapes, lax control flow).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _diag_blocks(a: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Extract the (n/s, s, s) diagonal blocks of an (n, n) matrix."""
+    n = a.shape[-1]
+    nb = n // s
+    v = a.reshape(nb, s, nb, s)
+    idx = jnp.arange(nb)
+    return v[idx, :, idx, :]  # (nb, s, s)
+
+
+def _set_diag_blocks(a: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    n = a.shape[-1]
+    nb, s, _ = blocks.shape
+    v = a.reshape(nb, s, nb, s)
+    idx = jnp.arange(nb)
+    v = v.at[idx, :, idx, :].set(blocks)
+    return v.reshape(n, n)
+
+
+def tri_inv_doubling(L: jnp.ndarray) -> jnp.ndarray:
+    """Invert a lower-triangular matrix by bottom-up block doubling.
+
+    Cost-identical to the paper's RecTriInv but single-program: log2(n)
+    levels, each two batched GEMMs over all off-diagonal blocks at that
+    level.  Pads to the next power of two with an identity block
+    (``inv([[L,0],[0,I]]) = [[L^-1,0],[0,I]]``).
+    """
+    n = L.shape[-1]
+    N = next_pow2(n)
+    if N != n:
+        Lp = jnp.eye(N, dtype=L.dtype)
+        L = Lp.at[:n, :n].set(L)
+    # Level 0: invert the 1x1 diagonal.
+    d = jnp.diagonal(L)
+    A = L * (1.0 - jnp.eye(N, dtype=L.dtype)) + jnp.diag(1.0 / d)
+    s = 1
+    while s < N:
+        blk = _diag_blocks(A, 2 * s)          # (nb, 2s, 2s)
+        a11i = blk[:, :s, :s]                  # already inverted
+        a22i = blk[:, s:, s:]                  # already inverted
+        l21 = blk[:, s:, :s]                   # still original L entries
+        new21 = -jnp.einsum("bij,bjk,bkl->bil", a22i, l21, a11i)
+        blk = blk.at[:, s:, :s].set(new21)
+        A = _set_diag_blocks(A, blk)
+        s *= 2
+    return A[:n, :n] if N != n else A
+
+
+def tri_inv_batched(Ls: jnp.ndarray) -> jnp.ndarray:
+    """vmap of tri_inv_doubling over a stack (m, n0, n0)."""
+    return jax.vmap(tri_inv_doubling)(Ls)
+
+
+def block_diag_invert(L: jnp.ndarray, n0: int) -> jnp.ndarray:
+    """Return L~: L with every (n0 x n0) diagonal block inverted in place.
+
+    This is the output contract of the paper's Diagonal-Inverter: the
+    off-diagonal panels are untouched; only diagonal blocks are inverted.
+    """
+    n = L.shape[-1]
+    assert n % n0 == 0, (n, n0)
+    blocks = _diag_blocks(L, n0)
+    inv = tri_inv_batched(blocks)
+    return _set_diag_blocks(L, inv)
+
+
+def it_inv_trsm_local(L: jnp.ndarray, B: jnp.ndarray, n0: int,
+                      block_inv=None) -> jnp.ndarray:
+    """It-Inv-TRSM (paper Sec. VI) on one device: solve L X = B.
+
+    1. Invert diagonal n0-blocks ("inversion" phase).
+    2. Sweep i = 0..n/n0-1:  X_i = L~_ii @ B_i   (GEMM, not substitution)
+       then the trailing update B_{>i} -= L[:, S_i] @ X_i  (GEMM),
+       masked to rows > (i+1) n0 (the paper's T_{i+1} update range,
+       expressed with static shapes for SPMD/jit friendliness).
+
+    ``block_inv``: optional override for the batched diagonal-block
+    inverter (e.g. the Pallas kernel); defaults to tri_inv_batched.
+    """
+    n = L.shape[-1]
+    k = B.shape[-1]
+    assert n % n0 == 0
+    m = n // n0
+    inv_fn = block_inv if block_inv is not None else tri_inv_batched
+    dblocks = inv_fn(_diag_blocks(L, n0))      # (m, n0, n0) inverted
+
+    row_ids = jnp.arange(n)
+
+    def body(i, carry):
+        B_cur, X = carry
+        Bi = jax.lax.dynamic_slice(B_cur, (i * n0, 0), (n0, k))
+        Xi = dblocks[i] @ Bi                                   # solve via GEMM
+        X = jax.lax.dynamic_update_slice(X, Xi, (i * n0, 0))
+        panel = jax.lax.dynamic_slice(L, (0, i * n0), (n, n0))  # L[:, S_i]
+        mask = (row_ids >= (i + 1) * n0).astype(L.dtype)[:, None]
+        B_cur = B_cur - mask * (panel @ Xi)
+        return B_cur, X
+
+    _, X = jax.lax.fori_loop(0, m, body, (B, jnp.zeros_like(B)))
+    return X
+
+
+def rec_trsm_local(L: jnp.ndarray, B: jnp.ndarray, n0: int) -> jnp.ndarray:
+    """Recursive TRSM baseline (paper Sec. IV) on one device.
+
+    Splits L into quadrants until n <= n0, base case = forward
+    substitution (jax.scipy solve_triangular).  Python recursion over
+    static shapes — unrolled at trace time, as in the paper's recursion.
+    """
+    n = L.shape[-1]
+    if n <= n0:
+        return jax.scipy.linalg.solve_triangular(L, B, lower=True)
+    h = n // 2
+    L11, L21, L22 = L[:h, :h], L[h:, :h], L[h:, h:]
+    X1 = rec_trsm_local(L11, B[:h], n0)
+    B2 = B[h:] - L21 @ X1
+    X2 = rec_trsm_local(L22, B2, n0)
+    return jnp.concatenate([X1, X2], axis=0)
+
+
+def forward_substitution(L: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Row-by-row forward substitution (the latency/VPU-bound baseline
+    that the paper's inversion approach replaces).  Reference only."""
+    n = L.shape[-1]
+
+    def body(i, X):
+        xi = (B[i] - L[i] @ X) / L[i, i]
+        return X.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(B))
+
+
+# ----- reductions of the other triangular cases to the lower-left one -----
+
+def solve_lower(L, B, solver, **kw):
+    return solver(L, B, **kw)
+
+
+def solve_upper(U, B, solver, **kw):
+    """U X = B via the reversal identity: J U J is lower-triangular."""
+    Lr = U[::-1, ::-1]
+    return solver(Lr, B[::-1], **kw)[::-1]
+
+
+def solve_lower_t(L, B, solver, **kw):
+    """L^T X = B (upper solve with the lower factor) via reversal."""
+    return solve_upper(L.T, B, solver, **kw)
+
+
+def spd_solve(L_chol, B, solver, **kw):
+    """A^-1 B given A = L L^T: two triangular solves (the K-FAC use)."""
+    Y = solve_lower(L_chol, B, solver, **kw)
+    return solve_lower_t(L_chol, Y, solver, **kw)

@@ -1,0 +1,258 @@
+"""The paper's alpha-beta-gamma cost model (Secs. II, III, IV, VII).
+
+All closed forms from the paper are implemented here, leading-order
+constants included where the paper gives them.  ``Cost`` carries the
+three critical-path counts:
+
+    s : latency  — number of messages (collectives) on the critical path
+    w : bandwidth — words sent/received on the critical path
+    f : flops
+
+``Machine`` instantiates the model with hardware constants; the TPU v5e
+preset is used for all a-priori tuning decisions (Sec. VIII: "the exact
+choice is machine dependent") and for the roofline collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def lg(x: float) -> float:
+    return math.log2(max(x, 1.0))
+
+
+def ind(p: float) -> float:
+    """The paper's unit step 1_p  (1 if p > 1 else 0)."""
+    return 1.0 if p > 1 else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    s: float = 0.0   # messages
+    w: float = 0.0   # words
+    f: float = 0.0   # flops
+
+    def __add__(self, o: "Cost") -> "Cost":
+        return Cost(self.s + o.s, self.w + o.w, self.f + o.f)
+
+    def __mul__(self, c: float) -> "Cost":
+        return Cost(self.s * c, self.w * c, self.f * c)
+
+    __rmul__ = __mul__
+
+    def time(self, m: "Machine") -> float:
+        return m.alpha * self.s + m.beta * self.w + m.gamma * self.f
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """alpha [s/message], beta [s/word], gamma [s/flop]."""
+    name: str
+    alpha: float
+    beta: float
+    gamma: float
+
+
+def tpu_v5e(dtype_bytes: int = 2) -> Machine:
+    """TPU v5e: 197 TFLOP/s bf16, ~50 GB/s/link ICI, ~1us collective hop."""
+    return Machine(
+        name="tpu_v5e",
+        alpha=1e-6,
+        beta=dtype_bytes / 50e9,
+        gamma=1.0 / 197e12,
+    )
+
+
+def tpu_v5e_dcn(dtype_bytes: int = 2) -> Machine:
+    """Cross-pod (DCN) network: ~50us collective setup, ~25 GB/s/host.
+    The high-alpha regime where the paper's latency-avoiding trade pays
+    off even for square (n = k) solves."""
+    return Machine(
+        name="tpu_v5e_dcn",
+        alpha=5e-5,
+        beta=dtype_bytes / 25e9,
+        gamma=1.0 / 197e12,
+    )
+
+
+# --------------------- collectives (Sec. II-C1) ---------------------
+
+def allgather(n: float, p: float) -> Cost:
+    return Cost(s=lg(p), w=n * ind(p))
+
+
+def scatter(n: float, p: float) -> Cost:
+    return Cost(s=lg(p), w=n * ind(p))
+
+
+def gather(n: float, p: float) -> Cost:
+    return Cost(s=lg(p), w=n * ind(p))
+
+
+def reduce_scatter(n: float, p: float) -> Cost:
+    return Cost(s=lg(p), w=n * ind(p), f=n * ind(p))
+
+
+def alltoall(n: float, p: float) -> Cost:
+    return Cost(s=lg(p), w=n * lg(p) / 2.0)
+
+
+def reduction(n: float, p: float) -> Cost:
+    return Cost(s=2 * lg(p), w=2 * n * ind(p), f=n * ind(p))
+
+
+def allreduction(n: float, p: float) -> Cost:
+    return Cost(s=2 * lg(p), w=2 * n * ind(p), f=n * ind(p))
+
+
+def bcast(n: float, p: float) -> Cost:
+    return Cost(s=2 * lg(p), w=2 * n * ind(p))
+
+
+# --------------------- MM (Sec. III) ---------------------
+
+def mm_cost_paper(n: float, k: float, p: float, p1: float,
+                  p2: float) -> Cost:
+    """3D matmul from a 2D cyclic start, line-by-line per the paper
+    (Sec. III cost table), INCLUDING the two rectangular-grid transposes
+    (lines 3 and 8, O(nk log(p)/p) each) required by the paper's 4D-grid
+    construction.
+    """
+    c = Cost()
+    c = c + Cost(s=lg(p2), w=(n * n / (p1 * p1)) * ind(p2))       # line 2
+    c = c + Cost(s=lg(p), w=n * k * lg(p) / p)                    # line 3
+    c = c + Cost(s=1, w=n * k / p)                                # line 4
+    c = c + Cost(s=lg(p1), w=n * k / (p1 * p2) * ind(p1))         # line 5
+    c = c + Cost(f=n * n * k / p)                                 # line 6
+    c = c + Cost(s=lg(p1), w=n * k / (p1 * p2) * ind(p1),
+                 f=n * k / (p1 * p2) * ind(p1))                   # line 7
+    c = c + Cost(s=lg(p), w=n * k * lg(p) / p)                    # line 8
+    return c
+
+
+def mm_cost(n: float, k: float, p: float, p1: float, p2: float,
+            m: float | None = None) -> Cost:
+    """Cost of OUR MM schedule (repro.core.mm3d): the mesh-native cyclic
+    layout removes the paper's lines 3/8 transposes; the x<->y exchange
+    is a single permute (line 4).  Leading order matches the paper:
+    W = m*n/p1^2 * 1_{p2} + 2nk/(p1 p2),  F = m*n*k/p,  S = O(log p).
+    ``m`` is the row count of the left operand (defaults to n: square).
+    """
+    m = n if m is None else m
+    c = Cost()
+    c = c + Cost(s=lg(p2), w=(m * n / (p1 * p1)) * ind(p2))       # gather L
+    c = c + Cost(s=ind(p1), w=n * k / p * ind(p1))                # permute
+    c = c + Cost(s=lg(p1), w=n * k / (p1 * p2) * ind(p1))        # gather X
+    c = c + Cost(f=m * n * k / p)                                 # GEMM
+    c = c + Cost(s=lg(p1), w=m * k / (p1 * p2) * ind(p1),
+                 f=m * k / (p1 * p2) * ind(p1))                   # red-scat
+    return c
+
+
+def w_mm_optimal(n: float, k: float, p: float) -> float:
+    """Asymptotically optimal MM bandwidth (Demmel et al.), Sec. II-C2."""
+    if n > k * math.sqrt(p):
+        return n * k / math.sqrt(p)
+    if n >= k / p:
+        return (n * n * k / p) ** (2.0 / 3.0)
+    return n * n
+
+
+# --------------------- Recursive TRSM (Sec. IV) ---------------------
+
+def rec_trsm_cost(n: float, k: float, p: float) -> Cost:
+    """Closed-form leading-order cost of Rec-TRSM with the paper's
+    parameter choices, by regime."""
+    if n < 4 * k / p:      # one large dimension
+        return Cost(s=lg(p), w=n * n, f=n * n * k / p)
+    if n > 4 * k * math.sqrt(p):   # two large dimensions
+        return Cost(s=math.sqrt(p),
+                    w=n * k * lg(p) / math.sqrt(p),
+                    f=n * n * k / p)
+    # three large dimensions
+    return Cost(s=(n * p / k) ** (2.0 / 3.0) * lg(p),
+                w=(n * n * k / p) ** (2.0 / 3.0),
+                f=n * n * k / p)
+
+
+# --------------------- Triangular inversion (Sec. V) ---------------------
+
+NU = 2.0 ** (1.0 / 3.0) / (2.0 ** (1.0 / 3.0) - 1.0)   # 2^{1/3}/(2^{1/3}-1)
+
+
+def tri_inv_cost(n: float, p1: float, p2: float) -> Cost:
+    """RecTriInv total cost (Sec. V-B)."""
+    p = p1 * p1 * p2
+    return Cost(
+        s=lg(p) ** 2,
+        w=NU * (n * n / (8 * p1 * p1) + n * n / (2 * p1 * p2)),
+        f=NU * n ** 3 / (8 * p),
+    )
+
+
+# --------------------- It-Inv-TRSM (Secs. VI-VII) ---------------------
+
+def inv_phase_cost(n: float, n0: float, r1: float, r2: float,
+                   p: float) -> Cost:
+    """Diagonal-Inverter: n/n0 blocks inverted on r1 x r1 x r2 subgrids,
+    plus the redistribution lines 6/9/16/17 (never leading order)."""
+    per_block = tri_inv_cost(n0, r1, r2)
+    # All n/n0 inversions run concurrently on disjoint subgrids: the
+    # critical path is ONE block inversion; W/F below are per-processor.
+    redist = Cost(s=4 * lg(p), w=2 * n * n0 / p * lg(p) + n * n0 / p)
+    return Cost(s=per_block.s, w=per_block.w, f=per_block.f) + redist
+
+
+def solve_phase_cost(n: float, k: float, n0: float,
+                     p1: float, p2: float) -> Cost:
+    """n/n0 block solves:  X_i = L~_ii B_i  + allreduce over x (Sec. VII-B)."""
+    m = n / n0
+    p = p1 * p1 * p2
+    w = m * ((n0 * n0 / (p1 * p1)) * ind(p2)
+             + 4 * (n0 * k / (p1 * p2)) * ind(p1))
+    return Cost(s=m * lg(p), w=w, f=m * n0 * n0 * k / (p1 * p1 * p2))
+
+
+def update_phase_cost(n: float, k: float, n0: float,
+                      p1: float, p2: float) -> Cost:
+    """Trailing updates: bcast of the L~ panel + GEMM + allreduce (VII-C)."""
+    m = n / n0
+    p = p1 * p1 * p2
+    w = (m - 1) * (4 * (n * n0 - n) / (p1 * p1) * ind(p2)
+                   + 4 * n0 * k / (p1 * p2) * ind(p1))
+    return Cost(s=(m - 1) * lg(p), w=w,
+                f=(m - 1) * k * n * n0 / (p1 * p1 * p2))
+
+
+def it_inv_trsm_cost(n: float, k: float, n0: float, p1: float, p2: float,
+                     r1: float, r2: float) -> Cost:
+    p = p1 * p1 * p2
+    return (inv_phase_cost(n, n0, r1, r2, p)
+            + solve_phase_cost(n, k, n0, p1, p2)
+            + update_phase_cost(n, k, n0, p1, p2))
+
+
+# --------------------- Sec. IX comparison table ---------------------
+
+def paper_table_row(n: float, k: float, p: float) -> dict:
+    """The conclusion table: S/W/F for 'standard' (Rec-TRSM) vs
+    'new method' (It-Inv-TRSM) in the applicable regime."""
+    if n < 4 * k / p:
+        regime = "1D"
+        std = dict(S=lg(p), W=n * n, F=n * n * k / p)
+        new = dict(S=lg(p) ** 2, W=n * n, F=n * n * k / p)
+    elif n > 4 * k * math.sqrt(p):
+        regime = "2D"
+        std = dict(S=math.sqrt(p), W=lg(p) * n * k / math.sqrt(p),
+                   F=n * n * k / p)
+        new = dict(S=lg(p) ** 2 + (n / k) ** 0.75 * p ** (-1 / 8) * lg(p),
+                   W=n * k / math.sqrt(p), F=n * n * k / p)
+    else:
+        regime = "3D"
+        std = dict(S=(n * p / k) ** (2 / 3) * lg(p),
+                   W=(n * n * k / p) ** (2 / 3), F=n * n * k / p)
+        new = dict(S=lg(p) ** 2 + max(math.sqrt(n / k), 1.0) * lg(p),
+                   W=(n * n * k / p) ** (2 / 3), F=2 * n * n * k / p)
+    return dict(regime=regime, standard=std, new=new)

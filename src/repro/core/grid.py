@@ -1,0 +1,112 @@
+"""Processor grids and cyclic layouts for the TRSM algorithms.
+
+The paper runs on a p1 x p1 x p2 grid with *cyclic* data layouts (the
+triangular structure makes blocked layouts load-imbalanced and, more
+importantly, the iterative sweep requires every rank to own a piece of
+every diagonal block).  XLA shards arrays in contiguous blocks, so the
+cyclic layout is realized as *permuted storage* (exactly ScaLAPACK-style
+block-cyclic storage): the global array is stored row/column-permuted so
+that a contiguous block shard corresponds to a stride-p cyclic index set.
+
+Conventions used by all distributed algorithms in repro.core:
+
+* mesh axes ("x", "y", "z") with sizes (p1, p1, p2)
+* L: rows cyclic over x (global row g = l*p1 + x), columns cyclic over
+  the pair rank t = z*p1 + y with stride p1*p2 (global col c_g =
+  c*p1*p2 + z*p1 + y)  ->  storage sharded P("x", ("z", "y"))
+* B: rows cyclic over x, columns blocked over z -> P("x", "z"), and
+  replicated over y
+* X (output): rows cyclic over *y* (a property of the paper's solve
+  step: the allreduce over x leaves X on the transposed face),
+  columns blocked over z -> P("y", "z")
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class TrsmGrid:
+    mesh: Mesh
+    p1: int
+    p2: int
+
+    @property
+    def p(self) -> int:
+        return self.p1 * self.p1 * self.p2
+
+    def spec_L(self):
+        return P("x", ("z", "y"))
+
+    def spec_B(self):
+        return P("x", "z")
+
+    def spec_X(self):
+        return P("y", "z")
+
+
+def make_trsm_mesh(p1: int, p2: int, devices=None) -> TrsmGrid:
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    p = p1 * p1 * p2
+    assert devices.size >= p, (devices.size, p)
+    mesh = Mesh(devices.reshape(-1)[:p].reshape(p1, p1, p2),
+                axis_names=("x", "y", "z"))
+    return TrsmGrid(mesh, p1, p2)
+
+
+# ------------------------- cyclic storage helpers -------------------------
+
+def cyclic_perm(n: int, p: int) -> np.ndarray:
+    """Permutation mapping storage order -> global index for a stride-p
+    cyclic layout: storage position (chunk r, slot l) holds global r + l*p."""
+    return np.concatenate([np.arange(r, n, p) for r in range(p)])
+
+
+def inv_perm(perm: np.ndarray) -> np.ndarray:
+    out = np.empty_like(perm)
+    out[perm] = np.arange(perm.size)
+    return out
+
+
+def to_cyclic_rows(a, p: int):
+    """Natural -> cyclic storage along axis 0."""
+    return a[cyclic_perm(a.shape[0], p)]
+
+
+def from_cyclic_rows(a, p: int):
+    return a[inv_perm(cyclic_perm(a.shape[0], p))]
+
+
+def to_cyclic_matrix(L, p_row: int, p_col: int):
+    """Natural -> cyclic storage for a matrix (rows stride p_row, cols
+    stride p_col).  NOTE: this changes storage, not the operator: the
+    algorithms index shards with the cyclic map, so correctness is
+    preserved without the matrix being triangular in storage."""
+    pr = cyclic_perm(L.shape[0], p_row)
+    pc = cyclic_perm(L.shape[1], p_col)
+    return L[pr][:, pc]
+
+
+def from_cyclic_matrix(L, p_row: int, p_col: int):
+    pr = inv_perm(cyclic_perm(L.shape[0], p_row))
+    pc = inv_perm(cyclic_perm(L.shape[1], p_col))
+    return L[pr][:, pc]
+
+
+def shard(grid: TrsmGrid, arr, spec):
+    return jax.device_put(arr, NamedSharding(grid.mesh, spec))
+
+
+def check_divisibility(n: int, k: int, n0: int, grid: TrsmGrid) -> None:
+    p1, p2 = grid.p1, grid.p2
+    assert n % n0 == 0, (n, n0)
+    assert n0 % (p1 * p2) == 0, ("need p1*p2 | n0 for contiguous local "
+                                 "diagonal blocks", n0, p1, p2)
+    assert k % p2 == 0, (k, p2)
+    # any block count m = n/n0 is supported: phase 1 picks alltoall
+    # (p | m), cooperative doubling (m < p), or the allgather fallback.

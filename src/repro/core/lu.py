@@ -1,0 +1,110 @@
+"""Distributed LU factorization (no pivoting) on the paper's primitives.
+
+Completes the paper's Sec. I list — "TRSM is used ... to compute
+factorizations with triangular matrices, such as Cholesky, LU, and QR":
+
+    A = [[A11, A12], [A21, A22]]
+    L11, U11 = LU(A11)                      (recursive)
+    U12 = L11^{-1} A12                      (lower solve via inversion)
+    L21 = A21 U11^{-1}                      (upper solve via inversion)
+    A22' = A22 - L21 U12                    (Sec. III MM)
+    L22, U22 = LU(A22')
+
+Both triangular solves use *selective inversion* (invert + MM — the
+paper's technique), with upper solves reduced to the lower case through
+the distributed cyclic-storage transpose (repro.core.cholesky).
+No pivoting: intended for diagonally-dominant / preconditioner-style
+matrices (same contract as the paper's TRSM stability argument).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import comm
+from repro.core import tri_inv as ti
+from repro.core.cholesky import transpose_shard
+from repro.core.grid import TrsmGrid, to_cyclic_matrix, from_cyclic_matrix
+from repro.core.mm3d import mm3d_shard
+
+MESH_AXES = ("x", "y", "z")
+
+
+def _lu_base(Aloc, *, n, p1, p2):
+    """Base case: allgather, factor locally, keep cyclic pieces."""
+    from repro.core.tri_inv import _assemble_blocks, _cyclic_piece
+    xi = comm.axis_index("x")
+    yi = comm.axis_index("y")
+    zi = comm.axis_index("z")
+    Ag = comm.all_gather(Aloc[None], MESH_AXES, axis=0, tiled=False)
+    A = _assemble_blocks(Ag, p1, p2)[0]
+
+    def body(i, LU):
+        L, U = LU
+        piv = U[i, i]
+        col = U[:, i] / piv
+        mask = (jnp.arange(n) > i).astype(A.dtype)
+        L = L.at[:, i].set(jnp.where(jnp.arange(n) == i, 1.0, col * mask))
+        U = U - jnp.outer(col * mask, U[i])
+        return L, U
+
+    L0 = jnp.zeros_like(A)
+    L, U = jax.lax.fori_loop(0, n, body, (L0, A))
+    U = jnp.triu(U)
+    return (_cyclic_piece(L[None], xi, yi, zi, p1, p2)[0],
+            _cyclic_piece(U[None], xi, yi, zi, p1, p2)[0])
+
+
+def _lu_rec(Aloc, *, n, n0, p1, p2):
+    if n <= n0:
+        return _lu_base(Aloc, n=n, p1=p1, p2=p2)
+    h = n // 2
+    hl, hc = h // p1, h // (p1 * p2)
+    A11, A12 = Aloc[:hl, :hc], Aloc[:hl, hc:]
+    A21, A22 = Aloc[hl:, :hc], Aloc[hl:, hc:]
+    L11, U11 = _lu_rec(A11, n=h, n0=n0, p1=p1, p2=p2)
+    # U12 = L11^{-1} A12 (lower-solve via inversion, Sec. V + III)
+    L11i = ti.tri_inv_shard(L11, n=h, p1=p1, p2=p2)
+    U12 = mm3d_shard(L11i, A12, m=h, n=h, k=h, p1=p1, p2=p2)
+    # L21 = A21 U11^{-1}: transpose-reduce the upper solve
+    # (A21 U11^{-1})^T = U11^{-T} A21^T ; U11^T is lower-triangular.
+    U11T = transpose_shard(U11, mr=h, nc=h, p1=p1, p2=p2)
+    U11Ti = ti.tri_inv_shard(U11T, n=h, p1=p1, p2=p2)
+    A21T = transpose_shard(A21, mr=h, nc=h, p1=p1, p2=p2)
+    L21T = mm3d_shard(U11Ti, A21T, m=h, n=h, k=h, p1=p1, p2=p2)
+    L21 = transpose_shard(L21T, mr=h, nc=h, p1=p1, p2=p2)
+    # trailing update + recurse
+    A22u = A22 - mm3d_shard(L21, U12, m=h, n=h, k=h, p1=p1, p2=p2)
+    L22, U22 = _lu_rec(A22u, n=h, n0=n0, p1=p1, p2=p2)
+    zero = jnp.zeros((hl, hc), Aloc.dtype)
+    L = jnp.concatenate([jnp.concatenate([L11, zero], axis=1),
+                         jnp.concatenate([L21, L22], axis=1)], axis=0)
+    U = jnp.concatenate([jnp.concatenate([U11, U12], axis=1),
+                         jnp.concatenate([zero, U22], axis=1)], axis=0)
+    return L, U
+
+
+def lu_fn(grid: TrsmGrid, n: int, n0: int | None = None):
+    n0 = n0 or max(grid.p1 * grid.p1 * grid.p2, n // 8)
+    while n % n0 != 0:
+        n0 *= 2
+    body = functools.partial(_lu_rec, n=n, n0=min(n0, n),
+                             p1=grid.p1, p2=grid.p2)
+    spec = P("x", ("z", "y"))
+    return jax.jit(jax.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
+                                 out_specs=(spec, spec)))
+
+
+def lu(A, grid: TrsmGrid, n0: int | None = None):
+    """Natural-layout LU (no pivoting): returns (L, U), A = L @ U."""
+    import numpy as np
+    n = A.shape[0]
+    p1, p2 = grid.p1, grid.p2
+    Ac = to_cyclic_matrix(np.asarray(A), p1, p1 * p2)
+    Lc, Uc = lu_fn(grid, n, n0)(Ac)
+    return (from_cyclic_matrix(np.asarray(Lc), p1, p1 * p2),
+            from_cyclic_matrix(np.asarray(Uc), p1, p1 * p2))

@@ -1,0 +1,287 @@
+"""Multi-device self-checks for the distributed core algorithms.
+
+Run as a subprocess with forced host devices (tests do this):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.core.selfcheck [what]
+
+Exits nonzero on the first failure.  Kept as a module (not a test) so it
+can run under a different jax device configuration than the main pytest
+process (which must see exactly 1 device).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _random_tril(seed, n, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    L = np.tril(rng.standard_normal((n, n)))
+    return (L + n * np.eye(n)).astype(dtype)
+
+
+def check_it_inv_trsm() -> int:
+    from repro.core import grid as gridlib
+    from repro.core import inv_trsm
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    cases = [
+        # (p1, p2, n, k, n0, mode)
+        (2, 2, 32, 8, 4, None),       # m=8 == p -> alltoall
+        (2, 2, 32, 8, 8, None),       # m=4 < p -> allgather fallback
+        (2, 2, 64, 16, 8, "alltoall"),
+        (2, 2, 64, 16, 8, "allgather"),
+        (2, 1, 32, 6, 8, None),
+        (1, 2, 32, 8, 16, None),
+        (1, 8, 64, 8, 8, None),
+        (2, 2, 64, 64, 16, None),
+        (1, 1, 16, 4, 4, None),
+    ]
+    for (p1, p2, n, k, n0, mode) in cases:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        L = _random_tril(n, n)
+        B = np.random.default_rng(k).standard_normal((n, k))
+        X = inv_trsm.solve(jnp.asarray(L), jnp.asarray(B), grid, n0,
+                           mode=mode)
+        ref = np.asarray(
+            jax.scipy.linalg.solve_triangular(jnp.asarray(L),
+                                              jnp.asarray(B), lower=True))
+        err = np.abs(X - ref).max()
+        ok = err < 1e-8
+        print(f"it_inv_trsm p1={p1} p2={p2} n={n} k={k} n0={n0} "
+              f"mode={mode}: err={err:.2e} {'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails += 1
+    return fails
+
+
+def check_collective_order() -> int:
+    """Verify the flattening order assumptions for tuple-axis collectives."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    devs = np.asarray(jax.devices())[:8].reshape(2, 2, 2)
+    mesh = Mesh(devs, ("x", "y", "z"))
+    fails = 0
+
+    def body(a):
+        xi = jax.lax.axis_index("x")
+        yi = jax.lax.axis_index("y")
+        zi = jax.lax.axis_index("z")
+        fid = (xi * 2 + yi) * 2 + zi
+        g = jax.lax.all_gather(jnp.array([fid]), ("x", "y", "z"),
+                               axis=0, tiled=True)
+        return g[None]
+
+    f = jax.shard_map(body, mesh=mesh, in_specs=P("x", ("z", "y")),
+                      out_specs=P(("x", "y", "z")))
+    out = np.asarray(jax.jit(f)(jnp.zeros((2, 4))))
+    expect = np.arange(8)
+    if not np.array_equal(out[0], expect):
+        print("all_gather tuple-axis order MISMATCH:", out[0])
+        fails += 1
+    else:
+        print("all_gather tuple-axis order OK (x-major row-major)")
+
+    def body2(a):
+        xi = jax.lax.axis_index("x")
+        yi = jax.lax.axis_index("y")
+        zi = jax.lax.axis_index("z")
+        fid = (xi * 2 + yi) * 2 + zi
+        # each device holds 8 items tagged (src, slot); after a tiled
+        # all_to_all device d should hold items (src=0..7, slot=d)
+        items = fid * 8 + jnp.arange(8)
+        r = jax.lax.all_to_all(items, ("x", "y", "z"), split_axis=0,
+                               concat_axis=0, tiled=True)
+        return r[None]
+
+    f2 = jax.shard_map(body2, mesh=mesh, in_specs=P("x", ("z", "y")),
+                       out_specs=P(("x", "y", "z")))
+    out2 = np.asarray(jax.jit(f2)(jnp.zeros((2, 4))))
+    # device d (flattened x-major) holds rows d of the output spec
+    for d in range(8):
+        expect = np.arange(8) * 8 + d
+        if not np.array_equal(out2[d], expect):
+            print(f"all_to_all order MISMATCH on dev {d}:", out2[d])
+            fails += 1
+            break
+    else:
+        print("all_to_all tuple-axis order OK")
+    return fails
+
+
+def check_mm3d() -> int:
+    from repro.core import grid as gridlib
+    from repro.core import mm3d
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    for (p1, p2, m, n, k) in [(2, 2, 16, 16, 8), (2, 1, 8, 8, 4),
+                              (1, 2, 8, 8, 8), (1, 8, 16, 16, 16),
+                              (2, 2, 32, 16, 8), (1, 1, 8, 8, 4),
+                              (2, 2, 16, 16, 64)]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        rng = np.random.default_rng(m * n)
+        L = rng.standard_normal((m, n))
+        X = rng.standard_normal((n, k))
+        B = mm3d.matmul(L, X, grid)
+        err = np.abs(B - L @ X).max()
+        ok = err < 1e-10
+        print(f"mm3d p1={p1} p2={p2} m={m} n={n} k={k}: err={err:.2e} "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def check_tri_inv() -> int:
+    from repro.core import grid as gridlib
+    from repro.core import tri_inv
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    for (p1, p2, n, s0, mode) in [(2, 2, 64, None, None),
+                                  (2, 2, 64, 8, "alltoall"),
+                                  (2, 2, 32, 8, "allgather"),
+                                  (1, 2, 32, None, None),
+                                  (2, 1, 32, None, None),
+                                  (1, 8, 64, None, None),
+                                  (1, 1, 16, None, None)]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        L = _random_tril(n, n)
+        Li = tri_inv.invert(L, grid, s0=s0, mode=mode)
+        err = np.abs(Li @ L - np.eye(n)).max()
+        ok = err < 1e-9 and np.allclose(np.triu(Li, 1), 0)
+        print(f"tri_inv p1={p1} p2={p2} n={n} s0={s0} mode={mode}: "
+              f"err={err:.2e} {'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def check_rec_trsm() -> int:
+    from repro.core import grid as gridlib
+    from repro.core import rec_trsm
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    for (p1, p2, n, k, n0) in [(2, 2, 64, 16, 16), (2, 2, 64, 16, None),
+                               (2, 1, 32, 8, 8), (1, 2, 32, 4, None),
+                               (1, 8, 64, 16, None), (1, 1, 16, 4, 4),
+                               (2, 2, 32, 32, 8)]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        L = _random_tril(n, n)
+        B = np.random.default_rng(1).standard_normal((n, k))
+        X = rec_trsm.solve(L, B, grid, n0)
+        err = np.abs(X - np.linalg.solve(L, B)).max()
+        ok = err < 1e-9
+        print(f"rec_trsm p1={p1} p2={p2} n={n} k={k} n0={n0}: "
+              f"err={err:.2e} {'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def check_cholesky() -> int:
+    from repro.core import grid as gridlib
+    from repro.core import cholesky
+
+    jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    fails = 0
+    for (p1, p2, n, n0) in [(2, 2, 32, 8), (2, 1, 32, 16), (1, 2, 16, 8),
+                            (2, 2, 64, 16)]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        M = rng.standard_normal((n, n))
+        A = M @ M.T + n * np.eye(n)
+        L = cholesky.cholesky(A, grid, n0)
+        err = np.abs(L @ L.T - A).max()
+        ok = err < 1e-8 and np.allclose(np.triu(L, 1), 0)
+        print(f"cholesky p1={p1} p2={p2} n={n} n0={n0}: err={err:.2e} "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    # transpose helper
+    for (p1, p2, mr, nc) in [(2, 2, 16, 32), (2, 1, 16, 8), (1, 2, 8, 16)]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        A = rng.standard_normal((mr, nc))
+        Ac = gridlib.to_cyclic_matrix(A, p1, p1 * p2)
+        T = gridlib.from_cyclic_matrix(
+            np.asarray(cholesky.transpose_fn(grid, mr, nc)(Ac)), p1, p1 * p2)
+        ok = np.array_equal(T, A.T)
+        print(f"transpose p1={p1} p2={p2} {mr}x{nc}: "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def check_doubling_mode() -> int:
+    from repro.core import grid as gridlib
+    from repro.core import inv_trsm
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    for (p1, p2, n, k, n0) in [(2, 2, 64, 16, 32), (2, 2, 64, 16, 16),
+                               (1, 8, 64, 8, 32)]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        L = _random_tril(n, n)
+        B = np.random.default_rng(2).standard_normal((n, k))
+        X = inv_trsm.solve(L, B, grid, n0, mode="doubling")
+        err = np.abs(X - np.linalg.solve(L, B)).max()
+        ok = err < 1e-9
+        print(f"doubling p1={p1} p2={p2} n={n} n0={n0}: err={err:.2e} "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def check_lu() -> int:
+    from repro.core import grid as gridlib
+    from repro.core import lu
+
+    jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    fails = 0
+    for (p1, p2, n, n0) in [(2, 2, 32, 8), (2, 1, 32, 16), (1, 2, 16, 8),
+                            (2, 2, 64, 16)]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        A = rng.standard_normal((n, n)) + n * np.eye(n)
+        L, U = lu.lu(A, grid, n0)
+        err = np.abs(L @ U - A).max()
+        ok = (err < 1e-8 and np.allclose(np.triu(L, 1), 0)
+              and np.allclose(np.tril(U, -1), 0)
+              and np.allclose(np.diag(L), 1))
+        print(f"lu p1={p1} p2={p2} n={n} n0={n0}: err={err:.2e} "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+CHECKS = {
+    "order": check_collective_order,
+    "it_inv_trsm": check_it_inv_trsm,
+    "mm3d": check_mm3d,
+    "tri_inv": check_tri_inv,
+    "rec_trsm": check_rec_trsm,
+    "cholesky": check_cholesky,
+    "doubling": check_doubling_mode,
+    "lu": check_lu,
+}
+
+
+def main(argv):
+    what = argv[1] if len(argv) > 1 else None
+    names = [what] if what else list(CHECKS)
+    fails = 0
+    for name in names:
+        fails += CHECKS[name]()
+    print(f"selfcheck: {fails} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,178 @@
+"""Parameter tuning (paper Sec. VIII).
+
+Given (n, k, p) this module decides the processor-grid layout
+(p1 x p1 x p2), the diagonal-block size n0, and the inversion subgrid
+(r1, r2) — first from the paper's closed forms, then *snapped* to
+feasible integers (powers of two, divisibility with the mesh and the
+matrix), and finally refined by an argmin over the alpha-beta-gamma
+model ("This cost analysis makes it possible to determine optimal block
+sizes and processor grids a priori", Sec. I).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import cost_model as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrsmPlan:
+    regime: str          # "1d" | "2d" | "3d"
+    p1: int
+    p2: int
+    n0: int
+    r1: int
+    r2: int
+    cost: cm.Cost
+    n: int
+    k: int
+    p: int
+
+    @property
+    def grid(self):
+        return (self.p1, self.p1, self.p2)
+
+
+def regime(n: int, k: int, p: int) -> str:
+    if n < 4 * k / p:
+        return "1d"
+    if n > 4 * k * math.sqrt(p):
+        return "2d"
+    return "3d"
+
+
+def ideal_params(n: int, k: int, p: int) -> dict:
+    """The paper's closed-form optima (Sec. VIII tables), un-snapped."""
+    r = regime(n, k, p)
+    if r == "1d":
+        return dict(regime=r, p1=1.0, p2=float(p), n0=float(n),
+                    r1=p ** (1 / 3), r2=p ** (1 / 3))
+    if r == "2d":
+        n0 = (n * k ** 3 * math.sqrt(p)) ** 0.25
+        rr = (k / n) ** 0.25 * p ** (3 / 8)
+        return dict(regime=r, p1=math.sqrt(p), p2=1.0, n0=n0, r1=rr, r2=rr)
+    p1 = (p * n / (4 * k)) ** (1 / 3)
+    p2 = (math.sqrt(p) * 4 * k / n) ** (2 / 3)
+    n0 = min(math.sqrt(n * k), float(n))
+    rr = min(p * math.sqrt(n * k) / n, float(p)) ** (1 / 3)
+    return dict(regime=r, p1=p1, p2=p2, n0=n0, r1=rr, r2=rr)
+
+
+def _pow2_divisors(x: int) -> list[int]:
+    out = [1]
+    d = 2
+    while x % d == 0:
+        out.append(d)
+        d *= 2
+    return out
+
+
+def _snap_pow2(x: float, lo: int = 1, hi: int | None = None) -> int:
+    """Nearest power of two to x within [lo, hi]."""
+    x = max(x, 1.0)
+    c = 2 ** round(math.log2(x))
+    c = max(c, lo)
+    if hi is not None:
+        c = min(c, hi)
+    return int(c)
+
+
+def feasible_grids(p: int) -> list[tuple[int, int]]:
+    """All (p1, p2) with p1^2 * p2 == p, p1 and p2 powers of two."""
+    out = []
+    p1 = 1
+    while p1 * p1 <= p:
+        if p % (p1 * p1) == 0:
+            p2 = p // (p1 * p1)
+            # only power-of-two axes are mappable onto TPU mesh factors
+            if (p1 & (p1 - 1)) == 0 and (p2 & (p2 - 1)) == 0:
+                out.append((p1, p2))
+        p1 *= 2
+    return out
+
+
+def _feasible_n0(n: int, p1: int, p2: int) -> list[int]:
+    """n0 must divide n and be a multiple of p1*p2 (cyclic layout needs
+    p1 | n0 rows and p1*p2 | n0 cols for contiguous local blocks)."""
+    base = max(p1 * p2, 1)
+    out = []
+    n0 = base
+    while n0 <= n:
+        if n % n0 == 0 and n0 % base == 0:
+            out.append(n0)
+        n0 *= 2
+    if not out:
+        out = [n]
+    return out
+
+
+def _inv_subgrid(n: int, n0: int, p: int) -> tuple[int, int]:
+    """r1, r2 per Sec. VI-A: r1^2 r2 = p n0 / n, ideal ratio r2 = 4 r1."""
+    q = max(1.0, p * n0 / n)
+    r1 = _snap_pow2((q / 4.0) ** (1 / 3))
+    r2 = max(1, int(q) // (r1 * r1))
+    r2 = _snap_pow2(r2)
+    return r1, r2
+
+
+def tune(n: int, k: int, p: int,
+         machine: cm.Machine | None = None) -> TrsmPlan:
+    """Model-driven a-priori choice of (p1, p2, n0, r1, r2).
+
+    Starts from the Sec. VIII closed forms, then argmins the full
+    alpha-beta-gamma model over the feasible (power-of-two) neighborhood.
+    """
+    machine = machine or cm.tpu_v5e()
+    best = None
+    for p1, p2 in feasible_grids(p):
+        for n0 in _feasible_n0(n, p1, p2):
+            r1, r2 = _inv_subgrid(n, n0, p)
+            c = cm.it_inv_trsm_cost(n, k, n0, p1, p2, r1, r2)
+            t = c.time(machine)
+            if best is None or t < best[0]:
+                best = (t, TrsmPlan(regime(n, k, p), p1, p2, n0, r1, r2,
+                                    c, n, k, p))
+    return best[1]
+
+
+def tune_for_grid(n: int, k: int, grid,
+                  machine: cm.Machine | None = None) -> TrsmPlan:
+    """Tune n0 (and the inversion subgrid) for an already-built mesh."""
+    machine = machine or cm.tpu_v5e()
+    p1, p2 = grid.p1, grid.p2
+    p = grid.p
+    best = None
+    for n0 in _feasible_n0(n, p1, p2):
+        r1, r2 = _inv_subgrid(n, n0, p)
+        c = cm.it_inv_trsm_cost(n, k, n0, p1, p2, r1, r2)
+        t = c.time(machine)
+        if best is None or t < best[0]:
+            best = (t, TrsmPlan(regime(n, k, p), p1, p2, n0, r1, r2,
+                                c, n, k, p))
+    return best[1]
+
+
+def tuning_table(n: int, k: int, p: int) -> dict:
+    """Sec. VIII report: ideal closed forms vs snapped/argmin'd plan."""
+    plan = tune(n, k, p)
+    return dict(ideal=ideal_params(n, k, p),
+                plan=dataclasses.asdict(plan))
+
+
+def choose_method(n: int, k: int, p: int,
+                  machine: cm.Machine | None = None):
+    """Beyond-paper auto-dispatch: pick Rec-TRSM or It-Inv-TRSM from
+    the alpha-beta-gamma model instantiated with the MACHINE constants.
+
+    The paper's latency-for-bandwidth trade wins on high-alpha networks
+    (MPI clusters, cross-pod DCN) and for latency-dominated shapes
+    (k << n); on low-alpha ICI with n ~ k the recursive algorithm's
+    lower bandwidth wins.  Returns (method, plan, modeled_times)."""
+    machine = machine or cm.tpu_v5e()
+    plan = tune(n, k, p, machine)
+    t_inv = plan.cost.time(machine)
+    t_rec = cm.rec_trsm_cost(n, k, p).time(machine)
+    method = "inv" if t_inv <= t_rec else "rec"
+    return method, plan, {"inv": t_inv, "rec": t_rec}

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute under interpret=True —
+the kernel body runs in Python per grid step, validating the exact TPU
+program.  On TPU the same calls compile to Mosaic.  ``block_inv_kernel``
+is the drop-in hook for the distributed solvers' ``block_inv=``
+parameter (repro.core.inv_trsm / tri_inv).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import trmm as _trmm
+from repro.kernels import tri_inv_block as _tib
+from repro.kernels import trsm_block as _tsb
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bn"))
+def trmm(L, X, bt: int = 128, bn: int = 128):
+    """C = tril(L) @ X (structure-skipping tiled MXU kernel)."""
+    return _trmm.trmm(L, X, bt=bt, bn=bn, interpret=_interpret())
+
+
+@jax.jit
+def tri_inv_blocks(Ls):
+    """Batched lower-triangular inversion (doubling, in-VMEM)."""
+    return _tib.tri_inv_blocks(Ls, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def trsm_substitution(L, B, bn: int = 128):
+    """Baseline substitution TRSM (VPU-serial; what the paper replaces)."""
+    return _tsb.trsm_substitution(L, B, bn=bn, interpret=_interpret())
+
+
+def block_inv_kernel(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Hook matching the ``block_inv`` signature of the distributed
+    solvers: (m, n0, n0) -> batched inverses, Pallas-backed when the
+    block size is a power of two, pure-jnp doubling otherwise."""
+    n0 = blocks.shape[-1]
+    if n0 & (n0 - 1) == 0 and n0 >= 2:
+        return _tib.tri_inv_blocks(blocks, interpret=_interpret())
+    from repro.core import blocked
+    return blocked.tri_inv_batched(blocks)

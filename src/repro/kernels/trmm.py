@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: triangular matrix-matrix multiply  C = tril(L) @ X.
+
+This is the MXU workhorse of It-Inv-TRSM: both the solve step (multiply
+by the inverted diagonal block) and the trailing update (off-diagonal
+panel times X_i) are triangular-structured GEMMs.  The kernel exploits
+the structure by *skipping* every (row-tile, k-tile) pair above the
+diagonal — for an n x n triangular operand that halves the compute and
+the HBM->VMEM traffic relative to a dense GEMM.
+
+Tiling: square (bt x bt) L tiles so the zero/nonzero tile test is exact
+(tile (i, kk) is identically zero iff kk > i); X and C tiles are
+(bt x bn).  The k-loop is the innermost grid dimension; a VMEM scratch
+accumulator carries partial sums in f32 regardless of operand dtype
+(MXU-native mixed precision), and tiles with kk > i are skipped with
+pl.when, so the dominant loop issues one MXU matmul per visited tile.
+
+Block shapes default to (128, 128): MXU-aligned (the systolic array is
+128x128 after dtype packing) and three live tiles fit comfortably in
+the ~16 MiB of VMEM up to bt = bn = 512.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _trmm_kernel(l_ref, x_ref, o_ref, acc_ref, *, nk: int):
+    i = pl.program_id(0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kk <= i)          # tiles strictly above the diagonal are 0
+    def _mac():
+        acc_ref[...] += jnp.dot(l_ref[...], x_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _out_sds(shape, dtype, like):
+    vma = getattr(jax.core.get_aval(like), "vma", None)
+    if vma:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def trmm(L: jnp.ndarray, X: jnp.ndarray, *, bt: int = 128, bn: int = 128,
+         interpret: bool = False) -> jnp.ndarray:
+    """C = tril(L) @ X with L: (n, n), X: (n, k)."""
+    n, n2 = L.shape
+    _, k = X.shape
+    assert n == n2 and X.shape[0] == n, (L.shape, X.shape)
+    bt = min(bt, n)
+    bn = min(bn, k)
+    assert n % bt == 0 and k % bn == 0, (n, k, bt, bn)
+    ni, nj, nk = n // bt, k // bn, n // bt
+
+    grid = (ni, nj, nk)
+    return pl.pallas_call(
+        functools.partial(_trmm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            # clamp the k-index for skipped tiles so we never prefetch
+            # out of the triangle (the compute is pl.when-guarded).
+            pl.BlockSpec((bt, bt), lambda i, j, kk: (i, jnp.minimum(kk, i))),
+            pl.BlockSpec((bt, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        out_shape=_out_sds((n, k), X.dtype, X),
+        scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
+        interpret=interpret,
+    )(L, X)

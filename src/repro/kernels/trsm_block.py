@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: base-case TRSM by forward substitution.
+
+This kernel is deliberately the thing the paper REPLACES: a
+row-sequential triangular solve.  On TPU the substitution recurrence
+x_r = (b_r - L[r,:] X) / L[r,r] serializes on the VPU (no MXU work at
+all) — which is exactly why It-Inv-TRSM's swap of base-case solves for
+multiplications by pre-inverted blocks is a bigger win on TPU than on
+the paper's MPI machine (DESIGN.md Sec. 2).  We keep it as (a) the
+baseline for benchmarks/bench_gemm_fraction.py, which quantifies the
+MXU-eligible flop share with and without inversion, and (b) a fallback
+for non-power-of-two blocks.
+
+Grid: (batch, column tiles).  The (n0, n0) L tile and an (n0, bn) X
+tile live in VMEM; the row loop is a lax.fori_loop over VMEM values.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trsm_kernel(l_ref, b_ref, x_ref):
+    L = l_ref[0]
+    B = b_ref[0]
+    n0 = L.shape[0]
+
+    def body(r, X):
+        # full-length dot; X rows >= r are still zero so they don't
+        # contribute.  One VPU row op per r — the serial baseline.
+        xr = (B[r] - L[r] @ X) / L[r, r]
+        return X.at[r].set(xr)
+
+    x_ref[0] = jax.lax.fori_loop(0, n0, body, jnp.zeros_like(B))
+
+
+def _out_sds(shape, dtype, like):
+    vma = getattr(jax.core.get_aval(like), "vma", None)
+    if vma:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def trsm_substitution(L: jnp.ndarray, B: jnp.ndarray, *, bn: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Solve tril(L) X = B by in-kernel forward substitution.
+
+    L: (m, n0, n0) batched or (n0, n0); B matching (m, n0, k)/(n0, k)."""
+    squeeze = L.ndim == 2
+    if squeeze:
+        L, B = L[None], B[None]
+    m, n0, _ = L.shape
+    _, _, k = B.shape
+    bn = min(bn, k)
+    assert k % bn == 0, (k, bn)
+
+    out = pl.pallas_call(
+        _trsm_kernel,
+        grid=(m, k // bn),
+        in_specs=[
+            pl.BlockSpec((1, n0, n0), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, n0, bn), lambda b, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, n0, bn), lambda b, j: (b, 0, j)),
+        out_shape=_out_sds((m, n0, k), B.dtype, B),
+        interpret=interpret,
+    )(L, B)
+    return out[0] if squeeze else out

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input
+shape) cell on the production meshes, record memory/cost analysis and
+the collective schedule for the roofline table.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen3-1.7b --shape train_4k --mesh single,multi
+
+The XLA_FLAGS line above MUST run before any other import (jax locks
+the device count on first init); that is why it is the first statement
+of this file and why this flag is never set globally.
+
+One JSON artifact per cell is written to experiments/dryrun/, so the
+full 40-cell x 2-mesh sweep is resumable (--skip-existing).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, optim
+from repro.configs import SHAPES, ARCH_IDS
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm, whisper, sharding as shard_rules
+from repro.roofline import analysis
+from repro.train import serve_step as ss, train_step as ts
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# --------------------------- input specs ---------------------------
+
+def _sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = configs.get(arch)
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    if sh.kind == "train":
+        batch = {"tokens": _sds((B, S)), "labels": _sds((B, S))}
+        if cfg.embed_inputs:
+            batch = {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                     "labels": _sds((B, S))}
+        if cfg.enc_dec:
+            batch["frames"] = _sds((B, cfg.enc_frames, cfg.d_model),
+                                   jnp.bfloat16)
+        return batch
+    if sh.kind == "prefill":
+        batch = {"tokens": _sds((B, S))}
+        if cfg.embed_inputs:
+            batch = {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+        if cfg.enc_dec:
+            batch["frames"] = _sds((B, cfg.enc_frames, cfg.d_model),
+                                   jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {"tokens": _sds((B, 1))}
+    if cfg.embed_inputs:
+        batch = {"embeds": _sds((B, 1, cfg.d_model), jnp.bfloat16)}
+    if cfg.enc_dec:
+        batch["enc_states"] = _sds((B, cfg.enc_frames, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+def microbatches_for(cfg, sh, mesh) -> int:
+    """Gradient-accumulation depth: bound per-device live activations;
+    B/mb must stay shardable over the DP axes."""
+    dp = int(np.prod([mesh.shape[a] for a in shard_rules.dp_axes(mesh)]))
+    mb = 1
+    # target <= ~8k tokens per device per microbatch
+    while (sh.global_batch // mb) * sh.seq_len // dp > 8192 \
+            and mb * 2 <= sh.global_batch // dp:
+        mb *= 2
+    return mb
+
+
+# --------------------------- cell builders ---------------------------
+
+def build_train(cfg, sh, mesh, arch, shard_mode="2d", mb=None,
+                moment_dtype=jnp.float32):
+    init = whisper.init if cfg.enc_dec else lm.init
+    params = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+    opt = optim.get("adamw", moment_dtype=moment_dtype)
+    opt_shapes = jax.eval_shape(opt.init, params)
+    batch = input_specs(arch, sh.name)
+    mb = mb or microbatches_for(cfg, sh, mesh)
+    fn = ts.jit_train_step(cfg, mesh, opt, params, opt_shapes, batch,
+                           microbatches=mb, remat=True,
+                           shard_mode=shard_mode)
+    return fn, (params, opt_shapes, batch), {"microbatches": mb}
+
+
+def build_prefill(cfg, sh, mesh, arch, shard_mode="2d"):
+    from jax.sharding import NamedSharding, PartitionSpec
+    init = whisper.init if cfg.enc_dec else lm.init
+    params = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+    batch = input_specs(arch, sh.name)
+    pspecs = shard_rules.param_specs(cfg, params, mesh, shard_mode)
+    bspecs = shard_rules.batch_specs(batch, mesh, shard_mode)
+    ns = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    if cfg.enc_dec:
+        def fn(params, batch):
+            enc = whisper.encode(params, cfg, batch["frames"])
+            logits, _ = whisper.decode(params, cfg, batch["tokens"], enc,
+                                       last_only=True)
+            return logits
+    else:
+        def fn(params, batch):
+            logits, _ = lm.forward(params, cfg, batch.get("tokens"),
+                                   embeds=batch.get("embeds"),
+                                   last_only=True)
+            return logits
+
+    jfn = jax.jit(fn, in_shardings=(ns(pspecs), ns(bspecs)))
+    return jfn, (params, batch), {}
+
+
+def build_decode(cfg, sh, mesh, arch, kv_dtype=jnp.bfloat16):
+    B = sh.global_batch
+    batch = input_specs(arch, sh.name)
+    init = whisper.init if cfg.enc_dec else lm.init
+    init_cache = whisper.init_cache if cfg.enc_dec else lm.init_cache
+    params = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, sh.seq_len, dtype=kv_dtype))
+    fn = ss.jit_decode_step(cfg, mesh, params, cache, B)
+    toks = batch.get("tokens", jax.ShapeDtypeStruct((B, 1), jnp.int32))
+    args = [params, cache, toks]
+    if cfg.enc_dec:
+        args.append(batch["enc_states"])
+    elif cfg.embed_inputs:
+        args.append(batch["embeds"])
+    return fn, tuple(args), {}
+
+
+# ------------------------------ runner ------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             shard_mode: str = "2d", mb: int | None = None,
+             kv_dtype: str = "bf16", moment_dtype: str = "f32") -> dict:
+    cfg = configs.get(arch)
+    sh = SHAPES[shape_name]
+    ok, why = configs.shape_applicable(cfg, sh)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": sh.kind, "shard_mode": shard_mode,
+           "kv_dtype": kv_dtype, "time": time.time()}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    kvd = {"bf16": jnp.bfloat16, "int8": jnp.int8}[kv_dtype]
+    md = {"f32": jnp.float32, "bf16": jnp.bfloat16}[moment_dtype]
+    t0 = time.time()
+    if sh.kind == "train":
+        fn, args, extra = build_train(cfg, sh, mesh, arch, shard_mode, mb,
+                                      moment_dtype=md)
+    elif sh.kind == "prefill":
+        fn, args, extra = build_prefill(cfg, sh, mesh, arch, shard_mode)
+    else:
+        fn, args, extra = build_decode(cfg, sh, mesh, arch, kv_dtype=kvd)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem_rec = {}
+    try:
+        mem = compiled.memory_analysis()
+        for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_rec[f] = int(v)
+    except Exception as e:        # CPU backend may not support it
+        mem_rec["error"] = repr(e)
+    mflops = analysis.model_flops_for(cfg, sh)
+    roof, colls = analysis.from_compiled(compiled, n_chips, mflops)
+    # analytic three-term model (scan-trip-count-correct; the raw
+    # compiled numbers count while bodies once — kept as structural
+    # evidence, see repro.roofline.model docstring)
+    from repro.roofline import model as rmodel
+    mesh_roles = dict(mesh.shape)
+    if shard_mode == "fsdp_all":
+        # TP axis re-roled into FSDP/SP: model the collective structure
+        # accordingly (no per-layer TP reductions).
+        mesh_roles = {"pod": mesh_roles.get("pod", 1),
+                      "data": mesh_roles.get("data", 1)
+                      * mesh_roles.get("model", 1), "model": 1}
+        mesh_roles = {k: v for k, v in mesh_roles.items() if v > 1} or \
+            {"data": 1}
+    cm = rmodel.cell_model(cfg, sh, mesh_roles,
+                           microbatches=extra.get("microbatches", 1),
+                           kv_bytes=(1.03 if kv_dtype == "int8" else 2.0))
+    rec.update(status="ok", n_chips=n_chips,
+               lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               memory=mem_rec, collectives=colls,
+               compiled_raw=roof.to_dict(), roofline=cm.to_dict(),
+               **extra)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--shard-mode", default="2d",
+                    choices=["2d", "fsdp_all"])
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix (perf-iteration runs)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shp in shapes:
+            for mk in meshes:
+                tag = f"{arch}__{shp}__{mk}"
+                if args.tag:
+                    tag += "__" + args.tag
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] {tag}: exists, skipping")
+                    continue
+                print(f"[dryrun] {tag}: lowering...", flush=True)
+                try:
+                    rec = run_cell(arch, shp, mk,
+                                   shard_mode=args.shard_mode,
+                                   mb=args.microbatches or None,
+                                   kv_dtype=args.kv_dtype)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shp, "mesh": mk,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                st = rec["status"]
+                msg = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    msg = (f"compile={rec['compile_s']}s "
+                           f"bottleneck={r['bottleneck']} "
+                           f"frac={r['roofline_fraction']:.3f}")
+                elif st == "skipped":
+                    msg = rec["reason"][:60]
+                else:
+                    msg = rec["error"][:120]
+                print(f"[dryrun] {tag}: {st} {msg}", flush=True)
+    print(f"[dryrun] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests / benches keep seeing
+1 device while the dry-run forces 512).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16 x 16 = 256 chips (v5e pod, 2D ICI torus).
+    Multi-pod: 2 x 16 x 16 = 512 chips with a leading "pod" axis (DCN
+    between pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for multi-device selfchecks (8 forced host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,69 @@
+"""Production serving CLI: batched prefill + decode on a mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --new-tokens 16 [--mesh debug]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh, make_debug_mesh
+from repro.models import lm
+from repro.train import serve_step as ss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="debug",
+                    choices=["single", "multi", "debug"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get(args.arch)
+    if args.mesh == "debug":
+        n = len(jax.devices())
+        mesh = make_debug_mesh(max(n // 4, 1), min(4, n))
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+
+    B = args.batch
+    max_seq = args.prompt_len + args.new_tokens
+    params = lm.init(cfg, jax.random.key(0))
+    cache = lm.init_cache(cfg, B, max_seq)
+    decode = ss.jit_decode_step(cfg, mesh, params, cache, B)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       (B, args.prompt_len)))
+    t0 = time.time()
+    # prefill IS a decode step with S = prompt length (same code path)
+    logits, cache = lm.decode_step(params, cfg, prompts, cache)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    out = [tok]
+    for _ in range(args.new_tokens - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        out.append(tok)
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    dt = time.time() - t0
+    for b in range(B):
+        print(f"seq {b}: {gen[b, :12].tolist()}")
+    print(f"{B * args.new_tokens} tokens in {dt:.2f}s "
+          f"({B * args.new_tokens / dt:.1f} tok/s) on mesh "
+          f"{dict(mesh.shape)}")
+
+
+if __name__ == "__main__":
+    main()

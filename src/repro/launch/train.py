@@ -1,0 +1,116 @@
+"""Production training CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --shape train_4k [--smoke] [--steps N] [--optimizer kfac_ca] \
+        [--mesh single|multi|debug] [--compress] [--resume auto]
+
+On this CPU container use --smoke (reduced config, debug mesh).  On a
+real pod the same driver runs the full config on the production mesh:
+mesh construction, sharding rules, checkpoint/restart, straggler
+monitoring and the data pipeline are identical code paths.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, optim
+from repro.configs import SHAPES
+from repro.data import synthetic
+from repro.launch.mesh import make_production_mesh, make_debug_mesh
+from repro.models import lm, whisper
+from repro.train import checkpoint as ckpt, ft
+from repro.train import train_step as ts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS
+                    + ["preset-100m"])
+    ap.add_argument("--shape", default="train_4k",
+                    choices=[s for s in SHAPES])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="debug",
+                    choices=["single", "multi", "debug"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "kfac_ca"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 cross-pod gradient compression")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--batch", type=int, default=0,
+                    help="override global batch (smoke)")
+    ap.add_argument("--seq", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get(args.arch)
+    sh = SHAPES[args.shape]
+    B = args.batch or (4 if args.smoke else sh.global_batch)
+    S = args.seq or (64 if args.smoke else sh.seq_len)
+
+    if args.mesh == "debug":
+        n = len(jax.devices())
+        mesh = make_debug_mesh(max(n // 4, 1), min(4, n))
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    print(f"mesh={dict(mesh.shape)} arch={cfg.name} B={B} S={S} "
+          f"opt={args.optimizer}")
+
+    opt = optim.get(args.optimizer, lr=args.lr)
+    init = whisper.init if cfg.enc_dec else lm.init
+    params = init(cfg, jax.random.key(0))
+    opt_state = opt.init(params)
+    opt_shapes = jax.eval_shape(lambda: opt_state)
+    batch0 = synthetic.host_batch(cfg, S, B, 0)
+    step_fn = ts.jit_train_step(cfg, mesh, opt, params, opt_shapes,
+                                batch0, microbatches=args.microbatches,
+                                remat=not args.smoke,
+                                compress_grads=args.compress)
+
+    start = 0
+    if args.resume == "auto" and ckpt.latest_step(args.ckpt) is not None:
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            {"p": params, "o": opt_state})
+        restored, start = ckpt.restore(args.ckpt, ckpt.latest_step(args.ckpt),
+                                       like)
+        params, opt_state = restored["p"], restored["o"]
+        print(f"resumed from step {start}")
+
+    mon = ft.StepMonitor(n_hosts=1)
+    hb = ft.Heartbeat(args.ckpt, host=0)
+    pf = synthetic.Prefetcher(cfg, S, B, start_step=start)
+    try:
+        for i in range(start, args.steps):
+            t0 = time.time()
+            s_idx, batch = next(pf)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            dt = time.time() - t0
+            mon.record(0, dt)
+            hb.beat(i)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                      f"{dt * 1e3:.0f}ms"
+                      + (" STRAGGLER" if mon.stragglers() else ""))
+            if (i + 1) % args.ckpt_every == 0:
+                ckpt.save(args.ckpt, i + 1,
+                          {"p": params, "o": opt_state}, blocking=False)
+    finally:
+        pf.close()
+    ckpt.save(args.ckpt, args.steps, {"p": params, "o": opt_state})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

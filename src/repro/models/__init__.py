@@ -1,0 +1,11 @@
+"""Model zoo: pytree-functional implementations of the 10 assigned
+architectures (dense / MoE / hybrid-recurrent / SSM / VLM-backbone /
+enc-dec audio backbone), built for pjit+GSPMD distribution.
+
+Entry points:
+    lm.init(cfg, key)                  parameter pytree
+    lm.forward(params, cfg, tokens)    logits (train/prefill)
+    lm.decode_step(params, cfg, ...)   single-token decode with caches
+    lm.init_cache(cfg, batch, seq)     decode caches
+    sharding.param_specs(cfg, params)  PartitionSpec pytree (FSDP x TP x EP)
+"""

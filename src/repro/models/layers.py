@@ -1,0 +1,617 @@
+"""Building blocks shared by all architectures.
+
+Functional style: ``init_*`` returns a param dict, ``*_apply`` consumes
+it.  Everything is jit/scan/shard_map-friendly (static shapes, lax
+control flow), and attention/recurrence implementations are chunked so
+the 32k/512k assigned shapes compile with bounded live memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+# ------------------------------ norms ------------------------------
+
+def init_rmsnorm(d):
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    v = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(v + eps)).astype(dt) * p["w"].astype(dt)
+
+
+# ------------------------------ RoPE ------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, mrope_sections=None):
+    """x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the head_dim/2 frequency slots are split into
+    (t, h, w) sections, each rotated by its own position stream."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        secs = []
+        off = 0
+        for i, sec in enumerate(mrope_sections):
+            secs.append(positions[i][..., None].astype(jnp.float32)
+                        * freqs[off:off + sec])
+            off += sec
+        ang = jnp.concatenate(secs, axis=-1)            # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    dt = x.dtype
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ---------------------------- attention ----------------------------
+
+def init_attn(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": _dense_init(ks[0], (d, cfg.n_heads * hd)),
+        "wk": _dense_init(ks[1], (d, cfg.n_kv * hd)),
+        "wv": _dense_init(ks[2], (d, cfg.n_kv * hd)),
+        "wo": _dense_init(ks[3], (cfg.n_heads * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["qn"] = init_rmsnorm(hd)
+        p["kn"] = init_rmsnorm(hd)
+    return p
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,H,hd), k: (B,Sk,G,hd) -> (B, G, H/G, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    G = k.shape[2]
+    qg = q.reshape(B, Sq, G, H // G, hd)
+    return jnp.einsum("bsgrd,btgd->bgrst", qg, k)
+
+
+def _gqa_out(w, v):
+    """w: (B,G,R,Sq,Sk), v: (B,Sk,G,hd) -> (B,Sq,H,hd)."""
+    B, G, R, Sq, Sk = w.shape
+    o = jnp.einsum("bgrst,btgd->bsgrd", w, v)
+    return o.reshape(B, Sq, G * R, o.shape[-1])
+
+
+def _attend_full(q, k, v, *, causal: bool, window: int,
+                 q0: int = 0, k0: int = 0):
+    """Small/seq-bounded attention on materialized scores."""
+    hd = q.shape[-1]
+    s = _gqa_scores(q, k) / math.sqrt(hd)
+    Sq, Sk = q.shape[1], k.shape[1]
+    iq = (q0 + jnp.arange(Sq))[:, None]
+    ik = (k0 + jnp.arange(Sk))[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= ik <= iq
+    if window:
+        mask &= ik > iq - window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return _gqa_out(w, v)
+
+
+def _attend_chunked(q, k, v, *, causal: bool, window: int,
+                    q_chunk: int, kv_chunk: int):
+    """Online-softmax attention: scan over kv chunks inside a map over
+    q chunks.  Live memory is O(q_chunk * kv_chunk) per head."""
+    B, S, H, hd = q.shape
+    G = k.shape[2]
+    nq = S // q_chunk
+    nk = S // kv_chunk
+    kc = k.reshape(B, nk, kv_chunk, G, hd)
+    vc = v.reshape(B, nk, kv_chunk, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    def one_q_chunk(qi, qch):
+        # qch: (B, q_chunk, H, hd)
+        q0 = qi * q_chunk
+        m0 = jnp.full((B, G, H // G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, G, H // G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, H, hd), jnp.float32)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            ki, kch, vch = inp
+            k0 = ki * kv_chunk
+            s = _gqa_scores(qch, kch).astype(jnp.float32) * scale
+            iq = (q0 + jnp.arange(q_chunk))[:, None]
+            ik = (k0 + jnp.arange(kv_chunk))[None, :]
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= ik <= iq
+            if window:
+                msk &= ik > iq - window
+            s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            o = _gqa_out(p.astype(qch.dtype), vch).astype(jnp.float32)
+            corr_o = corr.transpose(0, 3, 1, 2).reshape(B, q_chunk, H)
+            acc = acc * corr_o[..., None] + o
+            return (m_new, l_new, acc), None
+
+        xs = (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+        # flash-style backward: recompute the (q_chunk x kv_chunk)
+        # scores in the bwd pass instead of stashing them for every
+        # chunk pair (which is O(S^2) residual memory).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                      xs)
+        ln = l.transpose(0, 3, 1, 2).reshape(B, q_chunk, H)
+        return (acc / jnp.maximum(ln[..., None], 1e-30)).astype(qch.dtype)
+
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    out = jax.lax.map(lambda t: one_q_chunk(t[0], t[1]),
+                      (jnp.arange(nq), qs))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+ATTN_CHUNK = 1024
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, positions, cache=None,
+               window: int = 0, causal: bool = True, norm_eps=1e-6):
+    """Returns (y, new_cache).  cache = dict(k, v, pos) for decode."""
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.n_kv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.n_kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qn"], q, norm_eps)
+        k = rmsnorm(p["kn"], k, norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    if cache is not None:
+        # append this step's k/v at cache["pos"], attend to the cache.
+        pos = cache["pos"]
+        cap = cache["k"].shape[1]
+        ring = bool(window) and cap <= window and S == 1
+        quant = "k_scale" in cache
+        if quant:
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+        else:
+            kq, vq = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        if S >= cap:
+            # prefill block >= cache capacity (windowed caches): keep
+            # only the trailing `cap` positions.
+            K = kq[:, S - cap:]
+            V = vq[:, S - cap:]
+            if quant:
+                Ks, Vs = ks[:, S - cap:], vs[:, S - cap:]
+        else:
+            at = (pos % cap) if ring else pos
+            K = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, at,
+                                                    axis=1)
+            V = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, at,
+                                                    axis=1)
+            if quant:
+                Ks = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks, at, axis=1)
+                Vs = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs, at, axis=1)
+        if S > ATTN_CHUNK and S % ATTN_CHUNK == 0:
+            # chunked prefill: attends within the incoming block
+            # (prefill-from-scratch: no earlier cache content).
+            o = _attend_chunked(q, k, v, causal=causal, window=window,
+                                q_chunk=ATTN_CHUNK, kv_chunk=ATTN_CHUNK)
+        else:
+            Sk = K.shape[1]
+            Kd = _kv_dequant(K, Ks, q.dtype) if quant else \
+                K.astype(q.dtype)
+            Vd = _kv_dequant(V, Vs, q.dtype) if quant else \
+                V.astype(q.dtype)
+            s = _gqa_scores(q, Kd) / math.sqrt(hd)
+            ik = jnp.arange(Sk)[None, :]
+            iq = pos + jnp.arange(S)[:, None]
+            if ring:
+                # ring buffer: slot j holds absolute position
+                # pos - ((slot - j) mod cap); valid if >= 0.
+                slot = pos % cap
+                aj = pos - ((slot - ik) % cap)
+                msk = (aj >= 0) & (aj > iq - window)
+            else:
+                msk = ik <= iq
+                if window:
+                    msk &= ik > iq - window
+            s = jnp.where(msk, s, -1e30)
+            w = jax.nn.softmax(s.astype(jnp.float32),
+                               axis=-1).astype(q.dtype)
+            o = _gqa_out(w, Vd)
+        new_cache = {"k": K, "v": V, "pos": pos + S}
+        if quant:
+            new_cache["k_scale"] = Ks
+            new_cache["v_scale"] = Vs
+    else:
+        if S > ATTN_CHUNK and S % ATTN_CHUNK == 0:
+            o = _attend_chunked(q, k, v, causal=causal, window=window,
+                                q_chunk=ATTN_CHUNK, kv_chunk=ATTN_CHUNK)
+        else:
+            o = _attend_full(q, k, v, causal=causal, window=window)
+        new_cache = None
+    y = o.reshape(B, S, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16, window: int = 0):
+    """dtype=jnp.int8 enables the quantized cache: K/V stored int8 with
+    per-(position, kv-head) f16 scales — 2x less HBM traffic per decode
+    step, the dominant term of the decode roofline."""
+    s = min(max_seq, window) if window else max_seq
+    hd = cfg.head_dim
+    c = {"k": jnp.zeros((batch, s, cfg.n_kv, hd), dtype),
+         "v": jnp.zeros((batch, s, cfg.n_kv, hd), dtype),
+         "pos": jnp.zeros((), jnp.int32)}
+    if dtype == jnp.int8:
+        c["k_scale"] = jnp.zeros((batch, s, cfg.n_kv, 1), jnp.float16)
+        c["v_scale"] = jnp.zeros((batch, s, cfg.n_kv, 1), jnp.float16)
+    return c
+
+
+def _kv_quant(x):
+    """(B, S, G, hd) -> int8 values + per-(pos, head) f16 scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ------------------------------- MLP -------------------------------
+
+def init_mlp(key, d, f, gated=True):
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {"gate": _dense_init(ks[0], (d, f)),
+                "up": _dense_init(ks[1], (d, f)),
+                "down": _dense_init(ks[2], (f, d))}
+    return {"up": _dense_init(ks[0], (d, f)),
+            "down": _dense_init(ks[1], (f, d))}
+
+
+def mlp_apply(p, x):
+    if "gate" in p:
+        h = jax.nn.silu(x @ p["gate"].astype(x.dtype)) \
+            * (x @ p["up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["up"].astype(x.dtype))
+    return h @ p["down"].astype(x.dtype)
+
+
+# ------------------------------- MoE -------------------------------
+
+def init_moe(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    scale = 1.0 / math.sqrt(d)
+    p = {"router": _dense_init(ks[0], (d, e)),
+         "gate": jax.random.normal(ks[1], (e, d, f)) * scale,
+         "up": jax.random.normal(ks[2], (e, d, f)) * scale,
+         "down": jax.random.normal(ks[3], (e, f, d)) / math.sqrt(f)}
+    return p
+
+
+MOE_GROUP = 4096
+
+
+def moe_apply(p, x, cfg: ModelConfig, capacity_factor: float | None = None):
+    """Token-choice top-k routing with capacity (GShard-style dense
+    dispatch, EP-shardable over the expert axis).
+
+    Long sequences are processed in groups of MOE_GROUP tokens with
+    per-group capacity (lax.map), keeping the (G, e, cap) dispatch
+    tensor bounded — the dense dispatch is O(G^2/e) and would be
+    quadratic in the full token count otherwise."""
+    B, S, d = x.shape
+    T_all = B * S
+    if T_all > MOE_GROUP and T_all % MOE_GROUP == 0:
+        ng = T_all // MOE_GROUP
+        xg = x.reshape(ng, 1, MOE_GROUP, d)
+        ys, auxs = jax.lax.map(
+            lambda g: moe_apply(p, g, cfg, capacity_factor), xg)
+        return ys.reshape(B, S, d), auxs.mean()
+    e, topk = cfg.n_experts, cfg.topk
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)             # (T, e)
+    gk, ik = jax.lax.top_k(gates, topk)                 # (T, topk)
+    gk = gk / jnp.maximum(gk.sum(-1, keepdims=True), 1e-9)
+
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity
+    cap = int(cf * topk * T / e)
+    cap = max(min(cap, T * topk), 1)
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(ik, e, dtype=jnp.int32)     # (T, topk, e)
+    flat = onehot.reshape(T * topk, e)
+    pos = jnp.cumsum(flat, axis=0) - flat               # (T*topk, e)
+    pos = (pos * flat).sum(-1).reshape(T, topk)
+    keep = pos < cap
+    # dispatch tensor (T, topk, e, cap): expert one-hot x queue-slot one-hot
+    slot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                          dtype=x.dtype)[..., :cap]     # (T, topk, cap)
+    disp4 = jax.nn.one_hot(ik, e, dtype=x.dtype)[..., None] \
+        * slot[..., None, :]                            # (T, topk, e, cap)
+    comb = (disp4 * gk.astype(x.dtype)[..., None, None]).sum(1)
+    disp = disp4.sum(1)                                 # (T, e, cap)
+    xin = jnp.einsum("tec,td->ecd", disp, xt)           # (e, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin,
+                               p["gate"].astype(x.dtype))) \
+        * jnp.einsum("ecd,edf->ecf", xin, p["up"].astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(x.dtype))
+    y = jnp.einsum("tec,ecd->td", comb, out)
+    aux = _load_balance_loss(gates, ik, e)
+    return y.reshape(B, S, d), aux
+
+
+def _load_balance_loss(gates, ik, e):
+    """Switch-style auxiliary load-balancing loss."""
+    T = gates.shape[0]
+    me = gates.mean(axis=0)                             # mean gate per expert
+    ce = jnp.zeros((e,), jnp.float32).at[ik.reshape(-1)].add(1.0) \
+        / (T * ik.shape[-1])
+    return e * jnp.sum(me * ce)
+
+
+# --------------------------- RG-LRU (hybrid) ---------------------------
+
+def init_rec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d = cfg.d_model
+    w = cfg.conv_width
+    return {
+        "in_x": _dense_init(ks[0], (d, d)),
+        "in_g": _dense_init(ks[1], (d, d)),
+        "conv_w": jax.random.normal(ks[2], (w, d)) / math.sqrt(w),
+        "conv_b": jnp.zeros((d,)),
+        "lam": jax.random.uniform(ks[3], (d,), minval=0.9, maxval=0.999),
+        "w_ig": _dense_init(ks[4], (d, d)),     # input gate
+        "w_rg": _dense_init(ks[5], (d, d)),     # recurrence gate
+        "out": _dense_init(ks[6], (d, d)),
+    }
+
+
+_RG_C = 8.0
+
+
+def _rg_lru(x, ig, rg, lam, h0=None):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t); associative scan.
+    x/ig/rg: (B, S, D); lam: (D,); h0: (B, D) carried state."""
+    log_a = -_RG_C * jax.nn.softplus(-jnp.log(lam / (1 - lam))) \
+        * jax.nn.sigmoid(rg)
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = (jax.nn.sigmoid(ig) * x).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(p, q):
+        return (p[0] * q[0], p[1] * q[0] + q[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rec_apply(p, x, cfg: ModelConfig, cache=None):
+    """RecurrentGemma recurrent block.  cache = dict(h, conv) for decode."""
+    B, S, d = x.shape
+    xb = x @ p["in_x"].astype(x.dtype)
+    gb = jax.nn.gelu(x @ p["in_g"].astype(x.dtype))
+    w = p["conv_w"].shape[0]
+    if cache is not None:
+        xpad = jnp.concatenate([cache["conv"].astype(xb.dtype), xb], axis=1)
+        new_conv = xpad[:, -(w - 1):]
+    else:
+        xpad = jnp.pad(xb, ((0, 0), (w - 1, 0), (0, 0)))
+        new_conv = xpad[:, -(w - 1):]
+    xc = sum(xpad[:, i:i + S] * p["conv_w"].astype(xb.dtype)[i]
+             for i in range(w)) + p["conv_b"].astype(xb.dtype)
+    ig = xc @ p["w_ig"].astype(x.dtype)
+    rg = xc @ p["w_rg"].astype(x.dtype)
+    h0 = cache["h"] if cache is not None else None
+    h, h_last = _rg_lru(xc, ig, rg, p["lam"], h0)
+    y = (h * gb) @ p["out"].astype(x.dtype)
+    new_cache = ({"h": h_last.astype(jnp.float32), "conv": new_conv}
+                 if cache is not None else None)
+    return y, new_cache
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int):
+    d, w = cfg.d_model, cfg.conv_width
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, w - 1, d), jnp.bfloat16)}
+
+
+# ------------------------------ mLSTM ------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "wq": _dense_init(ks[0], (d, d)),
+        "wk": _dense_init(ks[1], (d, d)),
+        "wv": _dense_init(ks[2], (d, d)),
+        "wi": _dense_init(ks[3], (d, H)),
+        "wf": _dense_init(ks[4], (d, H)),
+        "wg": _dense_init(ks[5], (d, d)),       # output gate (silu)
+        "out": _dense_init(ks[6], (d, d)),
+    }
+
+
+MLSTM_CHUNK = 1024
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, C0, n0):
+    """Chunkwise-parallel mLSTM.  q,k,v: (B,S,H,hd); li/lf: (B,S,H) log
+    input/forget gates.  Carries (C, n) across chunks; intra-chunk is a
+    (c x c) parallel form.  Returns h (B,S,H,hd) and final state."""
+    B, S, H, hd = q.shape
+    c = min(MLSTM_CHUNK, S)
+    nc = S // c
+    qc = jnp.moveaxis(q.reshape(B, nc, c, H, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nc, c, H, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, c, H, hd), 1, 0)
+    lic = jnp.moveaxis(li.reshape(B, nc, c, H), 1, 0)
+    lfc = jnp.moveaxis(lf.reshape(B, nc, c, H), 1, 0)
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, inp):
+        C, n = carry                       # (B,H,hd,hd), (B,H,hd)
+        qi, ki, vi, lii, lfi = inp
+        F = jnp.cumsum(lfi, axis=1)        # (B,c,H) running log-forget
+        # inter-chunk: contribution of carried state
+        dq = jnp.exp(F)[..., None]         # decay applied to carry
+        h_inter = jnp.einsum("bthd,bhde->bthe", qi * dq * scale, C)
+        n_inter = jnp.einsum("bthd,bhd->bth", qi * dq * scale, n)
+        # intra-chunk parallel form
+        dmat = F[:, :, None, :] - F[:, None, :, :] + lii[:, None, :, :]
+        tq = jnp.arange(c)[:, None]
+        tk = jnp.arange(c)[None, :]
+        causal = (tk <= tq)[None, :, :, None]
+        dmat = jnp.where(causal, dmat, -jnp.inf)
+        w = jnp.exp(dmat)                  # (B, tq, tk, H)
+        s = jnp.einsum("bthd,bshd->btsh", qi, ki) * scale
+        sw = s * w
+        h_intra = jnp.einsum("btsh,bshd->bthd", sw, vi)
+        n_intra = sw.sum(axis=2)
+        h_num = h_inter + h_intra
+        n_den = jnp.abs(n_inter + n_intra)
+        h = h_num / jnp.maximum(n_den, 1.0)[..., None]
+        # state update for next chunk
+        ftot = F[:, -1]                    # (B, H)
+        dk = jnp.exp(ftot[:, None] - F + lii)          # (B,c,H)
+        C = C * jnp.exp(ftot)[..., None, None] \
+            + jnp.einsum("bshd,bshe->bhde", ki * dk[..., None], vi)
+        n = n * jnp.exp(ftot)[..., None] \
+            + jnp.einsum("bshd->bhd", ki * dk[..., None])
+        return (C, n), h
+
+    # checkpoint the chunk body: the (c x c) intra-chunk gate matrix is
+    # recomputed in the bwd pass rather than stashed per chunk.
+    (C, n), hs = jax.lax.scan(jax.checkpoint(body), (C0, n0),
+                              (qc, kc, vc, lic, lfc))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd), (C, n)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, cache=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    li = jax.nn.log_sigmoid(x @ p["wi"].astype(x.dtype)).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(x @ p["wf"].astype(x.dtype)).astype(jnp.float32)
+    if cache is not None:
+        C0, n0 = cache["C"], cache["n"]
+    else:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    h, (C, n) = _mlstm_chunk_scan(qf, kf, vf, li, lf, C0, n0)
+    h = h.astype(x.dtype).reshape(B, S, d)
+    g = jax.nn.silu(x @ p["wg"].astype(x.dtype))
+    y = (h * g) @ p["out"].astype(x.dtype)
+    new_cache = {"C": C, "n": n} if cache is not None else None
+    return y, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32)}
+
+
+# ------------------------------ sLSTM ------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    return {
+        "wx": _dense_init(ks[0], (d, 4 * d)),
+        "r": jax.random.normal(ks[1], (H, hd, 4 * hd)) / math.sqrt(hd),
+        "out": _dense_init(ks[2], (d, d)),
+    }
+
+
+def slstm_apply(p, x, cfg: ModelConfig, cache=None):
+    """sLSTM with exponential gating and per-head recurrent mixing.
+    Sequential scan over time (inherently recurrent)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    zx = (x @ p["wx"].astype(x.dtype)).reshape(B, S, H, 4 * hd) \
+        .astype(jnp.float32)
+    R = p["r"].astype(jnp.float32)
+
+    if cache is not None:
+        st0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        st0 = (z, z, z, jnp.full((B, H, hd), -1e30, jnp.float32))
+
+    def step(st, zt):
+        c, n, h, m = st
+        rec = jnp.einsum("bhd,hde->bhe", h, R)
+        zi, zf, zz, zo = jnp.split(zt + rec, 4, axis=-1)
+        m_new = jnp.maximum(zf + m, zi)
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(zf + m - m_new)
+        c = f * c + i * jnp.tanh(zz)
+        n = f * n + i
+        h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    st, hs = jax.lax.scan(step, st0, jnp.moveaxis(zx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = h @ p["out"].astype(x.dtype)
+    new_cache = ({"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+                 if cache is not None else None)
+    return y, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}

@@ -1,0 +1,327 @@
+"""Unified decoder-only LM covering the dense / MoE / hybrid / SSM /
+VLM-backbone families.
+
+Layers are organized as repeating *units* (cfg.block_pattern); the unit
+stack is jax.lax.scan'ed over stacked parameters, which keeps the HLO
+size O(1) in depth (essential for the 126-layer dry-run cells) and
+gives the standard remat point for activation checkpointing.  A
+non-full trailing unit ("tail") is applied unrolled.
+
+Cache threading for decode uses the same stacking: caches are pytrees
+stacked over units, scanned jointly with the parameters.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import layers as L
+
+
+# ----------------------------- layout -----------------------------
+
+def pattern_layout(cfg: ModelConfig):
+    pat = tuple(cfg.block_pattern)
+    n_units, tail = divmod(cfg.n_layers, len(pat))
+    return pat, n_units, tail
+
+
+# ------------------------------ init ------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "attn":
+        p = {"ln1": L.init_rmsnorm(d), "attn": L.init_attn(ks[0], cfg),
+             "ln2": L.init_rmsnorm(d)}
+        if cfg.n_experts:
+            p["moe"] = L.init_moe(ks[1], cfg)
+            if cfg.dense_residual:
+                p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff)
+        elif cfg.d_ff:
+            p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff)
+        return p
+    if kind == "rec":
+        return {"ln1": L.init_rmsnorm(d), "rec": L.init_rec(ks[0], cfg),
+                "ln2": L.init_rmsnorm(d),
+                "mlp": L.init_mlp(ks[1], d, cfg.d_ff)}
+    if kind == "mlstm":
+        return {"ln1": L.init_rmsnorm(d), "mix": L.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": L.init_rmsnorm(d), "mix": L.init_slstm(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    pat, n_units, tail = pattern_layout(cfg)
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    params: dict = {}
+    vp = cfg.vocab_padded
+    params["embed"] = (jax.random.normal(keys[0], (vp, cfg.d_model))
+                       * 0.02).astype(jnp.float32)
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[1], (cfg.d_model, vp))
+                          * 0.02).astype(jnp.float32)
+    params["ln_f"] = L.init_rmsnorm(cfg.d_model)
+
+    li = iter(keys[3:])
+    if n_units:
+        units = []
+        for _ in range(n_units):
+            units.append({f"b{i}": _init_block(next(li), kind, cfg)
+                          for i, kind in enumerate(pat)})
+        params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    if tail:
+        params["tail"] = [
+            _init_block(next(li), pat[i], cfg) for i in range(tail)]
+    return params
+
+
+# ------------------------------ blocks ------------------------------
+
+def _block_apply(kind: str, p, x, cfg: ModelConfig, *, positions,
+                 cache=None):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        window = cfg.local_window if cfg.family == "hybrid" else 0
+        h, c = L.attn_apply(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cfg, positions=positions,
+                            cache=cache["attn"] if cache else None,
+                            window=window, norm_eps=cfg.norm_eps)
+        x = x + h
+        hin = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            y, aux = L.moe_apply(p["moe"], hin, cfg)
+            if cfg.dense_residual:
+                y = y + L.mlp_apply(p["mlp"], hin)
+            x = x + y
+        elif cfg.d_ff:
+            x = x + L.mlp_apply(p["mlp"], hin)
+        new_cache = {"attn": c} if cache else None
+    elif kind == "rec":
+        h, c = L.rec_apply(p["rec"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                           cfg, cache=cache["rec"] if cache else None)
+        x = x + h
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+        new_cache = {"rec": c} if cache else None
+    elif kind == "mlstm":
+        h, c = L.mlstm_apply(p["mix"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                             cfg, cache=cache["mix"] if cache else None)
+        x = x + h
+        new_cache = {"mix": c} if cache else None
+    elif kind == "slstm":
+        h, c = L.slstm_apply(p["mix"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                             cfg, cache=cache["mix"] if cache else None)
+        x = x + h
+        new_cache = {"mix": c} if cache else None
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _init_block_cache(kind: str, cfg: ModelConfig, batch: int,
+                      max_seq: int, dtype):
+    if kind == "attn":
+        window = cfg.local_window if cfg.family == "hybrid" else 0
+        return {"attn": L.init_attn_cache(cfg, batch, max_seq, dtype,
+                                          window=window)}
+    if kind == "rec":
+        return {"rec": L.init_rec_cache(cfg, batch)}
+    if kind == "mlstm":
+        return {"mix": L.init_mlstm_cache(cfg, batch)}
+    if kind == "slstm":
+        return {"mix": L.init_slstm_cache(cfg, batch)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    pat, n_units, tail = pattern_layout(cfg)
+    cache: dict = {}
+    if n_units:
+        us = [{f"b{i}": _init_block_cache(kind, cfg, batch, max_seq, dtype)
+               for i, kind in enumerate(pat)} for _ in range(n_units)]
+        cache["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *us)
+    if tail:
+        cache["tail"] = [
+            _init_block_cache(pat[i], cfg, batch, max_seq, dtype)
+            for i in range(tail)]
+    return cache
+
+
+# ----------------------------- forward -----------------------------
+
+def _run_stack(params, cfg, x, positions, cache=None, remat=False,
+               unroll=False):
+    """Apply all layers; returns (x, new_cache, aux_sum).
+    unroll=True replaces the unit scan with a Python loop (used for
+    flop-accounting validation: XLA cost_analysis counts while bodies
+    once, so the scanned form under-reports)."""
+    pat, n_units, tail = pattern_layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    if n_units and unroll and cache is None:
+        for u in range(n_units):
+            up = jax.tree.map(lambda a: a[u], params["units"])
+            for i, kind in enumerate(pat):
+                x, _, aux = _block_apply(kind, up[f"b{i}"], x, cfg,
+                                         positions=positions)
+                aux_total = aux_total + aux
+    elif n_units:
+        def unit(xc, scanned):
+            x, auxa = xc
+            up, uc = scanned
+            ncs = {}
+            for i, kind in enumerate(pat):
+                bc = uc[f"b{i}"] if uc is not None else None
+                x, nc, aux = _block_apply(kind, up[f"b{i}"], x, cfg,
+                                          positions=positions, cache=bc)
+                ncs[f"b{i}"] = nc
+                auxa = auxa + aux
+            return (x, auxa), (ncs if uc is not None else 0)
+
+        ufn = jax.checkpoint(unit) if remat else unit
+        ucache = cache.get("units") if cache else None
+        if ucache is None:
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, p_: ufn(c, (p_, None)), (x, aux_total),
+                params["units"])
+        else:
+            (x, aux_total), ncs = jax.lax.scan(
+                ufn, (x, aux_total), (params["units"], ucache))
+            new_cache["units"] = ncs
+
+    if tail:
+        tail_caches = []
+        for i in range(tail):
+            bc = cache["tail"][i] if cache else None
+            x, nc, aux = _block_apply(pat[i], params["tail"][i], x, cfg,
+                                      positions=positions, cache=bc)
+            tail_caches.append(nc)
+            aux_total = aux_total + aux
+        if cache:
+            new_cache["tail"] = tail_caches
+
+    return x, (new_cache if cache else None), aux_total
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            positions=None, remat: bool = False, dtype=jnp.bfloat16,
+            last_only: bool = False, unroll: bool = False,
+            logits_spec=None):
+    """Full-sequence forward (train / prefill).  Returns (logits, aux).
+
+    tokens: (B, S) int32, or embeds: (B, S, D) for stub-frontend archs.
+    positions: (B, S) or (3, B, S) for M-RoPE; defaults to arange.
+    last_only: emit logits only for the final position (prefill)."""
+    if embeds is None:
+        x = params["embed"].astype(dtype)[tokens]
+    else:
+        x = embeds.astype(dtype)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    x, _, aux = _run_stack(params, cfg, x, positions, remat=remat,
+                           unroll=unroll)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    logits = _mask_padded_vocab(logits, cfg)
+    if logits_spec is not None:
+        # pin the (B, S, V) logits sharding: without this the SPMD
+        # partitioner replicates them across the pod axis (hundreds of
+        # GB/dev for big-vocab archs on the multi-pod mesh).
+        logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+    return logits, aux
+
+
+def _mask_padded_vocab(logits, cfg):
+    """Padded vocab rows (see configs.vocab_padded) get -inf logits so
+    softmax/argmax ignore them; elementwise, sharding-friendly."""
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    valid = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    return jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, *, embeds=None,
+                dtype=jnp.bfloat16):
+    """One-token decode: tokens (B, 1) + caches -> (logits, new_cache)."""
+    if embeds is None:
+        x = params["embed"].astype(dtype)[tokens]
+    else:
+        x = embeds.astype(dtype)
+    B, S = x.shape[:2]
+    pos = _decode_positions(cfg, cache, B, S)
+    x, new_cache, _ = _run_stack(params, cfg, x, pos, cache=cache)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = _mask_padded_vocab(x @ head.astype(x.dtype), cfg)
+    return logits, new_cache
+
+
+def _decode_positions(cfg, cache, B, S):
+    """Current absolute position from the first attention cache; pure
+    recurrent stacks (no attn cache) fall back to a step counter that we
+    thread as cache['pos'] if present, else zero (positions only matter
+    for RoPE in attention blocks)."""
+    pos0 = _find_attn_pos(cache)
+    if pos0 is None:
+        pos0 = jnp.zeros((), jnp.int32)
+    p = pos0 + jnp.arange(S)[None]
+    p = jnp.broadcast_to(p, (B, S))
+    if cfg.mrope_sections:
+        p = jnp.broadcast_to(p[None], (3, B, S))
+    return p
+
+
+def _find_attn_pos(tree):
+    if isinstance(tree, dict):
+        if "pos" in tree and not isinstance(tree["pos"], dict):
+            p = tree["pos"]
+            # stacked over units: take the first
+            return p.reshape(-1)[0] if p.ndim else p
+        for v in tree.values():
+            r = _find_attn_pos(v)
+            if r is not None:
+                return r
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            r = _find_attn_pos(v)
+            if r is not None:
+                return r
+    return None
+
+
+# ------------------------------ loss ------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat=False,
+            dtype=jnp.bfloat16, aux_weight: float = 0.01,
+            logits_spec=None):
+    """Next-token cross entropy (+ MoE aux loss).  batch: dict with
+    tokens (B, S) and labels (B, S) (already shifted), optional embeds."""
+    logits, aux = forward(params, cfg, batch.get("tokens"),
+                          embeds=batch.get("embeds"), remat=remat,
+                          dtype=dtype, logits_spec=logits_spec)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # label log-prob via a one-hot reduction instead of take_along_axis:
+    # a gather over the TP-sharded vocab dim forces the SPMD partitioner
+    # to replicate the (B, S, V) logits; the masked sum reduces the
+    # sharded dim with a psum instead.
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=lf.dtype)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    loss = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux

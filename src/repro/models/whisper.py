@@ -1,0 +1,183 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, enc_frames, D) from input_specs().
+Sinusoidal positions on the encoder, causal decoder with cross-attention.
+Decode caches: per-layer self-attn cache + precomputed cross K/V.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import layers as L
+
+
+def _sinusoid_at(positions, d, dtype=jnp.float32):
+    """Sinusoidal embeddings at explicit (possibly traced) positions."""
+    pos = positions[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(dtype)
+
+
+def _sinusoid(S, d, dtype=jnp.float32):
+    return _sinusoid_at(jnp.arange(S), d, dtype)
+
+
+def _init_xattn(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {"wq": L._dense_init(ks[0], (d, cfg.n_heads * hd)),
+            "wk": L._dense_init(ks[1], (d, cfg.n_kv * hd)),
+            "wv": L._dense_init(ks[2], (d, cfg.n_kv * hd)),
+            "wo": L._dense_init(ks[3], (cfg.n_heads * hd, d))}
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": L.init_rmsnorm(d), "attn": L.init_attn(k1, cfg),
+                "ln2": L.init_rmsnorm(d),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff, gated=False)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": L.init_rmsnorm(d), "attn": L.init_attn(k1, cfg),
+                "lnx": L.init_rmsnorm(d), "xattn": _init_xattn(k2, cfg),
+                "ln2": L.init_rmsnorm(d),
+                "mlp": L.init_mlp(k3, d, cfg.d_ff, gated=False)}
+
+    ek = jax.random.split(ks[0], cfg.n_enc_layers)
+    dk = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(ks[2], (cfg.vocab_padded, d)) * 0.02),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[enc_layer(k) for k in ek]),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[dec_layer(k) for k in dk]),
+        "ln_enc": L.init_rmsnorm(d),
+        "ln_f": L.init_rmsnorm(d),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, dtype=jnp.bfloat16):
+    """frames: (B, enc_frames, D) stub embeddings -> encoder states."""
+    B, S, d = frames.shape
+    x = frames.astype(dtype) + _sinusoid(S, d, dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer(x, p):
+        h, _ = L.attn_apply(p["attn"], L.rmsnorm(p["ln1"], x), cfg,
+                            positions=pos, causal=False)
+        x = x + h
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln2"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer), x, params["enc"])
+    return L.rmsnorm(params["ln_enc"], x)
+
+
+def _cross_attend(p, x, enc_kv, cfg):
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    K, V = enc_kv
+    s = L._gqa_scores(q, K.astype(q.dtype)) / math.sqrt(hd)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    o = L._gqa_out(w, V.astype(q.dtype))
+    return o.reshape(B, S, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+
+
+def _enc_kv(params, cfg, enc_states):
+    """Precompute per-layer cross-attention K/V from encoder states."""
+    B, S, d = enc_states.shape
+    hd = cfg.head_dim
+
+    def one(p):
+        K = (enc_states @ p["xattn"]["wk"].astype(enc_states.dtype)
+             ).reshape(B, S, cfg.n_kv, hd)
+        V = (enc_states @ p["xattn"]["wv"].astype(enc_states.dtype)
+             ).reshape(B, S, cfg.n_kv, hd)
+        return K, V
+
+    return jax.vmap(one)(params["dec"])    # stacked over layers
+
+
+def decode(params, cfg: ModelConfig, tokens, enc_states, *, cache=None,
+           dtype=jnp.bfloat16, last_only: bool = False):
+    """Decoder forward.  Full-seq (cache=None) or one-step (cache)."""
+    B, S = tokens.shape
+    x = params["embed"].astype(dtype)[tokens]
+    if cache is None:
+        pos0 = jnp.zeros((), jnp.int32)
+    else:
+        pos0 = cache["self"]["attn"]["pos"].reshape(-1)[0]
+    x = x + _sinusoid_at(pos0 + jnp.arange(S), x.shape[-1], dtype)[None]
+    pos = jnp.broadcast_to(pos0 + jnp.arange(S)[None], (B, S))
+    enc_kv = _enc_kv(params, cfg, enc_states)
+
+    def layer(carry, scanned):
+        x = carry
+        if cache is None:
+            p, (Ki, Vi) = scanned
+            c = None
+        else:
+            p, (Ki, Vi), c = scanned
+        h, nc = L.attn_apply(p["attn"], L.rmsnorm(p["ln1"], x), cfg,
+                             positions=pos,
+                             cache=c["attn"] if c is not None else None)
+        x = x + h
+        x = x + _cross_attend(p["xattn"], L.rmsnorm(p["lnx"], x),
+                              (Ki, Vi), cfg)
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln2"], x))
+        return x, ({"attn": nc} if c is not None else 0)
+
+    if cache is None:
+        # remat per decoder layer: cross-attn weights (B, H, S, 1500)
+        # would otherwise be stashed for every layer.
+        x, _ = jax.lax.scan(jax.checkpoint(layer), x,
+                            (params["dec"], enc_kv))
+        new_cache = None
+    else:
+        x, ncs = jax.lax.scan(layer, x,
+                              (params["dec"], enc_kv, cache["self"]))
+        new_cache = {"self": ncs}
+    x = L.rmsnorm(params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    logits = x @ params["embed"].T.astype(x.dtype)
+    from repro.models.lm import _mask_padded_vocab
+    logits = _mask_padded_vocab(logits, cfg)
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    caches = [{"attn": L.init_attn_cache(cfg, batch, max_seq, dtype)}
+              for _ in range(cfg.n_layers)]
+    return {"self": jax.tree.map(lambda *xs: jnp.stack(xs), *caches)}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, dtype=jnp.bfloat16,
+            logits_spec=None, **_):
+    enc = encode(params, cfg, batch["frames"], dtype)
+    logits, _ = decode(params, cfg, batch["tokens"], enc, dtype=dtype)
+    if logits_spec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # one-hot reduction (not take_along_axis): see lm.loss_fn — gathers
+    # over the TP-sharded vocab dim replicate the logits.
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=lf.dtype)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    return (lse - ll).mean()

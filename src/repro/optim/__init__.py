@@ -1,0 +1,13 @@
+"""Optimizers: AdamW baseline and the KFAC-CA second-order optimizer
+whose preconditioner solves run through the paper's CA-TRSM."""
+
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.kfac_ca import kfac_ca  # noqa: F401
+
+
+def get(name: str, **kw):
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "kfac_ca":
+        return kfac_ca(**kw)
+    raise ValueError(name)

@@ -1,0 +1,69 @@
+"""AdamW on parameter pytrees (optax-style (init, update) pair)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    # (grads, state, params) -> (new_params, new_state, metrics)
+    update: Callable
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+          clip_norm=1.0, moment_dtype=jnp.float32):
+    """lr may be a float or a schedule fn(step)->lr."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(moment_dtype)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            mh = m2 / bc1
+            vh = v2 / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(moment_dtype)
+            return (p - lr_t * delta.astype(p.dtype)).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is_t = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+        return new_params, {"m": new_m, "v": new_v, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,172 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bandwidth
+    collective term = collective_bytes_per_device / ICI_link_bandwidth
+
+Sources: ``compiled.cost_analysis()`` (flops, bytes accessed — the
+compiled module is the SPMD-partitioned per-device program, so these
+are per-device numbers); collective bytes are NOT in cost_analysis, so
+we parse the partitioned HLO text and sum the payload of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (result shape; operand shape for reduce-scatter,
+whose result is the reduced shard).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (we charge one link, the conservative serialization bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<dt>\w+)\[(?P<shape>[\d,]*)\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+_TUPLE_ELT_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _nbytes(dt: str, shape: str) -> int:
+    n = 1
+    for t in shape.split(","):
+        if t:
+            n *= int(t)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """-> {op: {"bytes": int, "count": int}} per device.
+
+    Counts each op once (all-reduce-start/done pairs are deduped by
+    only counting non-`-done` forms)."""
+    out: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if m.group("dt") is not None:
+            nb = _nbytes(m.group("dt"), m.group("shape"))
+        else:
+            # tuple result: sum elements (take the tuple right after '=')
+            tup = line.split("=", 1)[1].split(op)[0]
+            nb = sum(_nbytes(d, s) for d, s in _TUPLE_ELT_RE.findall(tup))
+        if op == "reduce-scatter":
+            # result is the reduced shard; charge the full input
+            groups = re.search(r"replica_groups=\{\{([\d,]+)\}",
+                               hlo_text[:0] or line)
+            factor = 1
+            if groups:
+                factor = len(groups.group(1).split(","))
+            nb *= factor
+        d = out.setdefault(op, {"bytes": 0, "count": 0})
+        d["bytes"] += nb
+        d["count"] += 1
+    return out
+
+
+def scan_trip_counts(hlo_text: str) -> int:
+    """Upper bound check helper: number of while loops (scans)."""
+    return hlo_text.count(" while(")
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    n_chips: int
+    model_flops: float = 0.0          # 6*N*D (train) / 2*N*D (inference)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_dev * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the step achieves under the
+        max-term execution model: t_bound = max(3 terms); achievable
+        MFU = (useful flops / chips / t_bound) / peak."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t == 0:
+            return 0.0
+        per_chip = self.model_flops / self.n_chips / t
+        return per_chip / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, n_chips: int, model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    cb = sum(v["bytes"] for v in colls.values())
+    return Roofline(flops, nbytes, cb, n_chips, model_flops), colls
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Useful model flops: 6*N*D (train) / 2*N*D (inference) with
+    N = flop_param_count (matmul-participating active params; see
+    configs.ModelConfig.flop_param_count) plus the encoder side for
+    enc-dec archs (scales with enc_frames, not decoder tokens)."""
+    n = cfg.flop_param_count
+    mult = 6.0 if shape.kind == "train" else 2.0
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.seq_len * shape.global_batch
+    f = mult * n * tokens
+    if cfg.enc_dec and shape.kind != "decode":
+        f += mult * cfg.enc_param_count * cfg.enc_frames \
+            * shape.global_batch
+    return f

@@ -1,0 +1,77 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+Optional re-factoring of the "pod" axis into pipeline stages: each
+stage holds a contiguous slice of layers; microbatches stream through a
+collective_permute ring.  shard_map body — every device is one stage.
+
+Schedule: T = M + S - 1 ticks.  At tick t, stage s computes microbatch
+(t - s) if 0 <= t - s < M (otherwise it computes on a zero buffer whose
+result is discarded — the classic GPipe bubble, wasting (S-1)/(M+S-1)
+of compute, which is why M >> S in production configs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stage_params, microbatches, *, mesh: Mesh,
+                   axis: str = "pipe"):
+    """Run microbatches (M, B, ...) through S = mesh.shape[axis] stages.
+
+    stage_fn(params_slice, x) -> y applies one stage's layers.
+    stage_params: pytree stacked over stages (leading dim S).
+    Returns (M, B, ...) outputs from the last stage."""
+    S = mesh.shape[axis]
+    M = microbatches.shape[0]
+    T = M + S - 1
+
+    def body(params_local, mbs_local):
+        # params_local: this stage's slice — shard_map keeps the (now
+        # size-1) stage dim, so squeeze it; mbs_local: full microbatch
+        # stream (replicated).
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        sid = jax.lax.axis_index(axis)
+        buf = jax.lax.pcast(jnp.zeros_like(mbs_local[0]), axis,
+                            to="varying")
+        outs = jax.lax.pcast(
+            jnp.zeros((M,) + mbs_local.shape[1:], mbs_local.dtype),
+            axis, to="varying")
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any); others use the
+            # buffer received from the previous stage.
+            mb_idx = jnp.clip(t, 0, M - 1)
+            x_in = jnp.where(sid == 0,
+                             jax.lax.dynamic_index_in_dim(
+                                 mbs_local, mb_idx, keepdims=False),
+                             buf)
+            y = stage_fn(params_local, x_in)
+            # last stage records its result for microbatch t - (S-1)
+            out_idx = jnp.clip(t - (S - 1), 0, M - 1)
+            record = (sid == S - 1) & (t >= S - 1)
+            upd = jax.lax.dynamic_update_index_in_dim(
+                outs, y.astype(outs.dtype), out_idx, axis=0)
+            outs = jnp.where(record, upd, outs)
+            # ring-shift activations to the next stage
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            buf = jax.lax.ppermute(y, axis, perm)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, T, tick, (buf, outs))
+        # all stages exit with the same schedule; only the last stage's
+        # outs are real — broadcast them to every stage for a clean
+        # replicated output.
+        outs = jax.lax.psum(
+            jnp.where(sid == S - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    spec_p = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec_p, P()),
+                       out_specs=P())
+    return fn(stage_params, microbatches)

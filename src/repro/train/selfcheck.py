@@ -1,0 +1,185 @@
+"""Multi-device self-checks for the training/serving stack.
+
+Run in a subprocess with forced host devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.train.selfcheck [what]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _mesh(shape, axes):
+    devs = np.asarray(jax.devices()[:int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def check_train_step() -> int:
+    from repro import configs, optim
+    from repro.data import synthetic
+    from repro.models import lm
+    from repro.train import train_step as ts
+
+    fails = 0
+    for arch in ["qwen3-1.7b", "grok-1-314b", "recurrentgemma-2b"]:
+        cfg = configs.get_smoke(arch)
+        mesh = _mesh((2, 4), ("data", "model"))
+        params = lm.init(cfg, jax.random.key(0))
+        opt = optim.get("adamw", lr=1e-3)
+        opt_state = opt.init(params)
+        batch = synthetic.host_batch(cfg, seq=32, global_batch=4, step=0)
+        opt_shapes = jax.eval_shape(opt.init, params)
+        with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+            step = ts.jit_train_step(cfg, mesh, opt, params, opt_shapes,
+                                     batch, microbatches=2, remat=True)
+            p2, o2, m = step(params, opt_state, batch)
+            p3, o3, m2 = step(p2, o2, batch)
+        ok = bool(jnp.isfinite(m["loss"])) and bool(jnp.isfinite(m2["loss"]))
+        print(f"train_step {arch}: loss {float(m['loss']):.3f} -> "
+              f"{float(m2['loss']):.3f} {'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def check_serve_step() -> int:
+    from repro import configs
+    from repro.models import lm
+    from repro.train import serve_step as ss
+
+    fails = 0
+    for arch in ["qwen3-1.7b", "recurrentgemma-2b"]:
+        cfg = configs.get_smoke(arch)
+        mesh = _mesh((2, 4), ("data", "model"))
+        params = lm.init(cfg, jax.random.key(0))
+        B, S = 4, 16
+        cache = lm.init_cache(cfg, B, S)
+        with mesh:
+            fn = ss.jit_decode_step(cfg, mesh, params, cache, B)
+            toks = jnp.zeros((B, 1), jnp.int32)
+            logits, cache2 = fn(params, cache, toks)
+            logits2, _ = fn(params, cache2, toks)
+        ok = bool(jnp.isfinite(logits).all()) and \
+            bool(jnp.isfinite(logits2).all()) and \
+            logits.shape == (B, 1, cfg.vocab)
+        print(f"serve_step {arch}: {'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def check_pipeline() -> int:
+    from repro.train.pipeline import pipeline_apply
+
+    mesh = _mesh((4,), ("pipe",))
+    S, M, B, d = 4, 6, 2, 8
+    rng = np.random.default_rng(0)
+    # 4 stages, each an affine map; reference = sequential composition
+    Ws = jnp.asarray(rng.standard_normal((S, d, d)) / np.sqrt(d))
+    bs = jnp.asarray(rng.standard_normal((S, d)) * 0.1)
+    x = jnp.asarray(rng.standard_normal((M, B, d)))
+
+    def stage(p, h):
+        W, b = p
+        return jnp.tanh(h @ W + b)
+
+    out = pipeline_apply(stage, (Ws, bs), x, mesh=mesh, axis="pipe")
+    ref = x
+    for s in range(S):
+        ref = jnp.tanh(ref @ Ws[s] + bs[s])
+    err = float(jnp.abs(out - ref).max())
+    ok = err < 1e-5
+    print(f"pipeline S={S} M={M}: err={err:.2e} {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def check_compress() -> int:
+    from repro.train import compress
+
+    mesh = _mesh((8,), ("pod",))
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+
+    def body(g):
+        key = jax.random.fold_in(jax.random.key(0),
+                                 jax.lax.axis_index("pod"))
+        return compress.psum_compressed(g, "pod", key)
+
+    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
+                                out_specs=P()))(g)
+    want = np.asarray(g) * 8
+    rel = np.abs(np.asarray(out) - want).max() / np.abs(want).max()
+    # int8 quantization: expect ~1% relative error, unbiased
+    ok = rel < 0.05
+    print(f"compress int8 psum: rel={rel:.4f} {'OK' if ok else 'FAIL'}")
+
+    # unbiasedness of stochastic rounding
+    keys = jax.random.split(jax.random.key(1), 256)
+    x = jnp.full((16,), 0.3)
+    qs = jax.vmap(lambda k: compress._stochastic_round(x, k))(keys)
+    mean = float(qs.mean())
+    ok2 = abs(mean - 0.3) < 0.02
+    print(f"stochastic rounding mean {mean:.3f} (want 0.3) "
+          f"{'OK' if ok2 else 'FAIL'}")
+    return (0 if ok else 1) + (0 if ok2 else 1)
+
+
+def check_ckpt_reshard() -> int:
+    """Save with an 8-device (2,4) mesh, restore onto (1,4) — elastic."""
+    from repro import configs, optim
+    from repro.models import lm, sharding as sr
+    from repro.train import checkpoint as ckpt
+
+    cfg = configs.get_smoke("qwen3-1.7b")
+    params = lm.init(cfg, jax.random.key(0))
+    mesh8 = _mesh((2, 4), ("data", "model"))
+    sh8 = sr.param_shardings(cfg, params, mesh8)
+    p8 = jax.tree.map(lambda a, s: jax.device_put(a, s), params, sh8)
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, {"params": p8})
+        assert ckpt.latest_step(d) == 7
+        mesh4 = _mesh((1, 4), ("data", "model"))
+        sh4 = sr.param_shardings(cfg, params, mesh4)
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                            params)
+        restored, step = ckpt.restore(d, 7, {"params": like},
+                                      shardings={"params": sh4})
+    same = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(params),
+                               jax.tree.leaves(restored["params"])))
+    print(f"ckpt reshard 8->4 devices: {'OK' if same else 'FAIL'}")
+    return 0 if same else 1
+
+
+CHECKS = {
+    "train_step": check_train_step,
+    "serve_step": check_serve_step,
+    "pipeline": check_pipeline,
+    "compress": check_compress,
+    "ckpt_reshard": check_ckpt_reshard,
+}
+
+
+def main(argv):
+    what = argv[1] if len(argv) > 1 else None
+    names = [what] if what else list(CHECKS)
+    fails = 0
+    for name in names:
+        fails += CHECKS[name]()
+    print(f"selfcheck: {fails} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

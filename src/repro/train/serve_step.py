@@ -1,0 +1,82 @@
+"""Serving: batched prefill + single-token decode with sharded KV/state
+caches.
+
+``lm.decode_step`` handles S >= 1 uniformly (the attention cache path
+appends a block of S tokens at the current position with intra-block
+causal masking), so prefill IS a decode step with S = prompt length —
+one code path, no cache-format skew between prefill and decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig
+from repro.models import lm, whisper, sharding as shard_rules
+
+
+def make_decode_fn(cfg: ModelConfig):
+    """Returns a decode fn with the exact positional signature for the
+    config: (params, cache, tokens[, embeds | enc_states])."""
+    if cfg.enc_dec:
+        def fn(params, cache, tokens, enc_states):
+            return whisper.decode(params, cfg, tokens, enc_states,
+                                  cache=cache)
+        return fn
+    if cfg.embed_inputs:
+        def fn(params, cache, tokens, embeds):
+            return lm.decode_step(params, cfg, tokens, cache,
+                                  embeds=embeds)
+        return fn
+
+    def fn(params, cache, tokens):
+        return lm.decode_step(params, cfg, tokens, cache)
+    return fn
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, params, cache):
+    pspecs = shard_rules.param_specs(cfg, params, mesh)
+    cspecs = shard_rules.cache_specs(cfg, cache, mesh)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return ns(pspecs), ns(cspecs)
+
+
+def jit_decode_step(cfg: ModelConfig, mesh: Mesh, params, cache,
+                    batch_size: int):
+    """Jitted one-token decode with explicit shardings (dry-run target).
+    The positional signature follows make_decode_fn for the config."""
+    ps, cs = serve_shardings(cfg, mesh, params, cache)
+    dp = shard_rules.dp_axes(mesh)
+    bdp = dp if batch_size % _sz(mesh, dp) == 0 else None
+    tok_sh = NamedSharding(mesh, P(bdp, None))
+    fn = make_decode_fn(cfg)
+    in_sh = [ps, cs, tok_sh]
+    if cfg.enc_dec or cfg.embed_inputs:
+        in_sh.append(NamedSharding(mesh, P(bdp, None, None)))
+    return jax.jit(fn, in_shardings=tuple(in_sh),
+                   out_shardings=(None, cs), donate_argnums=(1,))
+
+
+def _sz(mesh, axes):
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int,
+                    max_seq: int):
+    """Reference serving loop (single host): prefill then greedy decode."""
+    B, S = prompt.shape
+    cache = lm.init_cache(cfg, B, max_seq)
+    logits, cache = lm.decode_step(params, cfg, prompt, cache)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    out = [tok]
+    for _ in range(max_new - 1):
+        logits, cache = lm.decode_step(params, cfg, tok, cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

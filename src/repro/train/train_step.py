@@ -1,0 +1,161 @@
+"""Distributed train step: FSDP x TP x EP sharding, gradient
+accumulation over microbatches, remat, mixed precision, optional
+cross-pod int8 gradient compression.
+
+``make_train_step`` returns a jitted function with explicit
+in/out_shardings derived from repro.models.sharding, suitable both for
+real execution and for the .lower().compile() dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig
+from repro.models import lm, whisper, sharding as shard_rules
+from repro.optim.adamw import Optimizer
+
+
+def loss_for(cfg: ModelConfig):
+    return whisper.loss_fn if cfg.enc_dec else lm.loss_fn
+
+
+def _sz(mesh, axes):
+    import numpy as np
+    if not axes:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# ------------------------ optimizer state specs ------------------------
+
+def _path_key(path):
+    out = []
+    for k in path:
+        out.append(getattr(k, "key", None) if hasattr(k, "key")
+                   else getattr(k, "idx", None))
+    return tuple(out)
+
+
+def opt_state_specs(opt_shapes, params, pspecs):
+    """Specs for the optimizer state: leaves mirroring a parameter
+    (same path suffix and shape) inherit its spec (FSDP'd optimizer
+    state = ZeRO); everything else is replicated."""
+    pdict = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        pdict[_path_key(path)] = leaf.shape
+    sdict = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pspecs)[0]:
+        sdict[_path_key(path)] = leaf
+
+    def lookup(path, leaf):
+        key = _path_key(path)
+        for i in range(len(key)):
+            suf = key[i:]
+            if suf in pdict and pdict[suf] == leaf.shape:
+                return sdict[suf]
+        return P()
+
+    # pspecs leaves are PartitionSpecs (tuples!); stop tree traversal at them
+    return jax.tree_util.tree_map_with_path(lookup, opt_shapes)
+
+
+# ----------------------------- train step -----------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, optimizer: Optimizer,
+                    *, microbatches: int = 1, remat: bool = True,
+                    dtype=jnp.bfloat16, compress_grads: bool = False,
+                    logits_spec=None):
+    loss_fn = loss_for(cfg)
+    dp = shard_rules.dp_axes(mesh)
+    lspec = logits_spec
+
+    def step_fn(params, opt_state, batch):
+        def loss_of(p, b):
+            if cfg.enc_dec:
+                return loss_fn(p, cfg, b, dtype=dtype, logits_spec=lspec)
+            return loss_fn(p, cfg, b, remat=remat, dtype=dtype,
+                           logits_spec=lspec)
+
+        if microbatches > 1:
+            def resh(x):
+                bsz = x.shape[0]
+                b = x.reshape(microbatches, bsz // microbatches,
+                              *x.shape[1:])
+                # keep the batch dim sharded over DP through the
+                # reshape — without the constraint the SPMD partitioner
+                # falls back to full rematerialization (replicating the
+                # global batch per device) on the multi-pod mesh.
+                if bsz // microbatches % max(_sz(mesh, dp), 1) == 0:
+                    spec = P(None, dp, *([None] * (x.ndim - 1)))
+                    b = jax.lax.with_sharding_constraint(
+                        b, NamedSharding(mesh, spec))
+                return b
+            mbatch = jax.tree.map(resh, batch)
+
+            def acc(carry, mb):
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (carry[0] + l,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (lsum, gsum), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros),
+                                           mbatch)
+            loss = lsum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        if compress_grads and "pod" in mesh.axis_names:
+            from repro.train import compress
+            grads = compress.tag_for_compression(grads)
+
+        new_params, new_opt, metrics = optimizer.update(grads, opt_state,
+                                                        params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return step_fn
+
+
+def shardings_for(cfg: ModelConfig, mesh: Mesh, params, opt_shapes,
+                  batch, mode: str = "2d"):
+    """(params, opt_state, batch) NamedShardings + metric replication."""
+    pspecs = shard_rules.param_specs(cfg, params, mesh, mode)
+    ospecs = opt_state_specs(opt_shapes, params, pspecs)
+    bspecs = shard_rules.batch_specs(batch, mesh, mode)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return ns(pspecs), ns(ospecs), ns(bspecs)
+
+
+def jit_train_step(cfg: ModelConfig, mesh: Mesh, optimizer: Optimizer,
+                   params, opt_shapes, batch, shard_mode: str = "2d",
+                   **kw):
+    """Fully-sharded jitted step (also the dry-run lowering target)."""
+    ps, os_, bs = shardings_for(cfg, mesh, params, opt_shapes, batch,
+                                shard_mode)
+    # pin per-microbatch logits (B_mb, S, V) to (DP, None, TP): without
+    # the constraint the SPMD partitioner replicates them across the
+    # pod axis (hundreds of GB/dev for big-vocab archs).
+    dp = shard_rules.dp_axes(mesh)
+    mb = kw.get("microbatches", 1)
+    B = next(iter(jax.tree.leaves(batch))).shape[0]
+    bdp = dp if (B // mb) % max(_sz(mesh, dp), 1) == 0 else None
+    vshard = "model" if ("model" in mesh.axis_names
+                         and cfg.vocab % mesh.shape["model"] == 0
+                         and shard_mode == "2d") else None
+    kw.setdefault("logits_spec",
+                  NamedSharding(mesh, P(bdp, None, vshard)))
+    fn = make_train_step(cfg, mesh, optimizer, **kw)
+    return jax.jit(fn,
+                   in_shardings=(ps, os_, bs),
+                   out_shardings=(ps, os_, None),
+                   donate_argnums=(0, 1))

@@ -1,0 +1,132 @@
+"""Paper cost-model validation: the traced collective costs of the
+implemented algorithms must match the Sec. III/VII closed forms, and the
+Sec. VIII/IX tables must reproduce the paper's asymptotic statements.
+
+These tests ARE the paper's 'experiments': the paper has no wall-clock
+results — its contribution is the cost analysis, which we check against
+the instrumented implementation (see repro.core.comm)."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import comm, cost_model as cm, tuning
+
+
+# ---------------- closed-form model sanity (Secs. II-VII) ----------------
+
+def test_collective_costs_match_paper_forms():
+    p = 16
+    n = 1024
+    assert cm.allgather(n, p).s == math.log2(p)
+    assert cm.allgather(n, p).w == n
+    assert cm.allreduction(n, p).s == 2 * math.log2(p)
+    assert cm.allreduction(n, p).w == 2 * n
+    assert cm.allreduction(n, p).f == n
+    assert cm.alltoall(n, p).w == n * math.log2(p) / 2
+    # degenerate axis: no data moves
+    assert cm.allgather(n, 1).w == 0
+    assert cm.allreduction(n, 1).w == 0
+
+
+def test_mm_cost_leading_order():
+    n, k, p1, p2 = 1 << 12, 1 << 10, 8, 4
+    p = p1 * p1 * p2
+    lead = n * n / p1 ** 2 + 2 * n * k / (p1 * p2)
+    # our schedule: leading order exactly, plus the nk/p permute
+    c = cm.mm_cost(n, k, p, p1, p2)
+    assert c.w == pytest.approx(lead + n * k / p, rel=0.01)
+    assert c.f == pytest.approx(n * n * k / p, rel=0.01)
+    assert c.s == pytest.approx(math.log2(p2) + 2 * math.log2(p1) + 1,
+                                rel=0.01)
+    # the paper's schedule carries the two O(nk log(p)/p) transposes
+    cp = cm.mm_cost_paper(n, k, p, p1, p2)
+    assert cp.w == pytest.approx(lead + 2 * n * k * math.log2(p) / p
+                                 + n * k / p, rel=0.01)
+    assert cp.w > c.w
+
+
+def test_tri_inv_cost_is_polylog_latency():
+    n, p1, p2 = 1 << 14, 8, 16
+    c = cm.tri_inv_cost(n, p1, p2)
+    p = p1 * p1 * p2
+    assert c.s == pytest.approx(math.log2(p) ** 2)
+    assert c.f == pytest.approx(cm.NU * n ** 3 / (8 * p))
+
+
+def test_paper_table_regimes():
+    # Sec. IX comparison table: latency improvement factor in 3D regime
+    n, k, p = 1 << 16, 1 << 10, 1 << 9
+    row = cm.paper_table_row(n, k, p)
+    assert row["regime"] == "3D"
+    ratio = row["standard"]["S"] / row["new"]["S"]
+    # expected Theta((n/k)^{1/6} p^{2/3}); check within a log factor
+    expect = (n / k) ** (1 / 6) * p ** (2 / 3)
+    assert ratio == pytest.approx(expect, rel=3.0)
+    # bandwidth parity in 3D
+    assert row["standard"]["W"] == pytest.approx(row["new"]["W"])
+    # 2D regime: bandwidth improves by log p
+    n2 = int(4 * k * math.sqrt(p) * 4)
+    row2 = cm.paper_table_row(n2, k, p)
+    assert row2["regime"] == "2D"
+    assert row2["standard"]["W"] / row2["new"]["W"] == \
+        pytest.approx(math.log2(p))
+
+
+# ---------------- traced implementation vs closed forms ----------------
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(shape, np.float32)
+
+
+def test_traced_mm3d_matches_model():
+    from repro.core import grid as gridlib, mm3d
+    grid = gridlib.make_trsm_mesh(1, 1)   # single device: shapes only
+    # trace the SHARD body at the logical per-device shapes for a
+    # virtual p1=p2=2 grid: comm records use the mesh axis sizes, so we
+    # must trace on a real multi-device mesh -> covered in selfcheck;
+    # here we validate the single-device degenerate case (no comm).
+    fn = mm3d.mm3d_fn(grid, 32, 32, 16)
+    t = comm.traced_cost(fn, _sds((32, 32)), _sds((32, 16)))
+    assert t.s == 0 and t.w == 0
+
+
+def test_tuning_regime_boundaries():
+    p = 64
+    k = 1024
+    assert tuning.regime(int(4 * k / p) - 100, k, p) == "1d"
+    assert tuning.regime(int(4 * k * math.sqrt(p)) + 100, k, p) == "2d"
+    assert tuning.regime(4 * k, k, p) == "3d"
+
+
+def test_tune_returns_feasible_plan():
+    for (n, k, p) in [(1 << 14, 1 << 10, 64), (1 << 12, 1 << 12, 16),
+                      (256, 1 << 14, 64), (1 << 15, 128, 256)]:
+        plan = tuning.tune(n, k, p)
+        assert plan.p1 * plan.p1 * plan.p2 == p
+        assert n % plan.n0 == 0
+        assert plan.n0 % (plan.p1 * plan.p2) == 0
+        assert plan.cost.f > 0
+
+
+def test_tune_matches_ideal_regime_shape():
+    # 2D regime should pick a flat grid (p2 small), 1D a tall one
+    k = 1 << 10
+    p = 64
+    plan2d = tuning.tune(int(8 * k * math.sqrt(p)), k, p)
+    plan1d = tuning.tune(max(4, int(2 * k / p)), k, p)
+    assert plan2d.p1 >= plan1d.p1
+    assert plan1d.p2 >= plan2d.p2
+
+
+def test_it_inv_cost_beats_rec_latency_in_3d():
+    # the headline claim: S improvement Theta((n/k)^{1/6} p^{2/3})
+    n, k, p = 1 << 16, 1 << 10, 1 << 9
+    rec = cm.rec_trsm_cost(n, k, p)
+    plan = tuning.tune(n, k, p)
+    it = plan.cost
+    assert it.s < rec.s / 20   # orders of magnitude, conservatively
+    # flops within the paper's 2x
+    assert it.f <= 2.2 * rec.f

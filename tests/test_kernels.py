@@ -1,0 +1,132 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against
+the ref.py pure-jnp oracles (kernels execute under interpret=True on
+CPU — the exact TPU program body, run in Python)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.trmm import trmm
+from repro.kernels.tri_inv_block import tri_inv_blocks
+from repro.kernels.trsm_block import trsm_substitution
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def rand_tril(rng, n, dtype, batch=None):
+    shape = (n, n) if batch is None else (batch, n, n)
+    L = np.tril(rng.standard_normal(shape))
+    L = L + n * np.broadcast_to(np.eye(n), shape)
+    return jnp.asarray(L, dtype=dtype)
+
+
+# ------------------------------ trmm ------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,k,bt,bn", [
+    (128, 128, 128, 128),
+    (256, 128, 128, 128),
+    (256, 256, 64, 128),
+    (64, 32, 32, 32),
+    (128, 384, 64, 128),
+    (512, 64, 128, 64),
+])
+def test_trmm_matches_ref(n, k, bt, bn, dtype):
+    rng = np.random.default_rng(n + k)
+    L = rand_tril(rng, n, dtype)
+    X = jnp.asarray(rng.standard_normal((n, k)), dtype=dtype)
+    got = trmm(L, X, bt=bt, bn=bn, interpret=True)
+    want = ref.trmm_ref(L.astype(jnp.float32), X.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(dtype))
+
+
+def test_trmm_ignores_upper_triangle():
+    """Tiles above the diagonal must never contribute, even if nonzero."""
+    rng = np.random.default_rng(0)
+    n, k = 128, 64
+    Lfull = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    got = trmm(Lfull, X, bt=32, bn=32, interpret=True)
+    want = ref.trmm_ref(Lfull, X)   # ref applies tril
+    # diagonal tiles are loaded as-is: zero the intra-tile upper part
+    Ltl = jnp.tril(Lfull)
+    got2 = trmm(Ltl, X, bt=32, bn=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------- tri_inv_block ---------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("m,n0", [(1, 8), (4, 16), (8, 32), (2, 64),
+                                  (16, 4), (3, 128), (1, 256)])
+def test_tri_inv_blocks_matches_ref(m, n0, dtype):
+    rng = np.random.default_rng(m * n0)
+    Ls = rand_tril(rng, n0, dtype, batch=m)
+    got = tri_inv_blocks(Ls, interpret=True)
+    want = ref.tri_inv_blocks_ref(Ls)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # L L^-1 == I, the stronger invariant
+    prod = np.einsum("bij,bjk->bik", np.asarray(got), np.asarray(Ls))
+    np.testing.assert_allclose(prod, np.broadcast_to(np.eye(n0), prod.shape),
+                               atol=1e-4)
+
+
+@given(m=st.sampled_from([1, 2, 4]), n0=st.sampled_from([4, 8, 16, 32]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_tri_inv_blocks_property(m, n0, seed):
+    rng = np.random.default_rng(seed)
+    Ls = rand_tril(rng, n0, jnp.float32, batch=m)
+    got = tri_inv_blocks(Ls, interpret=True)
+    prod = np.einsum("bij,bjk->bik", np.asarray(got), np.asarray(Ls))
+    np.testing.assert_allclose(prod, np.broadcast_to(np.eye(n0), prod.shape),
+                               atol=1e-3)
+
+
+# ---------------------------- trsm_block ----------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("m,n0,k,bn", [(1, 32, 64, 64), (4, 16, 32, 32),
+                                       (2, 64, 128, 64), (1, 128, 128, 128)])
+def test_trsm_substitution_matches_ref(m, n0, k, bn, dtype):
+    rng = np.random.default_rng(n0 * k)
+    Ls = rand_tril(rng, n0, dtype, batch=m)
+    Bs = jnp.asarray(rng.standard_normal((m, n0, k)), dtype=dtype)
+    got = trsm_substitution(Ls, Bs, bn=bn, interpret=True)
+    want = jax.vmap(ref.trsm_ref)(Ls, Bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_trsm_substitution_unbatched():
+    rng = np.random.default_rng(3)
+    L = rand_tril(rng, 32, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    got = trsm_substitution(L, B, bn=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.trsm_ref(L, B)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------- kernel <-> solver hook -------------------------
+
+def test_block_inv_kernel_hook_in_local_solver():
+    """The Pallas batched inverter plugs into it_inv_trsm_local."""
+    from repro.core import blocked
+    rng = np.random.default_rng(7)
+    n, k, n0 = 64, 16, 16
+    L = rand_tril(rng, n, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    X = blocked.it_inv_trsm_local(L, B, n0, block_inv=ops.block_inv_kernel)
+    want = ref.trsm_ref(L, B)
+    np.testing.assert_allclose(np.asarray(X), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

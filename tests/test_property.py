@@ -1,0 +1,125 @@
+"""Hypothesis property tests for the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocked
+from repro.core.grid import (cyclic_perm, inv_perm, to_cyclic_matrix,
+                             from_cyclic_matrix, to_cyclic_rows,
+                             from_cyclic_rows)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+pow2 = st.sampled_from([1, 2, 4, 8, 16, 32, 64])
+
+
+@given(n=pow2, p=pow2)
+@settings(max_examples=40, deadline=None)
+def test_cyclic_perm_roundtrip(n, p):
+    if p > n or n % p:
+        return
+    perm = cyclic_perm(n, p)
+    assert np.array_equal(np.sort(perm), np.arange(n))
+    assert np.array_equal(perm[inv_perm(perm)], np.arange(n))
+    a = np.random.default_rng(0).standard_normal((n, 3))
+    assert np.array_equal(from_cyclic_rows(to_cyclic_rows(a, p), p), a)
+
+
+@given(n=st.sampled_from([8, 16, 32]), pr=st.sampled_from([1, 2, 4]),
+       pc=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=30, deadline=None)
+def test_cyclic_matrix_roundtrip(n, pr, pc):
+    a = np.random.default_rng(1).standard_normal((n, n))
+    assert np.array_equal(
+        from_cyclic_matrix(to_cyclic_matrix(a, pr, pc), pr, pc), a)
+
+
+@given(n=st.sampled_from([1, 2, 3, 4, 7, 8, 16, 33, 64]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_tri_inv_doubling_identity(n, seed):
+    rng = np.random.default_rng(seed)
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    Li = blocked.tri_inv_doubling(jnp.asarray(L))
+    np.testing.assert_allclose(np.asarray(Li) @ L, np.eye(n), atol=1e-8)
+    # inverse of lower-triangular stays lower-triangular
+    assert np.allclose(np.triu(np.asarray(Li), 1), 0.0)
+
+
+@given(n=st.sampled_from([8, 16, 32, 64]),
+       kk=st.sampled_from([1, 2, 5, 16, 64]),
+       n0=st.sampled_from([1, 2, 4, 8, 16]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_it_inv_trsm_solves(n, kk, n0, seed):
+    if n % n0:
+        return
+    rng = np.random.default_rng(seed)
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    B = rng.standard_normal((n, kk))
+    X = blocked.it_inv_trsm_local(jnp.asarray(L), jnp.asarray(B), n0)
+    np.testing.assert_allclose(np.asarray(L @ X), B, atol=1e-8)
+
+
+@given(n=st.sampled_from([8, 16, 32]), kk=st.sampled_from([1, 4, 8]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_inv_and_rec_agree(n, kk, seed):
+    """The paper's two algorithm families must produce the same solve."""
+    rng = np.random.default_rng(seed)
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    B = rng.standard_normal((n, kk))
+    Xi = blocked.it_inv_trsm_local(jnp.asarray(L), jnp.asarray(B), 4)
+    Xr = blocked.rec_trsm_local(jnp.asarray(L), jnp.asarray(B), 4)
+    np.testing.assert_allclose(np.asarray(Xi), np.asarray(Xr), atol=1e-8)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_upper_solve_reduction(seed):
+    rng = np.random.default_rng(seed)
+    n, kk = 16, 4
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    B = rng.standard_normal((n, kk))
+    solver = lambda l, b: blocked.it_inv_trsm_local(l, b, 4)
+    XU = blocked.solve_upper(jnp.asarray(L.T), jnp.asarray(B), solver)
+    np.testing.assert_allclose(L.T @ np.asarray(XU), B, atol=1e-8)
+
+
+@given(n=st.sampled_from([8, 16, 32]), bs=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_cholesky_factorization(n, bs, seed):
+    if bs > n:
+        return
+    from repro.core import cholesky
+    rng = np.random.default_rng(seed)
+    M = rng.standard_normal((n, n))
+    A = M @ M.T + n * np.eye(n)
+    L = cholesky.chol_blocked_local(jnp.asarray(A), bs)
+    np.testing.assert_allclose(np.asarray(L @ L.T), A, atol=1e-7)
+
+
+def test_cost_model_monotonicity():
+    """More processors never increases per-processor flop cost; latency
+    of It-Inv never beats log^2 p."""
+    from repro.core import cost_model as cm, tuning
+    import math
+    for p in [16, 64, 256, 1024]:
+        plan = tuning.tune(1 << 14, 1 << 10, p)
+        assert plan.cost.s >= math.log2(p) ** 2 * 0.5
+    f_prev = None
+    for p in [16, 64, 256]:
+        plan = tuning.tune(1 << 14, 1 << 10, p)
+        if f_prev is not None:
+            assert plan.cost.f <= f_prev * 1.05
+        f_prev = plan.cost.f

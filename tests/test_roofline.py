@@ -1,0 +1,106 @@
+"""Roofline accounting validation.
+
+The analytic flop model (repro.roofline.model) is validated against
+XLA's cost_analysis on an UNROLLED lowering (no while loops, so the
+while-body-once caveat doesn't apply).  Also checks the HLO collective
+parser on a known program."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.roofline import analysis, model
+
+
+def _flops_of_unrolled(cfg, B, S):
+    params = jax.eval_shape(lambda: lm.init(cfg, jax.random.key(0)))
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def fwd(p, t):
+        return lm.forward(p, cfg, t, unroll=True, dtype=jnp.float32)[0]
+
+    compiled = jax.jit(fwd).lower(params, toks).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "granite-8b", "xlstm-1.3b"])
+def test_analytic_flops_match_unrolled_compile(arch):
+    cfg = configs.get_smoke(arch)
+    B, S = 2, 128
+    sh = ShapeConfig("t", S, B, "prefill")
+    got = _flops_of_unrolled(cfg, B, S)
+    want = model.forward_flops(cfg, sh, B * S)
+    # matmul-dominated accounting: within 30% (elementwise ops and
+    # softmax are uncounted; attention ctx is the causal average)
+    assert 0.6 * want < got < 1.6 * want, (arch, got, want)
+
+
+def test_analytic_flops_scale_with_depth_and_tokens():
+    cfg = configs.get_smoke("granite-8b")
+    sh1 = ShapeConfig("a", 128, 2, "prefill")
+    sh2 = ShapeConfig("b", 256, 2, "prefill")
+    f1 = model.forward_flops(cfg, sh1, 2 * 128)
+    f2 = model.forward_flops(cfg, sh2, 2 * 256)
+    assert f2 > 1.9 * f1   # superlinear (attention) but ~2x for small S
+    cfg2 = dataclasses.replace(cfg, n_layers=cfg.n_layers * 2)
+    assert model.forward_flops(cfg2, sh1, 256) > \
+        1.5 * model.forward_flops(cfg, sh1, 256)
+
+
+def test_cell_model_terms_positive_and_bottleneck():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        for shp in configs.SHAPES.values():
+            ok, _ = configs.shape_applicable(cfg, shp)
+            if not ok:
+                continue
+            cm = model.cell_model(cfg, shp, {"data": 16, "model": 16},
+                                  microbatches=4)
+            assert cm.flops > 0 and cm.hbm_bytes > 0
+            assert cm.bottleneck in ("compute", "memory", "collective")
+            assert cm.useful_ratio <= 1.05, (arch, shp.name,
+                                             cm.useful_ratio)
+            assert cm.roofline_fraction <= 1.0
+
+
+def test_hlo_collective_parser():
+    mesh = jax.make_mesh((1,), ("x",))
+    # single-device: no collectives
+    f = jax.jit(lambda a: a @ a)
+    c = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    colls = analysis.parse_collectives(c.as_text())
+    assert sum(v["bytes"] for v in colls.values()) == 0
+
+    txt = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[64,512]{1,0} all-gather(%y), dimensions={0}
+  %cp = f32[32]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    colls = analysis.parse_collectives(txt)
+    assert colls["all-reduce"]["bytes"] == 128 * 256 * 4
+    assert colls["all-gather"]["bytes"] == 64 * 512 * 2
+    assert colls["collective-permute"]["bytes"] == 32 * 4
+
+
+def test_model_flops_for_kinds():
+    cfg = configs.get("qwen3-1.7b")
+    tr = analysis.model_flops_for(cfg, configs.SHAPES["train_4k"])
+    pf = analysis.model_flops_for(cfg, configs.SHAPES["prefill_32k"])
+    dc = analysis.model_flops_for(cfg, configs.SHAPES["decode_32k"])
+    assert tr == 6.0 * cfg.flop_param_count * 4096 * 256
+    assert pf == 2.0 * cfg.flop_param_count * 32768 * 32
+    assert dc == 2.0 * cfg.flop_param_count * 128
+    # flop params exclude the embedding gather but include the head
+    # (equal for tied embeddings, strictly less for untied)
+    assert cfg.flop_param_count == cfg.active_param_count  # qwen3: tied
+    g = configs.get("granite-8b")
+    assert g.flop_param_count < g.active_param_count       # untied

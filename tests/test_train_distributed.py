@@ -1,0 +1,30 @@
+"""Multi-device training/serving stack: subprocess selfchecks (8 forced
+host devices; the main pytest process keeps 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_selfcheck(name: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.train.selfcheck", name],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, \
+        f"selfcheck {name} failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("check", ["train_step", "serve_step", "pipeline",
+                                   "compress", "ckpt_reshard"])
+def test_train_selfcheck(check):
+    out = run_selfcheck(check)
+    assert "FAIL" not in out
+    assert "0 failures" in out

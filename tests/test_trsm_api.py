@@ -1,0 +1,89 @@
+"""Public TRSM API: lower/upper/transposed solves, SPD solves, and the
+comm tracer's scope bookkeeping."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import blocked, comm, grid as gridlib
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return gridlib.make_trsm_mesh(1, 1)
+
+
+def _mats(n=64, k=8, seed=0):
+    rng = np.random.default_rng(seed)
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    B = rng.standard_normal((n, k))
+    return L, B
+
+
+def test_trsm_lower(grid):
+    L, B = _mats()
+    X = core.trsm(L, B, grid, method="inv", n0=16)
+    np.testing.assert_allclose(L @ X, B, atol=1e-3)
+
+
+def test_trsm_upper(grid):
+    L, B = _mats()
+    U = L.T
+    X = core.trsm(U, B, grid, method="inv", n0=16, lower=False)
+    np.testing.assert_allclose(U @ X, B, atol=1e-3)
+
+
+def test_trsm_transposed(grid):
+    L, B = _mats()
+    X = core.trsm(L, B, grid, method="inv", n0=16, transpose=True)
+    np.testing.assert_allclose(L.T @ X, B, atol=1e-3)
+
+
+def test_trsm_upper_rec(grid):
+    L, B = _mats()
+    X = core.trsm(L.T, B, grid, method="rec", n0=16, lower=False)
+    np.testing.assert_allclose(L.T @ X, B, atol=1e-3)
+
+
+# --------------------------- comm tracer ---------------------------
+
+def test_comm_scope_multiplier():
+    import jax.numpy as jnp
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.sharding import PartitionSpec as P
+
+    def body(a):
+        with comm.scope(5):
+            b = comm.all_gather(a, "x", axis=0, tiled=True)
+        return b
+
+    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
+                               out_specs=P("x")))
+    with comm.trace() as t:
+        jax.eval_shape(fn, jax.ShapeDtypeStruct((4, 4), np.float32))
+    # p=1: zero cost, but the record must carry the 5x multiplier
+    assert len(t.records) == 1
+    assert t.records[0].mult == 5.0
+    assert t.s == 0.0     # log2(1) = 0
+
+
+def test_comm_nested_scopes():
+    with comm.trace() as t:
+        with comm.scope(3):
+            with comm.scope(4):
+                comm._rec("allgather", "x", 8, 100, s=3.0, w=100.0, f=0.0)
+    assert t.records[0].mult == 12.0
+    assert t.s == 36.0
+    assert t.w == 1200.0
+
+
+def test_traced_cost_by_op():
+    with comm.trace() as t:
+        comm._rec("allreduce", "y", 4, 10, s=4.0, w=20.0, f=10.0)
+        comm._rec("allreduce", "y", 4, 10, s=4.0, w=20.0, f=10.0)
+        comm._rec("permute", "x", 2, 5, s=1.0, w=5.0, f=0.0)
+    ops = t.by_op()
+    assert ops["allreduce"]["count"] == 2
+    assert ops["allreduce"]["w"] == 40.0
+    assert ops["permute"]["s"] == 1.0
