@@ -1,0 +1,98 @@
+"""Per-solve serving latency: host-round-trip vs device-resident.
+
+Quantifies the tentpole of the device-resident solve pipeline.  Three
+configurations of repeated solves against a FIXED factor:
+
+  legacy   — what every solve() call used to do: copy L and B to host
+             NumPy, permute to cyclic storage on the CPU, re-upload,
+             and rebuild (re-trace, re-compile) the shard_map program.
+  cached   — core.trsm today: on-device permutations, compiled program
+             from the CompiledSolverCache (L still re-distributed per
+             call — the one-shot API's cost).
+  session  — TrsmSession steady state: factor resident in cyclic device
+             storage, one compiled program per RHS shape, donated B;
+             zero host transfers, zero retraces.
+
+Run standalone or via ``python -m benchmarks.run serve_latency``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time_per_call(fn, reps: int) -> float:
+    import jax
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _legacy_solve(L, B, grid, n0):
+    """The pre-refactor end-to-end path, reproduced for comparison:
+    host-side cyclic permutation + a freshly built (hence freshly
+    traced) solver program on every call."""
+    import jax.numpy as jnp
+    from repro.core import inv_trsm
+    from repro.core.grid import (to_cyclic_matrix, to_cyclic_rows,
+                                 from_cyclic_rows)
+    p1, p2 = grid.p1, grid.p2
+    L_cyc = to_cyclic_matrix(np.asarray(L), p1, p1 * p2)
+    B_cyc = to_cyclic_rows(np.asarray(B), p1)
+    fn = inv_trsm.it_inv_trsm_fn(grid, B.shape[0], B.shape[1], n0,
+                                 L.dtype)
+    X_cyc = fn(jnp.asarray(L_cyc), jnp.asarray(B_cyc))
+    return from_cyclic_rows(np.asarray(X_cyc), p1)
+
+
+def run(report):
+    import jax
+    import jax.numpy as jnp
+    from repro import core
+    from repro.core import grid as gridlib
+
+    rows = []
+    cases = [(1, 1, 256, 16, 32), (2, 2, 256, 16, 32)]
+    for (p1, p2, n, k, n0) in cases:
+        if p1 * p1 * p2 > len(jax.devices()):
+            continue
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        rng = np.random.default_rng(0)
+        L = np.tril(rng.standard_normal((n, n))).astype(np.float32) \
+            + n * np.eye(n, dtype=np.float32)
+        B = rng.standard_normal((n, k)).astype(np.float32)
+
+        reps_slow, reps = 3, 20
+        t_legacy = _time_per_call(
+            lambda: _legacy_solve(L, B, grid, n0), reps_slow)
+
+        core.trsm(L, B, grid, method="inv", n0=n0)        # warm the cache
+        t_cached = _time_per_call(
+            lambda: core.trsm(L, B, grid, method="inv", n0=n0), reps)
+
+        sess = core.TrsmSession(L, grid, method="inv", n0=n0).warmup(k)
+        Bs = [sess.place_rhs(rng.standard_normal((n, k)).astype(np.float32))
+              for _ in range(reps)]
+        it = iter(Bs)
+        with jax.transfer_guard("disallow"):
+            t_session = _time_per_call(lambda: sess.solve(next(it)), reps)
+
+        row = dict(p1=p1, p2=p2, n=n, k=k, n0=n0,
+                   legacy_ms=t_legacy * 1e3, cached_ms=t_cached * 1e3,
+                   session_ms=t_session * 1e3,
+                   speedup=t_legacy / t_session)
+        rows.append(row)
+        report(f"p1={p1} p2={p2} n={n} k={k}: "
+               f"legacy {row['legacy_ms']:8.2f} ms | "
+               f"cached {row['cached_ms']:7.2f} ms | "
+               f"session {row['session_ms']:6.2f} ms | "
+               f"{row['speedup']:6.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run(print)

@@ -29,6 +29,8 @@ BENCHES = [
      "benchmarks.bench_stability"),
     ("gemm_fraction", "TPU MXU-eligible flop share",
      "benchmarks.bench_gemm_fraction"),
+    ("serve_latency", "device-resident solve pipeline latency",
+     "benchmarks.bench_serve_latency"),
 ]
 
 

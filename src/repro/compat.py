@@ -1,0 +1,66 @@
+"""jax version-compatibility shims — the single place that knows which
+jax API surface is installed.
+
+The codebase targets the modern jax API (``jax.shard_map``,
+``jax.lax.pcast``, ``AbstractMesh(axis_sizes, axis_names)``); older
+releases (e.g. 0.4.x, as shipped in some containers) spell these
+``jax.experimental.shard_map.shard_map`` (with ``check_rep`` instead of
+``check_vma``), have no ``pcast`` (no varying-manual-axes bookkeeping to
+satisfy), and construct ``AbstractMesh`` from a tuple of (name, size)
+pairs.  Every module that needs one of these goes through this file, so
+a jax upgrade/downgrade is a one-file change.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_PCAST = hasattr(jax.lax, "pcast")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    On old jax the ``check_vma`` knob maps to ``check_rep=False``: the
+    0.4.x replication checker predates the varying-manual-axes model and
+    rejects valid programs that the modern checker accepts (e.g. psum
+    results consumed at different manual-axis subsets)."""
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental import shard_map as _sm
+    return _sm.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
+def pcast_varying(x, axes):
+    """``jax.lax.pcast(x, axes, to="varying")`` where it exists; the
+    identity elsewhere (pre-vma jax has no varying/replicated types to
+    reconcile, so the cast is purely bookkeeping)."""
+    if _HAS_PCAST:
+        return jax.lax.pcast(x, axes, to="varying")
+    return x
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (new jax) or the classic constant-folded
+    ``psum(1, axis)`` idiom (0.4.x), which returns a concrete int for a
+    unit constant.  Accepts a single name or a tuple of names."""
+    if hasattr(jax.lax, "axis_size"):
+        import math
+        if isinstance(axis_name, (tuple, list)):
+            return int(math.prod(jax.lax.axis_size(a) for a in axis_name))
+        return int(jax.lax.axis_size(axis_name))
+    return int(jax.lax.psum(1, axis_name))
+
+
+def abstract_mesh(axis_sizes, axis_names, **kw):
+    """``AbstractMesh`` across the 0.4.x -> 0.5+ signature change:
+    new jax wants ``(axis_sizes, axis_names)``, 0.4.x wants a single
+    ``shape_tuple`` of (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names), **kw)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)), **kw)

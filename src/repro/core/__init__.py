@@ -3,6 +3,9 @@
 Public API:
 
     trsm(L, B, grid, method="inv"|"rec", ...)   distributed solve L X = B
+    TrsmSession(L, grid, ...)                   factor resident on device,
+                                                serves batched RHS
+    CompiledSolverCache / default_cache()       LRU of compiled programs
     tri_inv.invert(L, grid)                     distributed L^{-1}
     cholesky.cholesky(A, grid)                  distributed chol via inversion
     mm3d.matmul(L, X, grid)                     Sec. III 3D matmul
@@ -11,11 +14,13 @@ Public API:
 """
 
 from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
+from repro.core.session import (  # noqa: F401
+    CompiledSolverCache, TrsmSession, default_cache)
 
 
 def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
          machine=None, lower: bool = True, transpose: bool = False,
-         **kw):
+         mode: str | None = None, block_inv=None):
     """Solve op(L) X = B on a TrsmGrid.
 
     method="inv":  It-Inv-TRSM (paper Secs. VI-VII, the contribution).
@@ -27,29 +32,21 @@ def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
                    on low-alpha ICI).
     lower/transpose: upper-triangular and transposed solves reduce to
     the lower case by the reversal identity (DESIGN.md Sec. 3); the
-    reversal is an index permutation applied at distribution time.
+    reversal is an index permutation *folded into the distribution-time
+    on-device gather* (repro.core.session), not host slicing.
     n0 defaults to the Sec. VIII tuned block size.
+
+    Device-resident: the compiled program (B-permute -> sweep ->
+    X-unpermute) comes from the process-wide CompiledSolverCache, so
+    repeated same-shape calls never re-trace.  For repeated solves
+    against a FIXED factor use :class:`TrsmSession`, which also keeps
+    L distributed across calls.
     """
-    if transpose:
-        # op(L) = L^T: L^T X = B  <=>  reversed lower solve on L^T
-        return trsm(L.T, B, grid, method=method, n0=n0, machine=machine,
-                    lower=not lower, **kw)
-    if not lower:
-        # U X = B with U upper: (J U J) is lower; solve on reversed data
-        Xr = trsm(L[::-1, ::-1], B[::-1], grid, method=method, n0=n0,
-                  machine=machine, lower=True, **kw)
-        return Xr[::-1]
+    import jax.numpy as jnp
+    from repro.core import session
     n, k = B.shape
-    if method == "auto":
-        from repro.core import tuning
-        method, _, _ = tuning.choose_method(n, k, grid.p, machine)
-    if method == "inv":
-        from repro.core import inv_trsm, tuning
-        if n0 is None:
-            plan = tuning.tune_for_grid(n, k, grid)
-            n0 = plan.n0
-        return inv_trsm.solve(L, B, grid, n0, **kw)
-    if method == "rec":
-        from repro.core import rec_trsm
-        return rec_trsm.solve(L, B, grid, n0=n0, **kw)
-    raise ValueError(method)
+    prog = session.get_solver(grid, n=n, k=k, dtype=jnp.result_type(L),
+                              method=method, n0=n0, mode=mode,
+                              lower=lower, transpose=transpose,
+                              machine=machine, block_inv=block_inv)
+    return prog.solve(prog.prep(L), B)

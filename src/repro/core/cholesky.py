@@ -27,9 +27,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import blocked, comm
 from repro.core import tri_inv as ti
-from repro.core.grid import TrsmGrid, to_cyclic_matrix, from_cyclic_matrix
+from repro.core.grid import TrsmGrid
 from repro.core.mm3d import mm3d_shard
 
 MESH_AXES = ("x", "y", "z")
@@ -81,11 +83,12 @@ def transpose_shard(Aloc, *, mr: int, nc: int, p1: int, p2: int):
     return T
 
 
+@functools.lru_cache(maxsize=64)
 def transpose_fn(grid: TrsmGrid, mr: int, nc: int):
     body = functools.partial(transpose_shard, mr=mr, nc=nc,
                              p1=grid.p1, p2=grid.p2)
     spec = P("x", ("z", "y"))
-    return jax.jit(jax.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
+    return jax.jit(compat.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
                                  out_specs=spec))
 
 
@@ -125,23 +128,30 @@ def _chol_rec(Aloc, *, n, n0, p1, p2):
     return jnp.concatenate([top, bot], axis=0)
 
 
+@functools.lru_cache(maxsize=64)
 def cholesky_fn(grid: TrsmGrid, n: int, n0: int | None = None):
-    """Jitted distributed Cholesky for fixed shapes (cyclic storage)."""
+    """Jitted distributed Cholesky for fixed shapes (cyclic storage).
+    Memoized: repeated same-shape factorizations reuse the compiled
+    program."""
     n0 = n0 or max(grid.p1 * grid.p1 * grid.p2, n // 8)
     while n % n0 != 0:
         n0 *= 2
     body = functools.partial(_chol_rec, n=n, n0=min(n0, n),
                              p1=grid.p1, p2=grid.p2)
     spec = P("x", ("z", "y"))
-    return jax.jit(jax.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
+    return jax.jit(compat.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
                                  out_specs=spec))
 
 
 def cholesky(A, grid: TrsmGrid, n0: int | None = None):
-    """Natural-layout convenience entry point (A symmetric PD)."""
-    import numpy as np
+    """Natural-layout convenience entry point (A symmetric PD).
+
+    Device-resident: the cyclic permutations run as on-device gathers
+    (repro.core.grid.cyclic_matrix_device) and the compiled program is
+    memoized — no host round-trip, no per-call retrace."""
+    from repro.core.grid import cyclic_matrix_device
     n = A.shape[0]
     p1, p2 = grid.p1, grid.p2
-    Ac = to_cyclic_matrix(np.asarray(A), p1, p1 * p2)
+    Ac = cyclic_matrix_device(jnp.asarray(A), p1, p1 * p2)
     Lc = cholesky_fn(grid, n, n0)(Ac)
-    return from_cyclic_matrix(np.asarray(Lc), p1, p1 * p2)
+    return cyclic_matrix_device(Lc, p1, p1 * p2, inverse=True)

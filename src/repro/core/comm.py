@@ -36,6 +36,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def _lg(p: float) -> float:
     return math.log2(max(p, 1.0))
@@ -115,9 +117,7 @@ def scope(mult: float):
 
 
 def _axis_size(axis_name) -> int:
-    if isinstance(axis_name, (tuple, list)):
-        return int(math.prod(jax.lax.axis_size(a) for a in axis_name))
-    return int(jax.lax.axis_size(axis_name))
+    return int(compat.axis_size(axis_name))
 
 
 def _size(x) -> int:

@@ -24,8 +24,10 @@ Conventions used by all distributed algorithms in repro.core:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -96,6 +98,62 @@ def from_cyclic_matrix(L, p_row: int, p_col: int):
     pr = inv_perm(cyclic_perm(L.shape[0], p_row))
     pc = inv_perm(cyclic_perm(L.shape[1], p_col))
     return L[pr][:, pc]
+
+
+def cyclic_row_index(n: int, p: int, *, inverse: bool = False,
+                     reverse: bool = False) -> np.ndarray:
+    """Gather index realizing the cyclic-storage permutation along one
+    axis, optionally composed with the reversal identity (the upper /
+    transposed-solve reduction, DESIGN.md Sec. 3) into a SINGLE gather.
+
+    forward (natural -> cyclic):  out[i] = a[idx[i]], idx = perm or
+        (n-1-perm) when ``reverse`` (cyclic storage of the reversed
+        array a[::-1]).
+    inverse (cyclic -> natural):  idx = perm^-1, or perm^-1 reversed
+        when ``reverse`` (natural layout of the reversed solution).
+    The two compose to the identity for matching flags."""
+    perm = cyclic_perm(n, p)
+    if inverse:
+        idx = inv_perm(perm)
+        return np.ascontiguousarray(idx[::-1]) if reverse else idx
+    return (n - 1 - perm) if reverse else perm
+
+
+@functools.partial(jax.jit, static_argnames=("p", "inverse", "reverse"))
+def cyclic_rows_device(a, p: int, *, inverse: bool = False,
+                       reverse: bool = False):
+    """On-device natural <-> cyclic storage permutation along axis 0.
+
+    The jitted equivalent of :func:`to_cyclic_rows` /
+    :func:`from_cyclic_rows`: one gather, computed where the operand
+    lives (XLA turns the static index array into a data-movement-only
+    program; under GSPMD the gather is partitioned over the mesh), so
+    the solve pipeline never bounces rows through host NumPy."""
+    idx = cyclic_row_index(a.shape[0], p, inverse=inverse, reverse=reverse)
+    return a[jnp.asarray(idx)]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "p_row", "p_col", "inverse", "reverse_rows", "reverse_cols",
+    "transpose"))
+def cyclic_matrix_device(A, p_row: int, p_col: int, *,
+                         inverse: bool = False, reverse_rows: bool = False,
+                         reverse_cols: bool = False, transpose: bool = False):
+    """On-device natural <-> cyclic storage permutation for a matrix.
+
+    Composes (optional) transposition and (optional) per-axis reversal
+    with the two cyclic gathers, so an upper/transposed factor is
+    distributed with the same single fused program as a lower one.
+    ``transpose`` is applied before the row/col permutations (forward)
+    — it is only meaningful for the forward direction, where the
+    operator reductions L^T / JUJ are folded into distribution."""
+    if transpose:
+        A = A.T
+    ri = cyclic_row_index(A.shape[0], p_row, inverse=inverse,
+                          reverse=reverse_rows)
+    ci = cyclic_row_index(A.shape[1], p_col, inverse=inverse,
+                          reverse=reverse_cols)
+    return A[jnp.asarray(ri)][:, jnp.asarray(ci)]
 
 
 def shard(grid: TrsmGrid, arr, spec):

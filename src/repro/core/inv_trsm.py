@@ -42,10 +42,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import blocked, comm
 from repro.core import tri_inv as ti
-from repro.core.grid import TrsmGrid, to_cyclic_matrix, to_cyclic_rows, \
-    from_cyclic_rows, check_divisibility
+from repro.core.grid import TrsmGrid, check_divisibility
 
 MESH_AXES = ("x", "y", "z")
 
@@ -162,8 +163,7 @@ def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode):
         Bcur = Bcur - mask * upd
         return Bcur, Xacc
 
-    x0 = jax.lax.pcast(jnp.zeros((nl, kl), Bloc.dtype), ("y", "z"),
-                       to="varying")
+    x0 = compat.pcast_varying(jnp.zeros((nl, kl), Bloc.dtype), ("y", "z"))
     with comm.scope(m):
         _, X = jax.lax.fori_loop(0, m, body, (Bloc, x0))
     return X
@@ -180,10 +180,11 @@ def pick_phase1_mode(n: int, n0: int, grid: TrsmGrid) -> str:
     return "doubling" if feasible else "allgather"
 
 
-def it_inv_trsm_fn(grid: TrsmGrid, n: int, k: int, n0: int, dtype,
-                   block_inv: Callable | None = None,
-                   mode: str | None = None):
-    """Build the jitted distributed solver for fixed shapes.
+def it_inv_trsm_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
+                        block_inv: Callable | None = None,
+                        mode: str | None = None):
+    """Build the (un-jitted) shard_map program for fixed shapes, for
+    composition inside larger jitted pipelines (repro.core.session).
 
     Takes/returns *cyclic storage* arrays (see repro.core.grid):
       L_cyc: (n, n) P("x", ("z","y"));  B_cyc: (n, k) P("x", "z")
@@ -202,25 +203,28 @@ def it_inv_trsm_fn(grid: TrsmGrid, n: int, k: int, n0: int, dtype,
     # vma bookkeeping trips shard_map's checker (jax#...); disable the
     # check only when a kernel hook is plugged in.
     check = block_inv is None
-    fn = jax.shard_map(body, mesh=grid.mesh,
-                       in_specs=(grid.spec_L(), grid.spec_B()),
-                       out_specs=grid.spec_X(), check_vma=check)
-    return jax.jit(fn)
+    return compat.shard_map(body, mesh=grid.mesh,
+                         in_specs=(grid.spec_L(), grid.spec_B()),
+                         out_specs=grid.spec_X(), check_vma=check)
+
+
+def it_inv_trsm_fn(grid: TrsmGrid, n: int, k: int, n0: int, dtype,
+                   block_inv: Callable | None = None,
+                   mode: str | None = None):
+    """Jitted distributed solver for fixed shapes (cyclic storage)."""
+    return jax.jit(it_inv_trsm_sharded(grid, n, k, n0,
+                                       block_inv=block_inv, mode=mode))
 
 
 def solve(L, B, grid: TrsmGrid, n0: int, *, block_inv=None,
           mode: str | None = None):
     """Convenience end-to-end solve: natural-layout L, B in; X out.
 
-    Applies the cyclic storage permutations on the way in/out (in a real
-    deployment the factor is *kept* in cyclic storage, ScaLAPACK-style;
-    see DESIGN.md)."""
-    import numpy as np
-    n, k = B.shape
-    p1, p2 = grid.p1, grid.p2
-    L_cyc = to_cyclic_matrix(np.asarray(L), p1, p1 * p2)
-    B_cyc = to_cyclic_rows(np.asarray(B), p1)
-    fn = it_inv_trsm_fn(grid, n, k, n0, L.dtype, block_inv=block_inv,
-                        mode=mode)
-    X_cyc = fn(L_cyc, B_cyc)
-    return from_cyclic_rows(np.asarray(X_cyc), p1)
+    Device-resident: routes through the compiled-solver cache
+    (repro.core.session), so the cyclic permutations run as on-device
+    gathers and repeated same-shape calls reuse the compiled program."""
+    from repro.core import session
+    prog = session.get_solver(grid, n=B.shape[0], k=B.shape[1], n0=n0,
+                              dtype=jnp.result_type(L), method="inv",
+                              mode=mode, block_inv=block_inv)
+    return prog.solve(prog.prep(L), B)

@@ -25,10 +25,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import comm
 from repro.core import tri_inv as ti
 from repro.core.cholesky import transpose_shard
-from repro.core.grid import TrsmGrid, to_cyclic_matrix, from_cyclic_matrix
+from repro.core.grid import TrsmGrid
 from repro.core.mm3d import mm3d_shard
 
 MESH_AXES = ("x", "y", "z")
@@ -88,6 +90,7 @@ def _lu_rec(Aloc, *, n, n0, p1, p2):
     return L, U
 
 
+@functools.lru_cache(maxsize=64)
 def lu_fn(grid: TrsmGrid, n: int, n0: int | None = None):
     n0 = n0 or max(grid.p1 * grid.p1 * grid.p2, n // 8)
     while n % n0 != 0:
@@ -95,16 +98,18 @@ def lu_fn(grid: TrsmGrid, n: int, n0: int | None = None):
     body = functools.partial(_lu_rec, n=n, n0=min(n0, n),
                              p1=grid.p1, p2=grid.p2)
     spec = P("x", ("z", "y"))
-    return jax.jit(jax.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
+    return jax.jit(compat.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
                                  out_specs=(spec, spec)))
 
 
 def lu(A, grid: TrsmGrid, n0: int | None = None):
-    """Natural-layout LU (no pivoting): returns (L, U), A = L @ U."""
-    import numpy as np
+    """Natural-layout LU (no pivoting): returns (L, U), A = L @ U.
+
+    Device-resident: on-device cyclic permutations, memoized program."""
+    from repro.core.grid import cyclic_matrix_device
     n = A.shape[0]
     p1, p2 = grid.p1, grid.p2
-    Ac = to_cyclic_matrix(np.asarray(A), p1, p1 * p2)
+    Ac = cyclic_matrix_device(jnp.asarray(A), p1, p1 * p2)
     Lc, Uc = lu_fn(grid, n, n0)(Ac)
-    return (from_cyclic_matrix(np.asarray(Lc), p1, p1 * p2),
-            from_cyclic_matrix(np.asarray(Uc), p1, p1 * p2))
+    return (cyclic_matrix_device(Lc, p1, p1 * p2, inverse=True),
+            cyclic_matrix_device(Uc, p1, p1 * p2, inverse=True))

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import comm
 from repro.core.grid import TrsmGrid, to_cyclic_matrix, from_cyclic_matrix
 
@@ -102,7 +104,7 @@ def mm3d_fn(grid: TrsmGrid, m: int, n: int, k: int):
     body = functools.partial(mm3d_shard, m=m, n=n, k=k,
                              p1=grid.p1, p2=grid.p2)
     spec = P("x", ("z", "y"))
-    fn = jax.shard_map(body, mesh=grid.mesh, in_specs=(spec, spec),
+    fn = compat.shard_map(body, mesh=grid.mesh, in_specs=(spec, spec),
                        out_specs=spec)
     return jax.jit(fn)
 

@@ -32,8 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import comm
-from repro.core.grid import TrsmGrid, to_cyclic_matrix, from_cyclic_matrix
+from repro.core.grid import TrsmGrid
 from repro.core.mm3d import mm3d_shard
 
 MESH_AXES = ("x", "y", "z")
@@ -109,8 +111,10 @@ def default_n0(n: int, k: int, p1: int, p2: int) -> int:
     return min(n0, n)
 
 
-def rec_trsm_fn(grid: TrsmGrid, n: int, k: int, n0: int | None = None):
-    """Jitted distributed Rec-TRSM for fixed shapes (cyclic storage).
+def rec_trsm_sharded(grid: TrsmGrid, n: int, k: int,
+                     n0: int | None = None):
+    """Un-jitted shard_map Rec-TRSM for fixed shapes (cyclic storage),
+    for composition inside larger jitted pipelines (repro.core.session).
 
     L: (n, n) P("x", ("z","y"));  B: (n, k) P("x", ("z","y"));
     X returned in the same layout as B."""
@@ -119,17 +123,19 @@ def rec_trsm_fn(grid: TrsmGrid, n: int, k: int, n0: int | None = None):
     body = functools.partial(_rec, n=n, k=k, n0=n0,
                              p1=grid.p1, p2=grid.p2)
     spec = P("x", ("z", "y"))
-    fn = jax.shard_map(body, mesh=grid.mesh, in_specs=(spec, spec),
-                       out_specs=spec)
-    return jax.jit(fn)
+    return compat.shard_map(body, mesh=grid.mesh, in_specs=(spec, spec),
+                         out_specs=spec)
+
+
+def rec_trsm_fn(grid: TrsmGrid, n: int, k: int, n0: int | None = None):
+    """Jitted distributed Rec-TRSM for fixed shapes (cyclic storage)."""
+    return jax.jit(rec_trsm_sharded(grid, n, k, n0))
 
 
 def solve(L, B, grid: TrsmGrid, n0: int | None = None):
-    """Natural-layout convenience entry point."""
-    import numpy as np
-    n, k = B.shape
-    p1, p2 = grid.p1, grid.p2
-    Lc = to_cyclic_matrix(np.asarray(L), p1, p1 * p2)
-    Bc = to_cyclic_matrix(np.asarray(B), p1, p1 * p2)
-    Xc = rec_trsm_fn(grid, n, k, n0)(Lc, Bc)
-    return from_cyclic_matrix(np.asarray(Xc), p1, p1 * p2)
+    """Natural-layout convenience entry point (device-resident: cached
+    compiled program, on-device cyclic permutations)."""
+    from repro.core import session
+    prog = session.get_solver(grid, n=B.shape[0], k=B.shape[1], n0=n0,
+                              dtype=jnp.result_type(L), method="rec")
+    return prog.solve(prog.prep(L), B)

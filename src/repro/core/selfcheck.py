@@ -20,6 +20,8 @@ if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 
@@ -81,7 +83,7 @@ def check_collective_order() -> int:
                                axis=0, tiled=True)
         return g[None]
 
-    f = jax.shard_map(body, mesh=mesh, in_specs=P("x", ("z", "y")),
+    f = compat.shard_map(body, mesh=mesh, in_specs=P("x", ("z", "y")),
                       out_specs=P(("x", "y", "z")))
     out = np.asarray(jax.jit(f)(jnp.zeros((2, 4))))
     expect = np.arange(8)
@@ -103,7 +105,7 @@ def check_collective_order() -> int:
                                concat_axis=0, tiled=True)
         return r[None]
 
-    f2 = jax.shard_map(body2, mesh=mesh, in_specs=P("x", ("z", "y")),
+    f2 = compat.shard_map(body2, mesh=mesh, in_specs=P("x", ("z", "y")),
                        out_specs=P(("x", "y", "z")))
     out2 = np.asarray(jax.jit(f2)(jnp.zeros((2, 4))))
     # device d (flattened x-major) holds rows d of the output spec
@@ -261,6 +263,55 @@ def check_lu() -> int:
     return fails
 
 
+def check_session() -> int:
+    """Device-resident pipeline: lower/upper/transposed solves via the
+    compiled-solver cache and TrsmSession, on multi-device grids."""
+    from repro import core
+    from repro.core import grid as gridlib, session
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    rng = np.random.default_rng(3)
+    for (p1, p2, n, k, n0, method) in [(2, 2, 64, 16, 16, "inv"),
+                                       (2, 1, 32, 8, 8, "inv"),
+                                       (1, 2, 32, 8, 16, "rec"),
+                                       (2, 2, 64, 16, 16, "rec")]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        L = _random_tril(n, n)
+        B = rng.standard_normal((n, k))
+        for lower, transpose in [(True, False), (False, False),
+                                 (True, True), (False, True)]:
+            A = L if lower else L.T
+            op = A.T if transpose else A
+            X = core.trsm(A, B, grid, method=method, n0=n0, lower=lower,
+                          transpose=transpose)
+            err = np.abs(op @ np.asarray(X) - B).max()
+            ok = err < 1e-8
+            print(f"session {method} p1={p1} p2={p2} n={n} "
+                  f"lower={lower} T={transpose}: err={err:.2e} "
+                  f"{'OK' if ok else 'FAIL'}")
+            fails += 0 if ok else 1
+        # steady state: resident factor, no retrace across repeated solves
+        sess = core.TrsmSession(L, grid, method=method, n0=n0)
+        sess.warmup(k)
+        key = sess.program_for(k).key
+        before = session.TRACE_COUNTS[key]
+        Bs = [sess.place_rhs(rng.standard_normal((n, k)))
+              for _ in range(3)]
+        with jax.transfer_guard("disallow"):
+            # donate=False: B is re-read below to verify the residual
+            outs = [sess.solve(b, donate=False) for b in Bs]
+        err = max(np.abs(L @ np.asarray(x) - np.asarray(b)).max()
+                  for b, x in zip(Bs, outs))
+        steady = session.TRACE_COUNTS[key] == before
+        ok = err < 1e-8 and steady
+        print(f"session steady p1={p1} p2={p2} {method}: err={err:.2e} "
+              f"retraces={'0' if steady else 'NONZERO'} "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
 CHECKS = {
     "order": check_collective_order,
     "it_inv_trsm": check_it_inv_trsm,
@@ -270,6 +321,7 @@ CHECKS = {
     "cholesky": check_cholesky,
     "doubling": check_doubling_mode,
     "lu": check_lu,
+    "session": check_session,
 }
 
 

@@ -1,0 +1,330 @@
+"""Device-resident solve pipeline: compiled-solver cache + TrsmSession.
+
+The paper's algorithms avoid *inter-processor* communication; this
+module removes the remaining *host* communication from the end-to-end
+entry points.  Historically every ``core.trsm`` call copied L/B to host
+NumPy, permuted to cyclic storage on the CPU, re-uploaded, and re-traced
+the shard_map program — a round-trip that dwarfs the collectives the
+algorithm saves.  ScaLAPACK-style practice keeps factors resident in
+distributed block-cyclic storage; this module does the same:
+
+* ``CompiledSolverCache`` — an LRU of compiled solve programs keyed on
+  ``(n, k, n0, dtype, grid, method, mode, lower, transpose)``.  Each
+  program fuses, in ONE jitted computation: the on-device cyclic
+  permutation of B (with the upper/transpose reversal identity folded
+  into the gather), the shard_map solver, and the inverse permutation of
+  X back to natural layout.  B's buffer is donated in the serving
+  variant.
+* ``TrsmSession`` — holds a factor in cyclic device storage (distributed
+  once, via the jitted ``prep`` program) and serves batched right-hand
+  sides; the steady state performs zero host<->device transfers and zero
+  retraces (asserted in tests via :data:`TRACE_COUNTS` and
+  ``jax.transfer_guard``).
+
+Operator reductions (DESIGN.md Sec. 3), folded into distribution-time
+gathers so the sweep only ever sees a lower-triangular operand:
+    lower, op(L)=L      : Leff = L
+    upper, op(U)=U      : Leff = JUJ   (reverse rows+cols), B/X reversed
+    lower, op(L)=L^T    : Leff = J L^T J (transpose+reverse), B/X reversed
+    upper, op(U)=U^T    : Leff = U^T  (transpose only)
+i.e. transpose <=> ``transpose`` flag, reversal <=> ``lower ==
+transpose``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import threading
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grid as gridlib
+from repro.core.grid import TrsmGrid
+
+# Retrace telemetry: bumped at *trace time* of each cached program, so a
+# test can assert steady-state solves never re-trace (key -> count).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _needs_reversal(lower: bool, transpose: bool) -> bool:
+    return lower == transpose
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverProgram:
+    """A compiled (prep, solve) pair for one solve configuration.
+
+    ``prep(L_nat) -> L_cyc`` distributes the factor once (on-device
+    gather to cyclic storage, operator reduction folded in).
+    ``solve(L_cyc, B_nat) -> X_nat`` is the steady-state program;
+    ``solve_donating`` additionally donates B's buffer (serving path —
+    the caller must not reuse B afterwards).
+
+    ``rhs_sharding`` is the pinned natural-layout placement of B (and
+    of the returned X): requests placed there up front (``jax.device_put``
+    — see ``TrsmSession.place_rhs``) enter the program with no input
+    resharding at all, so the steady state is literally transfer-free.
+    """
+    key: tuple
+    prep: Callable
+    solve: Callable
+    solve_donating: Callable
+    rhs_sharding: object
+    method: str
+    mode: str | None
+    n0: int | None
+
+
+class CompiledSolverCache:
+    """LRU cache of :class:`SolverProgram`s (and factor-prep programs).
+
+    Keyed on everything that changes the compiled artifact:
+    ``(n, k, n0, dtype, grid, method, mode, lower, transpose)`` plus the
+    optional ``block_inv`` kernel hook.  Thread-safe; eviction drops the
+    jitted callables (XLA frees the executables with them).
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self.maxsize = maxsize
+        self._lock = threading.Lock()
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: tuple, build: Callable):
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return self._entries[key]
+            self.misses += 1
+        value = build()          # build outside the lock (tracing is slow)
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        return value
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def stats(self) -> dict:
+        return dict(size=len(self._entries), hits=self.hits,
+                    misses=self.misses, evictions=self.evictions)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = self.misses = self.evictions = 0
+
+
+_DEFAULT_CACHE = CompiledSolverCache()
+
+
+def default_cache() -> CompiledSolverCache:
+    return _DEFAULT_CACHE
+
+
+# ------------------------- program construction -------------------------
+
+@functools.lru_cache(maxsize=128)
+def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype):
+    """Jitted L_nat -> L_cyc distribution (shared by both methods: rec
+    and inv use the same P("x", ("z","y")) factor layout).  Memoized on
+    its full key so every RHS width and every session for the same
+    configuration reuses one traced program."""
+    from jax.sharding import NamedSharding
+    p1, p2 = grid.p1, grid.p2
+    rev = _needs_reversal(lower, transpose)
+
+    def prep(L):
+        L = jnp.asarray(L, dtype)
+        return gridlib.cyclic_matrix_device(
+            L, p1, p1 * p2, reverse_rows=rev, reverse_cols=rev,
+            transpose=transpose)
+
+    return jax.jit(prep,
+                   out_shardings=NamedSharding(grid.mesh, grid.spec_L()))
+
+
+def _build_solver(grid: TrsmGrid, *, n, k, n0, dtype, method, mode,
+                  lower, transpose, block_inv, key) -> SolverProgram:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    p1, p2 = grid.p1, grid.p2
+    rev = _needs_reversal(lower, transpose)
+
+    if method == "inv":
+        from repro.core import inv_trsm
+        resolved_mode = mode or inv_trsm.pick_phase1_mode(n, n0, grid)
+        sharded = inv_trsm.it_inv_trsm_sharded(grid, n, k, n0,
+                                               block_inv=block_inv,
+                                               mode=resolved_mode)
+        # natural-B placement: columns over z (matching spec_B), rows
+        # replicated so the row-permutation gather is shard-local.
+        rhs_spec = P(None, "z")
+
+        def program(L_cyc, B):
+            TRACE_COUNTS[key] += 1
+            B_cyc = gridlib.cyclic_rows_device(
+                jnp.asarray(B, dtype), p1, reverse=rev)
+            X_cyc = sharded(L_cyc, B_cyc)
+            return gridlib.cyclic_rows_device(X_cyc, p1, inverse=True,
+                                              reverse=rev)
+    elif method == "rec":
+        from repro.core import rec_trsm
+        resolved_mode = None
+        sharded = rec_trsm.rec_trsm_sharded(grid, n, k, n0)
+        rhs_spec = P(None, ("z", "y"))
+
+        def program(L_cyc, B):
+            TRACE_COUNTS[key] += 1
+            B_cyc = gridlib.cyclic_matrix_device(
+                jnp.asarray(B, dtype), p1, p1 * p2, reverse_rows=rev)
+            X_cyc = sharded(L_cyc, B_cyc)
+            return gridlib.cyclic_matrix_device(
+                X_cyc, p1, p1 * p2, inverse=True, reverse_rows=rev)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    L_sh = NamedSharding(grid.mesh, grid.spec_L())
+    rhs_sh = NamedSharding(grid.mesh, rhs_spec)
+    jit_kw = dict(in_shardings=(L_sh, rhs_sh), out_shardings=rhs_sh)
+    return SolverProgram(
+        key=key,
+        prep=_build_prep(grid, lower, transpose, dtype),
+        solve=jax.jit(program, **jit_kw),
+        solve_donating=jax.jit(program, donate_argnums=(1,), **jit_kw),
+        rhs_sharding=rhs_sh,
+        method=method, mode=resolved_mode, n0=n0)
+
+
+def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
+                 n0: int | None = None, machine=None):
+    """Host-side (pure arithmetic) resolution of method/n0 so the cache
+    key is concrete."""
+    if method == "auto":
+        from repro.core import tuning
+        method, _, _ = tuning.choose_method(n, k, grid.p, machine)
+    if n0 is None:
+        if method == "inv":
+            from repro.core import tuning
+            n0 = tuning.tune_for_grid(n, k, grid).n0
+        else:
+            from repro.core import rec_trsm
+            n0 = rec_trsm.default_n0(n, k, grid.p1, grid.p2)
+    return method, n0
+
+
+def get_solver(grid: TrsmGrid, *, n: int, k: int, dtype,
+               method: str = "inv", n0: int | None = None,
+               mode: str | None = None, lower: bool = True,
+               transpose: bool = False, machine=None,
+               block_inv: Callable | None = None,
+               cache: CompiledSolverCache | None = None) -> SolverProgram:
+    """Fetch (or build) the compiled solve program for a configuration."""
+    cache = cache if cache is not None else _DEFAULT_CACHE
+    method, n0 = resolve_plan(grid, n, k, method=method, n0=n0,
+                              machine=machine)
+    dtype = jnp.dtype(dtype)
+    key = (n, k, n0, dtype.name, grid, method, mode, lower, transpose,
+           block_inv)
+    return cache.get(key, lambda: _build_solver(
+        grid, n=n, k=k, n0=n0, dtype=dtype, method=method, mode=mode,
+        lower=lower, transpose=transpose, block_inv=block_inv, key=key))
+
+
+# ------------------------------ sessions ------------------------------
+
+class TrsmSession:
+    """A triangular factor held resident in cyclic device storage,
+    serving batched right-hand sides.
+
+    Contract (the "cyclic-storage contract", see ROADMAP.md): the factor
+    is distributed ONCE at construction — an on-device gather to
+    ScaLAPACK-style permuted storage ``P("x", ("z","y"))``, with the
+    upper/transpose operator reduction folded into the gather — and
+    never touches the host again.  ``solve(B)`` runs one compiled
+    program (B-permute -> shard_map sweep -> X-unpermute) per RHS shape;
+    after the first call for a shape the steady state performs zero
+    host<->device transfers and zero retraces.
+
+        sess = TrsmSession(L, grid, method="inv", n0=16)
+        for B in rhs_stream:            # B: (n, k) device array
+            X = sess.solve(B)           # X: (n, k), natural layout
+
+    ``donate=True`` (default) donates B's device buffer to the solve —
+    serving semantics: the RHS is consumed.  Pass ``donate=False`` to
+    keep B alive.
+    """
+
+    def __init__(self, L, grid: TrsmGrid, *, method: str = "inv",
+                 n0: int | None = None, mode: str | None = None,
+                 lower: bool = True, transpose: bool = False,
+                 machine=None, block_inv: Callable | None = None,
+                 dtype=None, cache: CompiledSolverCache | None = None):
+        L = jnp.asarray(L, dtype)
+        if L.ndim != 2 or L.shape[0] != L.shape[1]:
+            raise ValueError(f"factor must be square, got {L.shape}")
+        self.grid = grid
+        self.n = L.shape[0]
+        self.dtype = L.dtype
+        self.method = method
+        self.n0 = n0
+        self.mode = mode
+        self.lower = lower
+        self.transpose = transpose
+        self.machine = machine
+        self.block_inv = block_inv
+        self.cache = cache if cache is not None else _DEFAULT_CACHE
+        # Distribute once; the prep program is shared across k-shapes.
+        prep = _build_prep(grid, lower, transpose, self.dtype)
+        self._L_cyc = prep(L)
+        self.solves_served = 0
+
+    @property
+    def factor_cyclic(self):
+        """The resident factor (cyclic storage, sharded P("x",("z","y")))."""
+        return self._L_cyc
+
+    def program_for(self, k: int) -> SolverProgram:
+        return get_solver(self.grid, n=self.n, k=k, dtype=self.dtype,
+                          method=self.method, n0=self.n0, mode=self.mode,
+                          lower=self.lower, transpose=self.transpose,
+                          machine=self.machine, block_inv=self.block_inv,
+                          cache=self.cache)
+
+    def place_rhs(self, B):
+        """Place a right-hand side on the grid with the pinned natural
+        layout the solve program expects.  A serving client that calls
+        this when the request arrives pays the (unavoidable) ingestion
+        transfer up front; ``solve`` itself then moves no data at all."""
+        prog = self.program_for(B.shape[1])
+        return jax.device_put(jnp.asarray(B, self.dtype),
+                              prog.rhs_sharding)
+
+    def solve(self, B, *, donate: bool = True):
+        """Solve op(L) X = B for a batched RHS (n, k); X natural layout."""
+        if B.ndim != 2 or B.shape[0] != self.n:
+            raise ValueError(f"rhs must be ({self.n}, k), got {B.shape}")
+        prog = self.program_for(B.shape[1])
+        fn = prog.solve_donating if donate else prog.solve
+        X = fn(self._L_cyc, B)
+        self.solves_served += 1
+        return X
+
+    def warmup(self, k: int):
+        """Compile (and run once on zeros) the program for RHS width k,
+        so the first real request is served at steady-state latency."""
+        B = jnp.zeros((self.n, k), self.dtype)
+        self.solve(B, donate=True)
+        return self

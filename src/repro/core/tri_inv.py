@@ -37,8 +37,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import blocked, comm
-from repro.core.grid import TrsmGrid, to_cyclic_matrix, from_cyclic_matrix
+from repro.core.grid import TrsmGrid
 from repro.core.mm3d import mm3d_shard_batched
 
 MESH_AXES = ("x", "y", "z")
@@ -230,16 +232,22 @@ def tri_inv_fn(grid: TrsmGrid, n: int, s0: int | None = None,
     body = functools.partial(tri_inv_shard, n=n, p1=grid.p1, p2=grid.p2,
                              s0=s0, block_inv=block_inv, mode=mode)
     spec = P("x", ("z", "y"))
-    fn = jax.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
+    fn = compat.shard_map(body, mesh=grid.mesh, in_specs=(spec,),
                        out_specs=spec, check_vma=block_inv is None)
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=64)
+def _invert_fn(grid: TrsmGrid, n: int, s0, mode):
+    return tri_inv_fn(grid, n, s0=s0, mode=mode)
+
+
 def invert(L, grid: TrsmGrid, s0: int | None = None, mode=None):
-    """Natural-layout convenience entry point."""
-    import numpy as np
+    """Natural-layout convenience entry point (device-resident: on-device
+    cyclic permutations, memoized compiled program)."""
+    from repro.core.grid import cyclic_matrix_device
     n = L.shape[0]
     p1, p2 = grid.p1, grid.p2
-    Lc = to_cyclic_matrix(np.asarray(L), p1, p1 * p2)
-    out = tri_inv_fn(grid, n, s0=s0, mode=mode)(Lc)
-    return from_cyclic_matrix(np.asarray(out), p1, p1 * p2)
+    Lc = cyclic_matrix_device(jnp.asarray(L), p1, p1 * p2)
+    out = _invert_fn(grid, n, s0, mode)(Lc)
+    return cyclic_matrix_device(out, p1, p1 * p2, inverse=True)

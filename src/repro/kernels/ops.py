@@ -45,8 +45,25 @@ def trsm_substitution(L, B, bn: int = 128):
 def block_inv_kernel(blocks: jnp.ndarray) -> jnp.ndarray:
     """Hook matching the ``block_inv`` signature of the distributed
     solvers: (m, n0, n0) -> batched inverses, Pallas-backed when the
-    block size is a power of two, pure-jnp doubling otherwise."""
-    n0 = blocks.shape[-1]
+    block size is a power of two (>= 2), pure-jnp doubling otherwise.
+
+    Degenerate blocks are rejected eagerly: a zero-sized batch or a
+    0x0 / non-square block would otherwise flow into the Pallas grid
+    with a 0-extent dimension and fail deep inside Mosaic (or silently
+    produce an empty program)."""
+    if blocks.ndim != 3:
+        raise ValueError(
+            f"block_inv_kernel expects a (m, n0, n0) stack of blocks, "
+            f"got ndim={blocks.ndim} shape={blocks.shape}")
+    m, r, n0 = blocks.shape
+    if r != n0:
+        raise ValueError(
+            f"diagonal blocks must be square, got {r}x{n0} "
+            f"(shape={blocks.shape})")
+    if m == 0 or n0 == 0:
+        raise ValueError(
+            f"degenerate block batch {blocks.shape}: zero-sized batches "
+            f"cannot be inverted — check n0 / grid divisibility upstream")
     if n0 & (n0 - 1) == 0 and n0 >= 2:
         return _tib.tri_inv_blocks(blocks, interpret=_interpret())
     from repro.core import blocked

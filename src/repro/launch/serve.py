@@ -1,7 +1,13 @@
-"""Production serving CLI: batched prefill + decode on a mesh.
+"""Production serving CLI: batched prefill + decode on a mesh, or
+TRSM solve serving against a device-resident factor.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 32 --new-tokens 16 [--mesh debug]
+
+    # the paper's workload: repeated solves against a fixed factor,
+    # served from cyclic device storage (zero steady-state transfers)
+    PYTHONPATH=src python -m repro.launch.serve --workload trsm \
+        --n 256 --panel-k 16 --requests 64 [--p1 2 --p2 2]
 """
 
 from __future__ import annotations
@@ -19,16 +25,55 @@ from repro.models import lm
 from repro.train import serve_step as ss
 
 
+def serve_trsm(args):
+    """Serve TRSM solve requests against a device-resident factor."""
+    rng = np.random.default_rng(0)
+    n = args.n
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    server = ss.make_trsm_server(L, p1=args.p1, p2=args.p2,
+                                 panel_k=args.panel_k,
+                                 method=args.method, n0=args.n0)
+    widths = rng.integers(1, args.panel_k + 1, args.requests)
+    t0 = time.time()
+    for w in widths:
+        server.submit(jnp.asarray(rng.standard_normal((n, int(w)))))
+    outs = server.drain()
+    if outs:
+        jax.block_until_ready(outs[-1])
+    dt = time.time() - t0
+    panels = server.panels_solved
+    print(f"served {server.requests_served} solve requests "
+          f"({int(widths.sum())} columns) in {panels} panels, "
+          f"{dt:.3f}s ({dt / max(panels, 1) * 1e3:.2f} ms/panel) "
+          f"on grid p1={args.p1} p2={args.p2} n={n} "
+          f"method={server.session.method}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--workload", default="lm", choices=["lm", "trsm"])
+    ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", default="debug",
                     choices=["single", "multi", "debug"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    # trsm workload
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--n0", type=int, default=None)
+    ap.add_argument("--panel-k", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--p1", type=int, default=1)
+    ap.add_argument("--p2", type=int, default=1)
+    ap.add_argument("--method", default="inv",
+                    choices=["inv", "rec", "auto"])
     args = ap.parse_args()
+
+    if args.workload == "trsm":
+        return serve_trsm(args)
+    if not args.arch:
+        ap.error("--arch is required for the lm workload")
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(stage_fn, stage_params, microbatches, *, mesh: Mesh,
                    axis: str = "pipe"):
@@ -36,11 +38,9 @@ def pipeline_apply(stage_fn, stage_params, microbatches, *, mesh: Mesh,
         # stream (replicated).
         params_local = jax.tree.map(lambda a: a[0], params_local)
         sid = jax.lax.axis_index(axis)
-        buf = jax.lax.pcast(jnp.zeros_like(mbs_local[0]), axis,
-                            to="varying")
-        outs = jax.lax.pcast(
-            jnp.zeros((M,) + mbs_local.shape[1:], mbs_local.dtype),
-            axis, to="varying")
+        buf = compat.pcast_varying(jnp.zeros_like(mbs_local[0]), axis)
+        outs = compat.pcast_varying(
+            jnp.zeros((M,) + mbs_local.shape[1:], mbs_local.dtype), axis)
 
         def tick(t, carry):
             buf, outs = carry
@@ -72,6 +72,6 @@ def pipeline_apply(stage_fn, stage_params, microbatches, *, mesh: Mesh,
         return outs
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec_p, P()),
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(spec_p, P()),
                        out_specs=P())
     return fn(stage_params, microbatches)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 
 def _mesh(shape, axes):
     devs = np.asarray(jax.devices()[:int(np.prod(shape))]).reshape(shape)
@@ -115,7 +117,7 @@ def check_compress() -> int:
                                  jax.lax.axis_index("pod"))
         return compress.psum_compressed(g, "pod", key)
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
+    out = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(),
                                 out_specs=P()))(g)
     want = np.asarray(g) * 8
     rel = np.abs(np.asarray(out) - want).max() / np.abs(want).max()
@@ -124,8 +126,10 @@ def check_compress() -> int:
     print(f"compress int8 psum: rel={rel:.4f} {'OK' if ok else 'FAIL'}")
 
     # unbiasedness of stochastic rounding
+    # 256*16 samples put the +-0.02 gate at ~3 sigma — flaky under PRNG
+    # stream changes across jax versions; 256*64 brings it to ~5.5 sigma.
     keys = jax.random.split(jax.random.key(1), 256)
-    x = jnp.full((16,), 0.3)
+    x = jnp.full((64,), 0.3)
     qs = jax.vmap(lambda k: compress._stochastic_round(x, k))(keys)
     mean = float(qs.mean())
     ok2 = abs(mean - 0.3) < 0.02

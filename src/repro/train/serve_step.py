@@ -67,6 +67,84 @@ def _sz(mesh, axes):
     return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
 
 
+# ------------------- TRSM solve serving (paper workload) -------------------
+
+class TrsmRequestServer:
+    """Continuous-batching front-end for a :class:`repro.core.TrsmSession`.
+
+    Incoming solve requests (right-hand-side column blocks of varying
+    width) are packed into fixed-width (n, panel_k) panels so every
+    request is served by the SAME compiled program — one executable,
+    zero retraces, zero host transfers in the steady state (the
+    device-resident analogue of fixed-batch token serving above).  The
+    last panel of a drain is zero-padded; solves of zero columns are
+    zero, so padding never contaminates results.
+    """
+
+    def __init__(self, session, panel_k: int):
+        self.session = session
+        self.panel_k = panel_k
+        self._queue: list = []
+        self.requests_served = 0
+        self.panels_solved = 0
+
+    def submit(self, b) -> None:
+        """Enqueue one RHS block: (n,) vector or (n, j) columns."""
+        b = jnp.asarray(b, self.session.dtype)
+        if b.ndim == 1:
+            b = b[:, None]
+        if b.ndim != 2 or b.shape[0] != self.session.n:
+            raise ValueError(f"rhs must be ({self.session.n}, j), "
+                             f"got {b.shape}")
+        if b.shape[1] > self.panel_k:
+            raise ValueError(f"request wider than panel: {b.shape[1]} > "
+                             f"{self.panel_k}")
+        self._queue.append(b)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def warmup(self):
+        self.session.warmup(self.panel_k)
+        return self
+
+    def drain(self) -> list:
+        """Serve all queued requests; returns solutions in submit order."""
+        out: list = []
+        while self._queue:
+            wave: list = []
+            width = 0
+            while self._queue and \
+                    width + self._queue[0].shape[1] <= self.panel_k:
+                b = self._queue.pop(0)
+                wave.append(b)
+                width += b.shape[1]
+            panel = jnp.concatenate(wave, axis=1)
+            if width < self.panel_k:
+                panel = jnp.pad(panel,
+                                ((0, 0), (0, self.panel_k - width)))
+            X = self.session.solve(panel)
+            self.panels_solved += 1
+            off = 0
+            for b in wave:
+                out.append(X[:, off:off + b.shape[1]])
+                off += b.shape[1]
+            self.requests_served += len(wave)
+        return out
+
+
+def make_trsm_server(L, *, p1: int = 1, p2: int = 1, panel_k: int = 16,
+                     method: str = "inv", n0: int | None = None,
+                     lower: bool = True, transpose: bool = False):
+    """Build a warmed TrsmRequestServer on a fresh (p1, p1, p2) grid."""
+    from repro.core import TrsmSession
+    from repro.core.grid import make_trsm_mesh
+    grid = make_trsm_mesh(p1, p2)
+    sess = TrsmSession(L, grid, method=method, n0=n0, lower=lower,
+                       transpose=transpose)
+    return TrsmRequestServer(sess, panel_k).warmup()
+
+
 def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int,
                     max_seq: int):
     """Reference serving loop (single host): prefill then greedy decode."""

@@ -22,9 +22,12 @@ def run_selfcheck(name: str) -> str:
     return out.stdout
 
 
+pytestmark = pytest.mark.slow
+
+
 @pytest.mark.parametrize("check", ["order", "mm3d", "tri_inv", "rec_trsm",
                                    "it_inv_trsm", "doubling", "cholesky",
-                                   "lu"])
+                                   "lu", "session"])
 def test_selfcheck(check):
     out = run_selfcheck(check)
     assert "FAIL" not in out

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import blocked
 from repro.core.grid import (cyclic_perm, inv_perm, to_cyclic_matrix,
@@ -107,6 +111,46 @@ def test_cholesky_factorization(n, bs, seed):
     A = M @ M.T + n * np.eye(n)
     L = cholesky.chol_blocked_local(jnp.asarray(A), bs)
     np.testing.assert_allclose(np.asarray(L @ L.T), A, atol=1e-7)
+
+
+@given(n=pow2, p=pow2, reverse=st.booleans(), k=st.sampled_from([1, 3, 8]))
+@settings(max_examples=40, deadline=None)
+def test_device_cyclic_rows_matches_numpy(n, p, reverse, k):
+    """On-device cyclic row permutation (with the upper/transpose
+    reversal folded in) == NumPy reference, and it round-trips."""
+    from repro.core.grid import cyclic_rows_device
+    if p > n or n % p:
+        return
+    a = np.random.default_rng(n + p).standard_normal((n, k))
+    fwd = np.asarray(cyclic_rows_device(jnp.asarray(a), p,
+                                        reverse=reverse))
+    ref = to_cyclic_rows(a[::-1] if reverse else a, p)
+    np.testing.assert_array_equal(fwd, ref)
+    back = np.asarray(cyclic_rows_device(jnp.asarray(fwd), p,
+                                         inverse=True, reverse=reverse))
+    np.testing.assert_array_equal(back, a)
+
+
+@given(n=st.sampled_from([8, 16, 32]), pr=st.sampled_from([1, 2, 4]),
+       pc=st.sampled_from([1, 2, 4, 8]), reverse=st.booleans(),
+       transpose=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_device_cyclic_matrix_matches_numpy(n, pr, pc, reverse, transpose):
+    """On-device matrix distribution (transpose/reversal composed into
+    the gather) == the NumPy reference applied to the reduced operator —
+    the identity behind device-resident lower/upper/transposed solves."""
+    from repro.core.grid import cyclic_matrix_device
+    A = np.random.default_rng(n * pr + pc).standard_normal((n, n))
+    dev = np.asarray(cyclic_matrix_device(
+        jnp.asarray(A), pr, pc, reverse_rows=reverse, reverse_cols=reverse,
+        transpose=transpose))
+    Aeff = A.T if transpose else A
+    if reverse:
+        Aeff = Aeff[::-1, ::-1]
+    np.testing.assert_array_equal(dev, to_cyclic_matrix(Aeff, pr, pc))
+    back = np.asarray(cyclic_matrix_device(jnp.asarray(dev), pr, pc,
+                                           inverse=True))
+    np.testing.assert_array_equal(back, Aeff)
 
 
 def test_cost_model_monotonicity():

@@ -6,15 +6,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh
 
 from repro import configs
+from repro.compat import abstract_mesh
 from repro.configs import ARCH_IDS, SHAPES
 from repro.models import lm, whisper, sharding as sr
 
 MESHES = {
-    "single": AbstractMesh((16, 16), ("data", "model")),
-    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "single": abstract_mesh((16, 16), ("data", "model")),
+    "multi": abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 

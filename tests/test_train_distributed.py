@@ -9,6 +9,8 @@ import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+pytestmark = pytest.mark.slow
+
 
 def run_selfcheck(name: str) -> str:
     env = dict(os.environ)

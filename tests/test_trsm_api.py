@@ -58,8 +58,9 @@ def test_comm_scope_multiplier():
             b = comm.all_gather(a, "x", axis=0, tiled=True)
         return b
 
-    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
-                               out_specs=P("x")))
+    from repro import compat
+    fn = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(),
+                                  out_specs=P("x")))
     with comm.trace() as t:
         jax.eval_shape(fn, jax.ShapeDtypeStruct((4, 4), np.float32))
     # p=1: zero cost, but the record must carry the 5x multiplier
