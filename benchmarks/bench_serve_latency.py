@@ -12,6 +12,13 @@ configurations of repeated solves against a FIXED factor:
   session  — TrsmSession steady state: factor resident in cyclic device
              storage, one compiled program per RHS shape, donated B;
              zero host transfers, zero retraces.
+  bf16_refine — the same steady state under the bf16_refine precision
+             policy: bf16 (MXU-native) sweep + 2 unrolled on-device
+             refinement passes serving fp32 answers (DESIGN.md Sec. 7).
+             Three sweeps + two residual GEMMs per solve; on CPU at
+             small n, where per-program overhead dominates, that shows
+             up as ~10x the fp32 session (see baseline.json) — on TPU
+             the bf16 GEMMs run ~2x the fp32 rate, which is the point.
 
 Run standalone or via ``python -m benchmarks.run serve_latency``.
 """
@@ -81,15 +88,26 @@ def run(report):
         with jax.transfer_guard("disallow"):
             t_session = _time_per_call(lambda: sess.solve(next(it)), reps)
 
+        sess_bf = core.TrsmSession(L, grid, method="inv", n0=n0,
+                                   precision="bf16_refine").warmup(k)
+        Bs_bf = [sess_bf.place_rhs(
+            rng.standard_normal((n, k)).astype(np.float32))
+            for _ in range(reps)]
+        it_bf = iter(Bs_bf)
+        with jax.transfer_guard("disallow"):
+            t_bf = _time_per_call(lambda: sess_bf.solve(next(it_bf)), reps)
+
         row = dict(p1=p1, p2=p2, n=n, k=k, n0=n0,
                    legacy_ms=t_legacy * 1e3, cached_ms=t_cached * 1e3,
                    session_ms=t_session * 1e3,
+                   bf16_refine_ms=t_bf * 1e3,
                    speedup=t_legacy / t_session)
         rows.append(row)
         report(f"p1={p1} p2={p2} n={n} k={k}: "
                f"legacy {row['legacy_ms']:8.2f} ms | "
                f"cached {row['cached_ms']:7.2f} ms | "
                f"session {row['session_ms']:6.2f} ms | "
+               f"bf16_refine {row['bf16_refine_ms']:6.2f} ms | "
                f"{row['speedup']:6.1f}x")
     return rows
 

@@ -2,7 +2,7 @@
 claim the paper's Sec. I leans on: triangular inversion is stable,
 unlike general inversion).
 
-Sweep condition number kappa(L); compare forward error of:
+Part 1 — kappa sweep: compare forward error of
   * substitution TRSM (baseline),
   * It-Inv-TRSM with diagonal-block inversion (the paper: only n0-sized
     blocks are inverted),
@@ -11,7 +11,14 @@ Sweep condition number kappa(L); compare forward error of:
 
 Expected: block-inversion tracks substitution closely across kappa; the
 full inverse drifts as kappa grows — matching the paper's design point
-that selective (block) inversion preserves stability."""
+that selective (block) inversion preserves stability.
+
+Part 2 — precision-policy x n0 sweep (DESIGN.md Sec. 7): run the real
+device-resident pipeline (core.trsm through the compiled-solver cache)
+at every precision preset, recording relative residual, refinement trip
+count, and steady-state per-solve latency.  The acceptance bar asserted
+here: at n >= 1024 the bf16_refine residual lands within 10x of the
+pure-fp32 solve — the MXU-native sweep serves fp32-grade answers."""
 
 from __future__ import annotations
 
@@ -64,4 +71,61 @@ def run(report):
         if r["sub"] > 0:
             assert r["blk"] < max(200 * r["sub"], 1e-4), r
     report("block-inversion error tracks substitution across kappa (OK)")
+
+    rows += run_policy_sweep(report)
+    return rows
+
+
+def run_policy_sweep(report):
+    """Precision-policy x n0 sweep through the serving pipeline."""
+    import time
+
+    from repro import core
+    from repro.core import grid as gridlib
+
+    x64_was = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)   # fp64_refine needs it
+    rows = []
+    try:
+        grid = gridlib.make_trsm_mesh(1, 1)
+        policies = ["fp32", "bf16", "bf16_refine", "fp64_refine"]
+        for n, n0s in [(256, [32, 64]), (1024, [64, 128])]:
+            k = 32
+            rng = np.random.default_rng(n)
+            L64 = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+            B64 = rng.standard_normal((n, k))
+            for n0 in n0s:
+                res = {}
+                for pol in policies:
+                    in_dt = np.float64 if pol == "fp64_refine" \
+                        else np.float32
+                    sess = core.TrsmSession(L64.astype(in_dt), grid,
+                                            method="inv", n0=n0,
+                                            precision=pol)
+                    sess.warmup(k)
+                    B = sess.place_rhs(B64.astype(in_dt))
+                    X = np.asarray(sess.solve(B, donate=False),
+                                   np.float64)
+                    rr = (np.linalg.norm(L64 @ X - B64)
+                          / np.linalg.norm(B64))
+                    reps = 5
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        out = sess.solve(B, donate=False)
+                    jax.block_until_ready(out)
+                    ms = (time.perf_counter() - t0) / reps * 1e3
+                    res[pol] = rr
+                    rows.append(dict(part="policy", n=n, k=k, n0=n0,
+                                     policy=pol, relres=rr,
+                                     refine_steps=sess.policy.refine_steps,
+                                     solve_ms=ms))
+                    report(f"n={n} n0={n0} {pol:12s}: relres={rr:.2e}  "
+                           f"steps={sess.policy.refine_steps}  "
+                           f"{ms:7.2f} ms/solve")
+                # acceptance: bf16_refine within 10x of pure fp32
+                if n >= 1024:
+                    assert res["bf16_refine"] < 10 * res["fp32"], res
+        report("bf16_refine within 10x of fp32 residual at n>=1024 (OK)")
+    finally:
+        jax.config.update("jax_enable_x64", x64_was)
     return rows

@@ -39,7 +39,14 @@ def main():
     print(f"It-Inv-TRSM error: {np.abs(X_inv - ref).max():.2e}")
     print(f"Rec-TRSM   error: {np.abs(X_rec - ref).max():.2e}")
 
-    # 3. traced communication costs (the paper's S/W/F, measured)
+    # 3. mixed precision: bf16 sweep + on-device iterative refinement
+    #    recovers fp32 accuracy (precision="bf16_refine"; DESIGN.md
+    #    Sec. 7) — same compiled-program pipeline, MXU-native GEMMs
+    X_bf = core.trsm(L.astype(np.float32), B.astype(np.float32), grid,
+                     method="inv", precision="bf16_refine")
+    print(f"bf16_refine error: {np.abs(np.asarray(X_bf, np.float64) - ref).max():.2e}")
+
+    # 4. traced communication costs (the paper's S/W/F, measured)
     n0 = plan.n0
     fi = inv_trsm.it_inv_trsm_fn(grid, n, k, n0, np.float64)
     ti = comm.traced_cost(fi, jax.ShapeDtypeStruct((n, n), np.float64),

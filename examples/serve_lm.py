@@ -41,6 +41,10 @@ def main():
                     help="also serve this many TRSM solve requests "
                          "against a device-resident factor (0 = off)")
     ap.add_argument("--solve-n", type=int, default=128)
+    ap.add_argument("--solve-precision", default="fp32",
+                    choices=["fp32", "bf16", "bf16_refine"],
+                    help="precision policy for the solve workload "
+                         "(bf16_refine: MXU-native sweep, fp32 answers)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -98,16 +102,20 @@ def serve_solves(args):
 
     n = args.solve_n
     rng = np.random.default_rng(1)
-    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
-    server = ss.make_trsm_server(L, panel_k=8, method="inv")
+    L = (np.tril(rng.standard_normal((n, n)))
+         + n * np.eye(n)).astype(np.float32)
+    server = ss.make_trsm_server(L, panel_k=8, method="inv",
+                                 precision=args.solve_precision)
     t0 = time.time()
     for _ in range(args.serve_solves):
         server.submit(jnp.asarray(rng.standard_normal((n,))))
     outs = server.drain()
     jax.block_until_ready(outs[-1])
     dt = time.time() - t0
+    policy = server.session.policy
     print(f"served {server.requests_served} solve requests "
-          f"(n={n}) in {server.panels_solved} panels, {dt:.3f}s — "
+          f"(n={n}, precision={policy.name}) in "
+          f"{server.panels_solved} panels, {dt:.3f}s — "
           f"factor resident on device, steady state transfer-free")
 
 

@@ -3,8 +3,11 @@
 Public API:
 
     trsm(L, B, grid, method="inv"|"rec", ...)   distributed solve L X = B
-    TrsmSession(L, grid, ...)                   factor resident on device,
+    TrsmSession(L, grid, precision=...)         factor resident on device,
                                                 serves batched RHS
+    PrecisionPolicy / PRESETS                   mixed-precision policies
+                                                (fp32, bf16, bf16_refine,
+                                                fp64_refine)
     CompiledSolverCache / default_cache()       LRU of compiled programs
     tri_inv.invert(L, grid)                     distributed L^{-1}
     cholesky.cholesky(A, grid)                  distributed chol via inversion
@@ -14,13 +17,14 @@ Public API:
 """
 
 from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
+from repro.core.precision import PrecisionPolicy, PRESETS  # noqa: F401
 from repro.core.session import (  # noqa: F401
     CompiledSolverCache, TrsmSession, default_cache)
 
 
 def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
          machine=None, lower: bool = True, transpose: bool = False,
-         mode: str | None = None, block_inv=None):
+         mode: str | None = None, block_inv=None, precision=None):
     """Solve op(L) X = B on a TrsmGrid.
 
     method="inv":  It-Inv-TRSM (paper Secs. VI-VII, the contribution).
@@ -35,12 +39,18 @@ def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
     reversal is an index permutation *folded into the distribution-time
     on-device gather* (repro.core.session), not host slicing.
     n0 defaults to the Sec. VIII tuned block size.
+    precision: a preset name ("fp32", "bf16", "bf16_refine",
+    "fp64_refine") or a repro.core.precision.PrecisionPolicy; defaults
+    to the uniform policy at L's dtype.  Refining policies run the
+    sweep at low precision and recover residual-dtype accuracy with
+    on-device iterative refinement (DESIGN.md Sec. 7) — all inside the
+    same compiled program.
 
     Device-resident: the compiled program (B-permute -> sweep ->
-    X-unpermute) comes from the process-wide CompiledSolverCache, so
-    repeated same-shape calls never re-trace.  For repeated solves
-    against a FIXED factor use :class:`TrsmSession`, which also keeps
-    L distributed across calls.
+    X-unpermute [-> refinement passes]) comes from the process-wide
+    CompiledSolverCache, so repeated same-shape calls never re-trace.
+    For repeated solves against a FIXED factor use
+    :class:`TrsmSession`, which also keeps L distributed across calls.
     """
     import jax.numpy as jnp
     from repro.core import session
@@ -48,5 +58,6 @@ def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
     prog = session.get_solver(grid, n=n, k=k, dtype=jnp.result_type(L),
                               method=method, n0=n0, mode=mode,
                               lower=lower, transpose=transpose,
-                              machine=machine, block_inv=block_inv)
+                              machine=machine, block_inv=block_inv,
+                              precision=precision)
     return prog.solve(prog.prep(L), B)

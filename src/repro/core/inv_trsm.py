@@ -87,9 +87,19 @@ def _swap_perm(p1: int):
     return [(x * p1 + y, y * p1 + x) for x in range(p1) for y in range(p1)]
 
 
-def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode):
+def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode,
+                        accum_dtype=None):
     """Phase 1: return Dt (m, n0/p1, n0/p1) — the transposed-face pieces
-    (rows ≡ y, cols ≡ x) of the inverted diagonal blocks."""
+    (rows ≡ y, cols ≡ x) of the inverted diagonal blocks.
+
+    When ``accum_dtype`` is wider than the operand dtype the block
+    inversion itself runs at the accumulate precision (cast up, invert,
+    cast back): the inverse re-enters the sweep as a GEMM operand at
+    compute precision, but its entries are formed at full accuracy —
+    the same contract as ``preferred_element_type`` on the MXU."""
+    if accum_dtype is not None and jnp.dtype(accum_dtype) != Lloc.dtype:
+        inner, ldt = block_inv, Lloc.dtype
+        block_inv = lambda b: inner(b.astype(accum_dtype)).astype(ldt)
     m = n // n0
     p = p1 * p1 * p2
     a = n0 // p1
@@ -136,16 +146,20 @@ def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode):
     raise ValueError(mode)
 
 
-def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode):
+def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
+                       accum_dtype=None):
     m = n // n0
     nl = n // p1
     kl = k // p2
     a = n0 // p1
     b = n0 // (p1 * p2)
     xi = comm.axis_index("x")
+    ct = Bloc.dtype
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else ct
 
     Dt = _invert_diag_blocks(Lloc, n=n, n0=n0, p1=p1, p2=p2,
-                             block_inv=block_inv, mode=mode)
+                             block_inv=block_inv, mode=mode,
+                             accum_dtype=acc)
 
     row_g = jnp.arange(nl) * p1 + xi                   # global row ids
 
@@ -153,13 +167,18 @@ def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode):
         Bcur, Xacc = carry
         Bi = jax.lax.dynamic_slice(Bcur, (i * a, 0), (a, kl))
         Dti = jax.lax.dynamic_index_in_dim(Dt, i, axis=0, keepdims=False)
-        Xi = comm.psum(Dti @ Bi, "x")                  # solve via GEMM (l. 4-5)
+        # solve via GEMM (l. 4-5); partials and the cross-x reduction
+        # accumulate at acc (preferred_element_type on the MXU), the
+        # carried values stay at compute precision.
+        Xi = comm.psum(jax.lax.dot(Dti, Bi, preferred_element_type=acc),
+                       "x").astype(ct)
         Xacc = jax.lax.dynamic_update_slice(Xacc, Xi, (i * a, 0))
         panel = jax.lax.dynamic_slice(Lloc, (0, i * b), (nl, b))
         pg = comm.all_gather(panel, "z", axis=0, tiled=False)  # (p2, nl, b)
         pg = jnp.transpose(pg, (1, 2, 0)).reshape(nl, a)  # cols t' = c*p2+z
-        upd = comm.psum(pg @ Xi, "y")                  # update (lines 7-8)
-        mask = (row_g >= (i + 1) * n0).astype(Bcur.dtype)[:, None]
+        upd = comm.psum(jax.lax.dot(pg, Xi, preferred_element_type=acc),
+                        "y").astype(ct)                # update (lines 7-8)
+        mask = (row_g >= (i + 1) * n0).astype(ct)[:, None]
         Bcur = Bcur - mask * upd
         return Bcur, Xacc
 
@@ -182,13 +201,17 @@ def pick_phase1_mode(n: int, n0: int, grid: TrsmGrid) -> str:
 
 def it_inv_trsm_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
                         block_inv: Callable | None = None,
-                        mode: str | None = None):
+                        mode: str | None = None, accum_dtype=None):
     """Build the (un-jitted) shard_map program for fixed shapes, for
     composition inside larger jitted pipelines (repro.core.session).
 
     Takes/returns *cyclic storage* arrays (see repro.core.grid):
       L_cyc: (n, n) P("x", ("z","y"));  B_cyc: (n, k) P("x", "z")
       returns X_cyc: (n, k) P("y", "z") (rows cyclic over y).
+
+    ``accum_dtype``: GEMM accumulation precision for the sweep (and the
+    phase-1 block inversions); defaults to the operand dtype.  With
+    bf16 operands pass float32 so the MXU accumulates at full width.
     """
     check_divisibility(n, k, n0, grid)
     mode = mode or pick_phase1_mode(n, n0, grid)
@@ -198,7 +221,7 @@ def it_inv_trsm_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
 
     body = functools.partial(_it_inv_trsm_shard, n=n, k=k, n0=n0,
                              p1=grid.p1, p2=grid.p2, block_inv=binv,
-                             mode=mode)
+                             mode=mode, accum_dtype=accum_dtype)
     # Pallas interpret-mode kernels use an internal while_loop whose
     # vma bookkeeping trips shard_map's checker (jax#...); disable the
     # check only when a kernel hook is plugged in.

@@ -52,12 +52,16 @@ def _swap_perm(p1: int) -> list[tuple[int, int]]:
 
 
 def mm3d_shard(Lloc: jnp.ndarray, Xloc: jnp.ndarray, *,
-               m: int, n: int, k: int, p1: int, p2: int) -> jnp.ndarray:
+               m: int, n: int, k: int, p1: int, p2: int,
+               accum_dtype=None) -> jnp.ndarray:
     """Per-shard body (runs inside shard_map on the (x,y,z) mesh).
 
     Lloc: (m/p1, n/(p1*p2)) cyclic piece of the m x n left operand.
     Xloc: (n/p1, k/(p1*p2)) cyclic piece of the n x k right operand.
     Returns the (m/p1, k/(p1*p2)) cyclic piece of L @ X.
+    ``accum_dtype``: GEMM/reduction precision (the local partial sums
+    AND the cross-y reduce-scatter accumulate there); result is cast
+    back to the operand dtype.
     """
     ml, ncl = Lloc.shape
     nl, kcl = Xloc.shape
@@ -82,7 +86,9 @@ def mm3d_shard(Lloc: jnp.ndarray, Xloc: jnp.ndarray, *,
 
     # 4. local GEMM: rows == x-residues, contraction over the y-residue
     #    class, cols = this z-slice.
-    Pp = Lg @ Xg                                             # (ml, k/p2)
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else Xloc.dtype
+    Pp = jax.lax.dot(Lg, Xg, preferred_element_type=acc)     # (ml, k/p2)
 
     # 5. complete the contraction over y; keep col-chunk x' == y, which
     #    is exactly the input cyclic layout.
@@ -90,7 +96,7 @@ def mm3d_shard(Lloc: jnp.ndarray, Xloc: jnp.ndarray, *,
         Bloc = comm.psum_scatter(Pp, "y", scatter_dimension=1, tiled=True)
     else:
         Bloc = Pp
-    return Bloc
+    return Bloc.astype(Xloc.dtype)
 
 
 def mm3d_shard_batched(Lloc, Xloc, *, m, n, k, p1, p2):

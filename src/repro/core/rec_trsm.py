@@ -41,10 +41,16 @@ from repro.core.mm3d import mm3d_shard
 MESH_AXES = ("x", "y", "z")
 
 
-def _base_case(Lloc, Bloc, *, n0, k, p1, p2):
-    """Solve an n0 x n0 subproblem with substitution (paper lines 5-9)."""
+def _base_case(Lloc, Bloc, *, n0, k, p1, p2, accum_dtype=None):
+    """Solve an n0 x n0 subproblem with substitution (paper lines 5-9).
+
+    The local substitution runs at ``accum_dtype`` (cast up, solve,
+    cast back) so low-precision operands do not serialize rounding
+    error through the recurrence."""
     p = p1 * p1 * p2
     kc = k // (p1 * p2)            # local column count
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else Bloc.dtype
 
     # line 6: allgather L over the whole grid and reassemble.
     Lg = comm.all_gather(Lloc, MESH_AXES, axis=0, tiled=False)  # (p, a, b)
@@ -64,7 +70,8 @@ def _base_case(Lloc, Bloc, *, n0, k, p1, p2):
         Bt = Bloc
 
     # line 8: local substitution solve of the owned columns.
-    Xt = jax.scipy.linalg.solve_triangular(Lfull, Bt, lower=True)
+    Xt = jax.scipy.linalg.solve_triangular(
+        Lfull.astype(acc), Bt.astype(acc), lower=True).astype(Bloc.dtype)
 
     if p1 > 1:
         # line 9: all-to-all back to cyclic rows / local columns.
@@ -77,17 +84,21 @@ def _base_case(Lloc, Bloc, *, n0, k, p1, p2):
     return Xloc
 
 
-def _rec(Lloc, Bloc, *, n, k, n0, p1, p2):
+def _rec(Lloc, Bloc, *, n, k, n0, p1, p2, accum_dtype=None):
     if n <= n0:
-        return _base_case(Lloc, Bloc, n0=n, k=k, p1=p1, p2=p2)
+        return _base_case(Lloc, Bloc, n0=n, k=k, p1=p1, p2=p2,
+                          accum_dtype=accum_dtype)
     h = n // 2
     hl, hc = h // p1, h // (p1 * p2)
     L11 = Lloc[:hl, :hc]
     L21 = Lloc[hl:, :hc]
     L22 = Lloc[hl:, hc:]
-    X1 = _rec(L11, Bloc[:hl], n=h, k=k, n0=n0, p1=p1, p2=p2)
-    U = mm3d_shard(L21, X1, m=h, n=h, k=k, p1=p1, p2=p2)
-    X2 = _rec(L22, Bloc[hl:] - U, n=h, k=k, n0=n0, p1=p1, p2=p2)
+    X1 = _rec(L11, Bloc[:hl], n=h, k=k, n0=n0, p1=p1, p2=p2,
+              accum_dtype=accum_dtype)
+    U = mm3d_shard(L21, X1, m=h, n=h, k=k, p1=p1, p2=p2,
+                   accum_dtype=accum_dtype)
+    X2 = _rec(L22, Bloc[hl:] - U, n=h, k=k, n0=n0, p1=p1, p2=p2,
+              accum_dtype=accum_dtype)
     return jnp.concatenate([X1, X2], axis=0)
 
 
@@ -112,16 +123,19 @@ def default_n0(n: int, k: int, p1: int, p2: int) -> int:
 
 
 def rec_trsm_sharded(grid: TrsmGrid, n: int, k: int,
-                     n0: int | None = None):
+                     n0: int | None = None, accum_dtype=None):
     """Un-jitted shard_map Rec-TRSM for fixed shapes (cyclic storage),
     for composition inside larger jitted pipelines (repro.core.session).
 
     L: (n, n) P("x", ("z","y"));  B: (n, k) P("x", ("z","y"));
-    X returned in the same layout as B."""
+    X returned in the same layout as B.  ``accum_dtype``: precision for
+    the MM updates and base-case substitution (defaults to the operand
+    dtype)."""
     n0 = n0 or default_n0(n, k, grid.p1, grid.p2)
     assert k % (grid.p1 * grid.p1 * grid.p2) == 0, (k, grid.p)
     body = functools.partial(_rec, n=n, k=k, n0=n0,
-                             p1=grid.p1, p2=grid.p2)
+                             p1=grid.p1, p2=grid.p2,
+                             accum_dtype=accum_dtype)
     spec = P("x", ("z", "y"))
     return compat.shard_map(body, mesh=grid.mesh, in_specs=(spec, spec),
                          out_specs=spec)

@@ -309,6 +309,29 @@ def check_session() -> int:
               f"retraces={'0' if steady else 'NONZERO'} "
               f"{'OK' if ok else 'FAIL'}")
         fails += 0 if ok else 1
+    # mixed precision on a multi-device grid: bf16 sweep + on-device
+    # refinement serves fp32-grade answers with the same steady state
+    for (p1, p2, method) in [(2, 2, "inv"), (2, 2, "rec")]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        n, k, n0 = 64, 16, 16
+        L = _random_tril(5, n, np.float32)
+        sess = core.TrsmSession(L, grid, method=method, n0=n0,
+                                precision="bf16_refine")
+        sess.warmup(k)
+        key = sess.program_for(k).key
+        before = session.TRACE_COUNTS[key]
+        B = sess.place_rhs(rng.standard_normal((n, k)).astype(np.float32))
+        with jax.transfer_guard("disallow"):
+            X = sess.solve(B, donate=False)
+        rel = (np.linalg.norm(L.astype(np.float64)
+                              @ np.asarray(X, np.float64) - np.asarray(B))
+               / np.linalg.norm(np.asarray(B)))
+        steady = session.TRACE_COUNTS[key] == before
+        ok = rel < 1e-5 and steady and X.dtype == jnp.float32
+        print(f"session bf16_refine p1={p1} p2={p2} {method}: "
+              f"relres={rel:.2e} retraces={'0' if steady else 'NONZERO'} "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
     return fails
 
 

@@ -9,17 +9,28 @@ algorithm saves.  ScaLAPACK-style practice keeps factors resident in
 distributed block-cyclic storage; this module does the same:
 
 * ``CompiledSolverCache`` — an LRU of compiled solve programs keyed on
-  ``(n, k, n0, dtype, grid, method, mode, lower, transpose)``.  Each
-  program fuses, in ONE jitted computation: the on-device cyclic
-  permutation of B (with the upper/transpose reversal identity folded
-  into the gather), the shard_map solver, and the inverse permutation of
-  X back to natural layout.  B's buffer is donated in the serving
+  ``(n, k, n0, policy, grid, method, mode, lower, transpose,
+  block_inv)``.  Each program fuses, in ONE jitted computation: the
+  on-device cyclic permutation of B (with the upper/transpose reversal
+  identity folded into the gather), the shard_map solver, the inverse
+  permutation of X back to natural layout, and — when the precision
+  policy refines — the fixed-trip iterative-refinement loop
+  (``repro.core.refine``).  B's buffer is donated in the serving
   variant.
 * ``TrsmSession`` — holds a factor in cyclic device storage (distributed
   once, via the jitted ``prep`` program) and serves batched right-hand
   sides; the steady state performs zero host<->device transfers and zero
-  retraces (asserted in tests via :data:`TRACE_COUNTS` and
-  ``jax.transfer_guard``).
+  retraces FOR EVERY PRECISION POLICY (asserted in tests via
+  :data:`TRACE_COUNTS` and ``jax.transfer_guard``).
+
+Precision (DESIGN.md Sec. 7): a :class:`repro.core.precision
+.PrecisionPolicy` splits the pipeline's dtypes into storage / compute /
+accumulate / residual roles.  The factor is cast ONCE at distribution
+time — to the storage dtype for the sweep and, when the policy refines,
+additionally to the residual dtype for the on-device residual GEMM —
+and the refinement loop is unrolled into the same compiled program, so
+a ``bf16_refine`` session serves fp32-accurate solves with bf16 (MXU
+native) sweep GEMMs and no extra host traffic.
 
 Operator reductions (DESIGN.md Sec. 3), folded into distribution-time
 gathers so the sweep only ever sees a lower-triangular operand:
@@ -43,10 +54,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import grid as gridlib
+from repro.core import precision as preclib
+from repro.core import refine as refinelib
 from repro.core.grid import TrsmGrid
+from repro.core.precision import PrecisionPolicy
 
 # Retrace telemetry: bumped at *trace time* of each cached program, so a
 # test can assert steady-state solves never re-trace (key -> count).
+# Refined programs bump ONCE per trace, not once per inner sweep.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
@@ -58,16 +73,25 @@ def _needs_reversal(lower: bool, transpose: bool) -> bool:
 class SolverProgram:
     """A compiled (prep, solve) pair for one solve configuration.
 
-    ``prep(L_nat) -> L_cyc`` distributes the factor once (on-device
-    gather to cyclic storage, operator reduction folded in).
-    ``solve(L_cyc, B_nat) -> X_nat`` is the steady-state program;
-    ``solve_donating`` additionally donates B's buffer (serving path —
-    the caller must not reuse B afterwards).
+    ``prep(L_nat) -> factor`` distributes the factor once: an on-device
+    gather to cyclic storage with the operator reduction folded in,
+    cast to the policy's storage dtype — plus a second, residual-dtype
+    copy when the policy refines.  The result is an opaque tuple;
+    treat it as the token that ``solve`` consumes.
+
+    ``solve(factor, B_nat) -> X_nat`` is the steady-state program:
+    B-permute -> sweep -> X-unpermute, with the policy's refinement
+    passes unrolled inside.  ``solve_donating`` additionally donates
+    B's buffer (serving path — the caller must not reuse B afterwards).
 
     ``rhs_sharding`` is the pinned natural-layout placement of B (and
     of the returned X): requests placed there up front (``jax.device_put``
     — see ``TrsmSession.place_rhs``) enter the program with no input
     resharding at all, so the steady state is literally transfer-free.
+
+    Remaining fields record the resolved plan: ``method`` ("inv"/"rec"),
+    ``mode`` (the inv phase-1 scheme), ``n0`` (diagonal-block size) and
+    ``policy`` (the :class:`PrecisionPolicy` the program was built for).
     """
     key: tuple
     prep: Callable
@@ -77,15 +101,26 @@ class SolverProgram:
     method: str
     mode: str | None
     n0: int | None
+    policy: PrecisionPolicy
 
 
 class CompiledSolverCache:
     """LRU cache of :class:`SolverProgram`s (and factor-prep programs).
 
     Keyed on everything that changes the compiled artifact:
-    ``(n, k, n0, dtype, grid, method, mode, lower, transpose)`` plus the
-    optional ``block_inv`` kernel hook.  Thread-safe; eviction drops the
-    jitted callables (XLA frees the executables with them).
+
+    * ``n, k`` — solve shape (factor order, RHS width),
+    * ``n0`` — diagonal-block size (the Sec. VIII tuning knob),
+    * ``policy`` — the full :class:`PrecisionPolicy` (storage / compute
+      / accumulate / residual dtypes and refinement trip count),
+    * ``grid`` — the TrsmGrid (mesh identity + p1/p2),
+    * ``method`` — "inv" (It-Inv-TRSM) or "rec" (recursive baseline),
+    * ``mode`` — the inv phase-1 scheme (alltoall/doubling/allgather),
+    * ``lower, transpose`` — the operator variant,
+    * ``block_inv`` — the optional diagonal-block inverter hook.
+
+    Thread-safe; eviction drops the jitted callables (XLA frees the
+    executables with them).
     """
 
     def __init__(self, maxsize: int = 32):
@@ -132,6 +167,8 @@ _DEFAULT_CACHE = CompiledSolverCache()
 
 
 def default_cache() -> CompiledSolverCache:
+    """The process-wide program cache used by ``core.trsm`` and every
+    session that does not pass an explicit ``cache=``."""
     return _DEFAULT_CACHE
 
 
@@ -141,8 +178,10 @@ def default_cache() -> CompiledSolverCache:
 def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype):
     """Jitted L_nat -> L_cyc distribution (shared by both methods: rec
     and inv use the same P("x", ("z","y")) factor layout).  Memoized on
-    its full key so every RHS width and every session for the same
-    configuration reuses one traced program."""
+    its full key — including the target dtype, so a refining policy's
+    storage- and residual-precision copies are two entries — and every
+    RHS width and every session for the same configuration reuses one
+    traced program."""
     from jax.sharding import NamedSharding
     p1, p2 = grid.p1, grid.p2
     rev = _needs_reversal(lower, transpose)
@@ -157,61 +196,98 @@ def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype):
                    out_shardings=NamedSharding(grid.mesh, grid.spec_L()))
 
 
-def _build_solver(grid: TrsmGrid, *, n, k, n0, dtype, method, mode,
+def _factor_preps(grid: TrsmGrid, lower: bool, transpose: bool,
+                  policy: PrecisionPolicy) -> tuple:
+    """The (storage[, residual]) distribution programs for a policy."""
+    preps = (_build_prep(grid, lower, transpose, policy.storage_dtype),)
+    if policy.refines:
+        preps += (_build_prep(grid, lower, transpose,
+                              policy.residual_dtype),)
+    return preps
+
+
+def _check_policy_supported(policy: PrecisionPolicy) -> None:
+    for role in (policy.storage_dtype, policy.compute_dtype,
+                 policy.accumulate_dtype, policy.residual_dtype):
+        if role == jnp.dtype("float64") and \
+                jax.dtypes.canonicalize_dtype(jnp.float64) != jnp.float64:
+            raise ValueError(
+                f"precision policy {policy.name!r} needs float64; enable "
+                f"jax_enable_x64 (jax.config.update('jax_enable_x64', "
+                f"True)) before building the solver")
+
+
+def _build_solver(grid: TrsmGrid, *, n, k, n0, policy, method, mode,
                   lower, transpose, block_inv, key) -> SolverProgram:
     from jax.sharding import NamedSharding, PartitionSpec as P
     p1, p2 = grid.p1, grid.p2
     rev = _needs_reversal(lower, transpose)
+    compute = policy.compute_dtype
+    accum = policy.accumulate_dtype
 
     if method == "inv":
         from repro.core import inv_trsm
         resolved_mode = mode or inv_trsm.pick_phase1_mode(n, n0, grid)
         sharded = inv_trsm.it_inv_trsm_sharded(grid, n, k, n0,
                                                block_inv=block_inv,
-                                               mode=resolved_mode)
+                                               mode=resolved_mode,
+                                               accum_dtype=accum)
         # natural-B placement: columns over z (matching spec_B), rows
         # replicated so the row-permutation gather is shard-local.
         rhs_spec = P(None, "z")
 
-        def program(L_cyc, B):
-            TRACE_COUNTS[key] += 1
+        def base_solve(L_cyc, B):
             B_cyc = gridlib.cyclic_rows_device(
-                jnp.asarray(B, dtype), p1, reverse=rev)
+                jnp.asarray(B, compute), p1, reverse=rev)
             X_cyc = sharded(L_cyc, B_cyc)
             return gridlib.cyclic_rows_device(X_cyc, p1, inverse=True,
                                               reverse=rev)
     elif method == "rec":
         from repro.core import rec_trsm
         resolved_mode = None
-        sharded = rec_trsm.rec_trsm_sharded(grid, n, k, n0)
+        sharded = rec_trsm.rec_trsm_sharded(grid, n, k, n0,
+                                            accum_dtype=accum)
         rhs_spec = P(None, ("z", "y"))
 
-        def program(L_cyc, B):
-            TRACE_COUNTS[key] += 1
+        def base_solve(L_cyc, B):
             B_cyc = gridlib.cyclic_matrix_device(
-                jnp.asarray(B, dtype), p1, p1 * p2, reverse_rows=rev)
+                jnp.asarray(B, compute), p1, p1 * p2, reverse_rows=rev)
             X_cyc = sharded(L_cyc, B_cyc)
             return gridlib.cyclic_matrix_device(
                 X_cyc, p1, p1 * p2, inverse=True, reverse_rows=rev)
     else:
         raise ValueError(f"unknown method {method!r}")
 
+    def program(factor, B):
+        TRACE_COUNTS[key] += 1
+        L_lo = factor[0]
+        L_hi = factor[1] if policy.refines else None
+        return refinelib.refined_solve(base_solve, L_lo, L_hi, B,
+                                       policy=policy, p1=p1, p2=p2,
+                                       reverse=rev)
+
+    preps = _factor_preps(grid, lower, transpose, policy)
     L_sh = NamedSharding(grid.mesh, grid.spec_L())
     rhs_sh = NamedSharding(grid.mesh, rhs_spec)
-    jit_kw = dict(in_shardings=(L_sh, rhs_sh), out_shardings=rhs_sh)
+    jit_kw = dict(in_shardings=((L_sh,) * len(preps), rhs_sh),
+                  out_shardings=rhs_sh)
     return SolverProgram(
         key=key,
-        prep=_build_prep(grid, lower, transpose, dtype),
+        prep=lambda L: tuple(p(L) for p in preps),
         solve=jax.jit(program, **jit_kw),
         solve_donating=jax.jit(program, donate_argnums=(1,), **jit_kw),
         rhs_sharding=rhs_sh,
-        method=method, mode=resolved_mode, n0=n0)
+        method=method, mode=resolved_mode, n0=n0, policy=policy)
 
 
 def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
                  n0: int | None = None, machine=None):
     """Host-side (pure arithmetic) resolution of method/n0 so the cache
-    key is concrete."""
+    key is concrete.
+
+    ``method="auto"`` dispatches through the Sec. VIII alpha-beta-gamma
+    model (``tuning.choose_method``); an unset ``n0`` is tuned for the
+    grid ("inv") or set to the Sec. IV-A base-case size ("rec")."""
     if method == "auto":
         from repro.core import tuning
         method, _, _ = tuning.choose_method(n, k, grid.p, machine)
@@ -225,21 +301,30 @@ def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
     return method, n0
 
 
-def get_solver(grid: TrsmGrid, *, n: int, k: int, dtype,
+def get_solver(grid: TrsmGrid, *, n: int, k: int, dtype=None,
                method: str = "inv", n0: int | None = None,
                mode: str | None = None, lower: bool = True,
                transpose: bool = False, machine=None,
                block_inv: Callable | None = None,
+               precision=None,
                cache: CompiledSolverCache | None = None) -> SolverProgram:
-    """Fetch (or build) the compiled solve program for a configuration."""
+    """Fetch (or build) the compiled solve program for a configuration.
+
+    ``precision`` accepts a preset name (``"fp32"``, ``"bf16"``,
+    ``"bf16_refine"``, ``"fp64_refine"``) or a
+    :class:`~repro.core.precision.PrecisionPolicy`; when omitted, the
+    uniform single-dtype policy at ``dtype`` is used (the legacy
+    pipeline).  Exactly one of ``precision`` / ``dtype`` is required.
+    """
     cache = cache if cache is not None else _DEFAULT_CACHE
     method, n0 = resolve_plan(grid, n, k, method=method, n0=n0,
                               machine=machine)
-    dtype = jnp.dtype(dtype)
-    key = (n, k, n0, dtype.name, grid, method, mode, lower, transpose,
+    policy = preclib.resolve(precision, dtype)
+    _check_policy_supported(policy)
+    key = (n, k, n0, policy, grid, method, mode, lower, transpose,
            block_inv)
     return cache.get(key, lambda: _build_solver(
-        grid, n=n, k=k, n0=n0, dtype=dtype, method=method, mode=mode,
+        grid, n=n, k=k, n0=n0, policy=policy, method=method, mode=mode,
         lower=lower, transpose=transpose, block_inv=block_inv, key=key))
 
 
@@ -249,35 +334,48 @@ class TrsmSession:
     """A triangular factor held resident in cyclic device storage,
     serving batched right-hand sides.
 
-    Contract (the "cyclic-storage contract", see ROADMAP.md): the factor
-    is distributed ONCE at construction — an on-device gather to
-    ScaLAPACK-style permuted storage ``P("x", ("z","y"))``, with the
-    upper/transpose operator reduction folded into the gather — and
+    Contract (the "cyclic-storage contract", see ROADMAP.md and
+    DESIGN.md Sec. 4): the factor is distributed ONCE at construction —
+    an on-device gather to ScaLAPACK-style permuted storage
+    ``P("x", ("z","y"))``, with the upper/transpose operator reduction
+    folded into the gather, cast to the precision policy's storage
+    dtype (plus a residual-dtype copy when the policy refines) — and
     never touches the host again.  ``solve(B)`` runs one compiled
-    program (B-permute -> shard_map sweep -> X-unpermute) per RHS shape;
-    after the first call for a shape the steady state performs zero
-    host<->device transfers and zero retraces.
+    program (B-permute -> shard_map sweep -> X-unpermute, refinement
+    passes unrolled inside) per RHS shape; after the first call for a
+    shape the steady state performs zero host<->device transfers and
+    zero retraces, for every precision policy.
 
         sess = TrsmSession(L, grid, method="inv", n0=16)
         for B in rhs_stream:            # B: (n, k) device array
             X = sess.solve(B)           # X: (n, k), natural layout
 
+        # MXU-native sweep, fp32-accurate answers:
+        sess = TrsmSession(L, grid, precision="bf16_refine")
+
     ``donate=True`` (default) donates B's device buffer to the solve —
     serving semantics: the RHS is consumed.  Pass ``donate=False`` to
     keep B alive.
+
+    ``dtype`` (attribute) is the session's I/O dtype — what ``solve``
+    returns and what :meth:`place_rhs` casts requests to: the residual
+    dtype for refining policies, the compute dtype otherwise.
     """
 
     def __init__(self, L, grid: TrsmGrid, *, method: str = "inv",
                  n0: int | None = None, mode: str | None = None,
                  lower: bool = True, transpose: bool = False,
                  machine=None, block_inv: Callable | None = None,
-                 dtype=None, cache: CompiledSolverCache | None = None):
-        L = jnp.asarray(L, dtype)
+                 dtype=None, precision=None,
+                 cache: CompiledSolverCache | None = None):
+        L = jnp.asarray(L) if dtype is None else jnp.asarray(L, dtype)
         if L.ndim != 2 or L.shape[0] != L.shape[1]:
             raise ValueError(f"factor must be square, got {L.shape}")
+        self.policy = preclib.resolve(precision, L.dtype)
+        _check_policy_supported(self.policy)
         self.grid = grid
         self.n = L.shape[0]
-        self.dtype = L.dtype
+        self.dtype = self.policy.io_dtype
         self.method = method
         self.n0 = n0
         self.mode = mode
@@ -286,22 +384,31 @@ class TrsmSession:
         self.machine = machine
         self.block_inv = block_inv
         self.cache = cache if cache is not None else _DEFAULT_CACHE
-        # Distribute once; the prep program is shared across k-shapes.
-        prep = _build_prep(grid, lower, transpose, self.dtype)
-        self._L_cyc = prep(L)
+        # Distribute once; the prep programs are shared across k-shapes.
+        preps = _factor_preps(grid, lower, transpose, self.policy)
+        self._factor = tuple(p(L) for p in preps)
         self.solves_served = 0
 
     @property
     def factor_cyclic(self):
-        """The resident factor (cyclic storage, sharded P("x",("z","y")))."""
-        return self._L_cyc
+        """The resident sweep factor (cyclic storage, storage dtype,
+        sharded P("x",("z","y")))."""
+        return self._factor[0]
+
+    @property
+    def factor_cyclic_residual(self):
+        """The residual-precision resident copy (None unless the
+        policy refines)."""
+        return self._factor[1] if self.policy.refines else None
 
     def program_for(self, k: int) -> SolverProgram:
-        return get_solver(self.grid, n=self.n, k=k, dtype=self.dtype,
+        """The compiled :class:`SolverProgram` serving RHS width k
+        (built and cached on first use)."""
+        return get_solver(self.grid, n=self.n, k=k,
                           method=self.method, n0=self.n0, mode=self.mode,
                           lower=self.lower, transpose=self.transpose,
                           machine=self.machine, block_inv=self.block_inv,
-                          cache=self.cache)
+                          precision=self.policy, cache=self.cache)
 
     def place_rhs(self, B):
         """Place a right-hand side on the grid with the pinned natural
@@ -313,12 +420,14 @@ class TrsmSession:
                               prog.rhs_sharding)
 
     def solve(self, B, *, donate: bool = True):
-        """Solve op(L) X = B for a batched RHS (n, k); X natural layout."""
+        """Solve op(L) X = B for a batched RHS (n, k); X natural layout,
+        at the session's I/O dtype (refined to residual precision when
+        the policy refines)."""
         if B.ndim != 2 or B.shape[0] != self.n:
             raise ValueError(f"rhs must be ({self.n}, k), got {B.shape}")
         prog = self.program_for(B.shape[1])
         fn = prog.solve_donating if donate else prog.solve
-        X = fn(self._L_cyc, B)
+        X = fn(self._factor, B)
         self.solves_served += 1
         return X
 

@@ -19,6 +19,32 @@ from repro.core import cost_model as cm
 
 @dataclasses.dataclass(frozen=True)
 class TrsmPlan:
+    """A resolved execution plan for one (n, k, p) solve problem.
+
+    Fields:
+
+    * ``regime`` — which of the paper's three asymptotic regimes the
+      problem falls in (see :func:`regime`): ``"1d"`` (many RHS columns
+      relative to n — parallelize over columns), ``"2d"`` (tall solves,
+      k << n — the square processor grid), ``"3d"`` (the general case
+      with a nontrivial replication axis).
+    * ``p1, p2`` — processor grid factors: the mesh is p1 x p1 x p2
+      (axes "x", "y", "z"); ``grid`` gives the tuple.
+    * ``n0`` — diagonal-block size: the granularity of the paper's
+      Diagonal-Inverter and of the sweep (one GEMM solve + one trailing
+      update per n0-block).  Smaller n0 = more latency, less inversion
+      flop overhead; the Sec. VIII sweet spot balances the two.
+    * ``r1, r2`` — the inversion subgrid (Sec. VI-A): each diagonal
+      block is inverted on an r1 x r1 x r2 subset of processors.
+    * ``cost`` — the alpha-beta-gamma cost (S messages, W words,
+      F flops) the model predicts for this plan.
+    * ``n, k, p`` — the problem the plan was derived for.
+
+    Plans are produced by :func:`tune` / :func:`tune_for_grid`; the
+    compiled-solver cache (repro.core.session) calls these when the
+    caller leaves ``n0`` unset, so a plan is also the provenance record
+    for "why did the session pick this block size".
+    """
     regime: str          # "1d" | "2d" | "3d"
     p1: int
     p2: int
@@ -36,6 +62,14 @@ class TrsmPlan:
 
 
 def regime(n: int, k: int, p: int) -> str:
+    """Classify (n, k, p) into the paper's parameter regimes.
+
+    ``"1d"`` (n < 4k/p): the RHS dominates — a 1 x 1 x p grid with
+    columns distributed is optimal.  ``"2d"`` (n > 4k sqrt(p)): the
+    factor dominates — sqrt(p) x sqrt(p) x 1.  ``"3d"`` otherwise:
+    both matter, and the z-axis replication of the paper's 3D
+    algorithms pays for itself.  The thresholds are the crossing
+    points of the Sec. VIII closed-form costs."""
     if n < 4 * k / p:
         return "1d"
     if n > 4 * k * math.sqrt(p):
@@ -122,8 +156,14 @@ def tune(n: int, k: int, p: int,
     """Model-driven a-priori choice of (p1, p2, n0, r1, r2).
 
     Starts from the Sec. VIII closed forms, then argmins the full
-    alpha-beta-gamma model over the feasible (power-of-two) neighborhood.
-    """
+    alpha-beta-gamma model over the feasible (power-of-two)
+    neighborhood.  ``machine`` supplies the (alpha, beta, gamma)
+    constants — latency, per-word, per-flop — defaulting to TPU v5e
+    ICI numbers (``cost_model.tpu_v5e``); a high-alpha MPI-cluster
+    machine shifts the argmin toward larger n0 / more replication,
+    exactly the paper's Sec. IX sensitivity.  Precision does not enter
+    the plan: a bf16 sweep changes gamma and beta by the same factor
+    at leading order, leaving the argmin unchanged."""
     machine = machine or cm.tpu_v5e()
     best = None
     for p1, p2 in feasible_grids(p):
@@ -139,7 +179,12 @@ def tune(n: int, k: int, p: int,
 
 def tune_for_grid(n: int, k: int, grid,
                   machine: cm.Machine | None = None) -> TrsmPlan:
-    """Tune n0 (and the inversion subgrid) for an already-built mesh."""
+    """Tune n0 (and the inversion subgrid) for an already-built mesh.
+
+    Same argmin as :func:`tune` but with (p1, p2) pinned to the given
+    TrsmGrid — this is what ``repro.core.session.resolve_plan`` calls
+    when a solver is requested without an explicit n0, so it is the
+    default-n0 policy of the whole serving stack."""
     machine = machine or cm.tpu_v5e()
     p1, p2 = grid.p1, grid.p2
     p = grid.p

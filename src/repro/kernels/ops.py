@@ -24,22 +24,31 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("bt", "bn"))
-def trmm(L, X, bt: int = 128, bn: int = 128):
-    """C = tril(L) @ X (structure-skipping tiled MXU kernel)."""
-    return _trmm.trmm(L, X, bt=bt, bn=bn, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("bt", "bn", "accum_dtype"))
+def trmm(L, X, bt: int = 128, bn: int = 128, accum_dtype=jnp.float32):
+    """C = tril(L) @ X (structure-skipping tiled MXU kernel).
+
+    ``accum_dtype`` is the MXU accumulation width (scratch +
+    preferred_element_type); float32 by default so bf16 operands
+    accumulate at full precision."""
+    return _trmm.trmm(L, X, bt=bt, bn=bn, accum_dtype=accum_dtype,
+                      interpret=_interpret())
 
 
-@jax.jit
-def tri_inv_blocks(Ls):
-    """Batched lower-triangular inversion (doubling, in-VMEM)."""
-    return _tib.tri_inv_blocks(Ls, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("accum_dtype",))
+def tri_inv_blocks(Ls, accum_dtype=jnp.float32):
+    """Batched lower-triangular inversion (doubling, in-VMEM); level
+    GEMMs accumulate at ``accum_dtype``."""
+    return _tib.tri_inv_blocks(Ls, accum_dtype=accum_dtype,
+                               interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("bn",))
-def trsm_substitution(L, B, bn: int = 128):
-    """Baseline substitution TRSM (VPU-serial; what the paper replaces)."""
-    return _tsb.trsm_substitution(L, B, bn=bn, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("bn", "accum_dtype"))
+def trsm_substitution(L, B, bn: int = 128, accum_dtype=jnp.float32):
+    """Baseline substitution TRSM (VPU-serial; what the paper replaces).
+    The row recurrence runs at ``accum_dtype``."""
+    return _tsb.trsm_substitution(L, B, bn=bn, accum_dtype=accum_dtype,
+                                  interpret=_interpret())
 
 
 def block_inv_kernel(blocks: jnp.ndarray) -> jnp.ndarray:

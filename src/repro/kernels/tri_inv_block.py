@@ -30,9 +30,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _doubling_inverse(L: jnp.ndarray) -> jnp.ndarray:
+def _doubling_inverse(L: jnp.ndarray,
+                      accum_dtype=jnp.float32) -> jnp.ndarray:
     """In-VMEM bottom-up doubling inversion of one (n0, n0) tile.
-    Static python loop over log2(n0) levels; jnp ops only."""
+    Static python loop over log2(n0) levels; jnp ops only.  The level
+    GEMMs accumulate at ``accum_dtype`` (MXU preferred_element_type)."""
     n0 = L.shape[-1]
     eye = jnp.eye(n0, dtype=L.dtype)
     d = jnp.diagonal(L)
@@ -47,10 +49,10 @@ def _doubling_inverse(L: jnp.ndarray) -> jnp.ndarray:
         a22i = blk[:, s:, s:]
         l21 = blk[:, s:, :s]
         t = jax.lax.dot_general(l21, a11i, (((2,), (1,)), ((0,), (0,))),
-                                preferred_element_type=jnp.float32)
+                                preferred_element_type=accum_dtype)
         n21 = -jax.lax.dot_general(a22i, t.astype(A.dtype),
                                    (((2,), (1,)), ((0,), (0,))),
-                                   preferred_element_type=jnp.float32)
+                                   preferred_element_type=accum_dtype)
         blk = blk.at[:, s:, :s].set(n21.astype(A.dtype))
         V = V.at[idx, :, idx, :].set(blk)
         A = V.reshape(n0, n0)
@@ -58,8 +60,8 @@ def _doubling_inverse(L: jnp.ndarray) -> jnp.ndarray:
     return A
 
 
-def _tri_inv_kernel(l_ref, o_ref):
-    o_ref[0] = _doubling_inverse(l_ref[0])
+def _tri_inv_kernel(l_ref, o_ref, *, accum_dtype):
+    o_ref[0] = _doubling_inverse(l_ref[0], accum_dtype)
 
 
 def _out_sds(shape, dtype, like):
@@ -71,12 +73,17 @@ def _out_sds(shape, dtype, like):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def tri_inv_blocks(Ls: jnp.ndarray, *, interpret: bool = False):
-    """Invert a stack (m, n0, n0) of lower-triangular blocks."""
+def tri_inv_blocks(Ls: jnp.ndarray, *, accum_dtype=jnp.float32,
+                   interpret: bool = False):
+    """Invert a stack (m, n0, n0) of lower-triangular blocks.
+
+    ``accum_dtype``: accumulation width of the doubling-level GEMMs
+    (float32 by default — full MXU accumulation for bf16 operands)."""
     m, n0, n02 = Ls.shape
     assert n0 == n02 and (n0 & (n0 - 1)) == 0, Ls.shape
     return pl.pallas_call(
-        _tri_inv_kernel,
+        functools.partial(_tri_inv_kernel,
+                          accum_dtype=jnp.dtype(accum_dtype)),
         grid=(m,),
         in_specs=[pl.BlockSpec((1, n0, n0), lambda b: (b, 0, 0))],
         out_specs=pl.BlockSpec((1, n0, n0), lambda b: (b, 0, 0)),

@@ -29,7 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _trmm_kernel(l_ref, x_ref, o_ref, acc_ref, *, nk: int):
+def _trmm_kernel(l_ref, x_ref, o_ref, acc_ref, *, nk: int, accum_dtype):
     i = pl.program_id(0)
     kk = pl.program_id(2)
 
@@ -40,7 +40,7 @@ def _trmm_kernel(l_ref, x_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(kk <= i)          # tiles strictly above the diagonal are 0
     def _mac():
         acc_ref[...] += jnp.dot(l_ref[...], x_ref[...],
-                                preferred_element_type=jnp.float32)
+                                preferred_element_type=accum_dtype)
 
     @pl.when(kk == nk - 1)
     def _store():
@@ -55,11 +55,17 @@ def _out_sds(shape, dtype, like):
 
 
 def trmm(L: jnp.ndarray, X: jnp.ndarray, *, bt: int = 128, bn: int = 128,
-         interpret: bool = False) -> jnp.ndarray:
-    """C = tril(L) @ X with L: (n, n), X: (n, k)."""
+         accum_dtype=jnp.float32, interpret: bool = False) -> jnp.ndarray:
+    """C = tril(L) @ X with L: (n, n), X: (n, k).
+
+    ``accum_dtype``: dtype of the VMEM scratch accumulator and the MXU
+    partial sums (``preferred_element_type``).  Defaults to float32 —
+    the MXU-native accumulation width for bf16/f32 inputs; pass the
+    operand dtype to reproduce a narrow-accumulation GEMM exactly."""
     n, n2 = L.shape
     _, k = X.shape
     assert n == n2 and X.shape[0] == n, (L.shape, X.shape)
+    accum_dtype = jnp.dtype(accum_dtype)
     bt = min(bt, n)
     bn = min(bn, k)
     assert n % bt == 0 and k % bn == 0, (n, k, bt, bn)
@@ -67,7 +73,7 @@ def trmm(L: jnp.ndarray, X: jnp.ndarray, *, bt: int = 128, bn: int = 128,
 
     grid = (ni, nj, nk)
     return pl.pallas_call(
-        functools.partial(_trmm_kernel, nk=nk),
+        functools.partial(_trmm_kernel, nk=nk, accum_dtype=accum_dtype),
         grid=grid,
         in_specs=[
             # clamp the k-index for skipped tiles so we never prefetch
@@ -77,6 +83,6 @@ def trmm(L: jnp.ndarray, X: jnp.ndarray, *, bt: int = 128, bn: int = 128,
         ],
         out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
         out_shape=_out_sds((n, k), X.dtype, X),
-        scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bt, bn), accum_dtype)],
         interpret=interpret,
     )(L, X)

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _trsm_kernel(l_ref, b_ref, x_ref):
+def _trsm_kernel(l_ref, b_ref, x_ref, *, accum_dtype):
     L = l_ref[0]
     B = b_ref[0]
     n0 = L.shape[0]
@@ -31,8 +31,12 @@ def _trsm_kernel(l_ref, b_ref, x_ref):
     def body(r, X):
         # full-length dot; X rows >= r are still zero so they don't
         # contribute.  One VPU row op per r — the serial baseline.
-        xr = (B[r] - L[r] @ X) / L[r, r]
-        return X.at[r].set(xr)
+        # The row dot and the subtraction run at accum_dtype so a
+        # low-precision recurrence does not compound rounding row by
+        # row; the carried X stays at the operand dtype.
+        d = jnp.dot(L[r], X, preferred_element_type=accum_dtype)
+        xr = (B[r].astype(accum_dtype) - d) / L[r, r].astype(accum_dtype)
+        return X.at[r].set(xr.astype(X.dtype))
 
     x_ref[0] = jax.lax.fori_loop(0, n0, body, jnp.zeros_like(B))
 
@@ -45,10 +49,13 @@ def _out_sds(shape, dtype, like):
 
 
 def trsm_substitution(L: jnp.ndarray, B: jnp.ndarray, *, bn: int = 128,
+                      accum_dtype=jnp.float32,
                       interpret: bool = False) -> jnp.ndarray:
     """Solve tril(L) X = B by in-kernel forward substitution.
 
-    L: (m, n0, n0) batched or (n0, n0); B matching (m, n0, k)/(n0, k)."""
+    L: (m, n0, n0) batched or (n0, n0); B matching (m, n0, k)/(n0, k).
+    ``accum_dtype``: precision of the per-row dot/update recurrence
+    (float32 by default; the carried solution stays at B's dtype)."""
     squeeze = L.ndim == 2
     if squeeze:
         L, B = L[None], B[None]
@@ -58,7 +65,8 @@ def trsm_substitution(L: jnp.ndarray, B: jnp.ndarray, *, bn: int = 128,
     assert k % bn == 0, (k, bn)
 
     out = pl.pallas_call(
-        _trsm_kernel,
+        functools.partial(_trsm_kernel,
+                          accum_dtype=jnp.dtype(accum_dtype)),
         grid=(m, k // bn),
         in_specs=[
             pl.BlockSpec((1, n0, n0), lambda b, j: (b, 0, 0)),

@@ -5,9 +5,12 @@ TRSM solve serving against a device-resident factor.
         --batch 4 --prompt-len 32 --new-tokens 16 [--mesh debug]
 
     # the paper's workload: repeated solves against a fixed factor,
-    # served from cyclic device storage (zero steady-state transfers)
+    # served from cyclic device storage (zero steady-state transfers);
+    # --precision picks the mixed-precision policy per workload
+    # (bf16_refine = MXU-native sweep + on-device refinement to fp32)
     PYTHONPATH=src python -m repro.launch.serve --workload trsm \
-        --n 256 --panel-k 16 --requests 64 [--p1 2 --p2 2]
+        --n 256 --panel-k 16 --requests 64 [--p1 2 --p2 2] \
+        [--precision fp32|bf16|bf16_refine|fp64_refine]
 """
 
 from __future__ import annotations
@@ -27,12 +30,17 @@ from repro.train import serve_step as ss
 
 def serve_trsm(args):
     """Serve TRSM solve requests against a device-resident factor."""
+    if args.precision == "fp64_refine":
+        jax.config.update("jax_enable_x64", True)
     rng = np.random.default_rng(0)
     n = args.n
     L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    if args.precision != "fp64_refine":
+        L = L.astype(np.float32)
     server = ss.make_trsm_server(L, p1=args.p1, p2=args.p2,
                                  panel_k=args.panel_k,
-                                 method=args.method, n0=args.n0)
+                                 method=args.method, n0=args.n0,
+                                 precision=args.precision)
     widths = rng.integers(1, args.panel_k + 1, args.requests)
     t0 = time.time()
     for w in widths:
@@ -42,11 +50,14 @@ def serve_trsm(args):
         jax.block_until_ready(outs[-1])
     dt = time.time() - t0
     panels = server.panels_solved
+    policy = server.session.policy
     print(f"served {server.requests_served} solve requests "
           f"({int(widths.sum())} columns) in {panels} panels, "
           f"{dt:.3f}s ({dt / max(panels, 1) * 1e3:.2f} ms/panel) "
           f"on grid p1={args.p1} p2={args.p2} n={n} "
-          f"method={server.session.method}")
+          f"method={server.session.method} precision={policy.name} "
+          f"(sweep {policy.compute}, serve {policy.io_dtype.name}, "
+          f"{policy.refine_steps} refine passes)")
 
 
 def main():
@@ -68,6 +79,10 @@ def main():
     ap.add_argument("--p2", type=int, default=1)
     ap.add_argument("--method", default="inv",
                     choices=["inv", "rec", "auto"])
+    ap.add_argument("--precision", default=None,
+                    choices=["fp32", "bf16", "bf16_refine", "fp64_refine"],
+                    help="mixed-precision policy for the trsm workload "
+                         "(default: uniform at the factor dtype)")
     args = ap.parse_args()
 
     if args.workload == "trsm":

@@ -135,13 +135,20 @@ class TrsmRequestServer:
 
 def make_trsm_server(L, *, p1: int = 1, p2: int = 1, panel_k: int = 16,
                      method: str = "inv", n0: int | None = None,
-                     lower: bool = True, transpose: bool = False):
-    """Build a warmed TrsmRequestServer on a fresh (p1, p1, p2) grid."""
+                     lower: bool = True, transpose: bool = False,
+                     precision=None):
+    """Build a warmed TrsmRequestServer on a fresh (p1, p1, p2) grid.
+
+    ``precision`` is forwarded to :class:`TrsmSession` — a preset name
+    ("fp32", "bf16", "bf16_refine", "fp64_refine") or a
+    PrecisionPolicy; per-workload, so one process can serve e.g. a
+    bf16_refine panel stream and an fp32 panel stream side by side
+    (distinct compiled programs, same cache)."""
     from repro.core import TrsmSession
     from repro.core.grid import make_trsm_mesh
     grid = make_trsm_mesh(p1, p2)
     sess = TrsmSession(L, grid, method=method, n0=n0, lower=lower,
-                       transpose=transpose)
+                       transpose=transpose, precision=precision)
     return TrsmRequestServer(sess, panel_k).warmup()
 
 

@@ -126,20 +126,40 @@ def test_solver_cache_lru_eviction(grid):
     assert len(cache) == 2 and cache.evictions == 1
 
 
-def test_session_steady_state_no_transfers_no_retraces(grid):
+# The session invariants — zero steady-state host transfers, zero
+# retraces — must hold for EVERY precision preset: the refinement loop
+# is unrolled inside the one compiled program, so a refined solve is
+# still a single executable with no host round-trips.
+@pytest.mark.parametrize("precision,in_dt,rtol", [
+    (None, np.float64, 1e-10),          # legacy uniform-dtype policy
+    ("fp32", np.float32, 1e-5),
+    ("bf16", np.float32, 5e-2),
+    ("bf16_refine", np.float32, 1e-5),
+    ("fp64_refine", np.float64, 1e-11),
+])
+def test_session_steady_state_no_transfers_no_retraces(grid, precision,
+                                                       in_dt, rtol):
     L, _ = _mats(n=64, k=8)
-    sess = core.TrsmSession(L, grid, method="inv", n0=16)
+    L = L.astype(in_dt)
+    sess = core.TrsmSession(L, grid, method="inv", n0=16,
+                            precision=precision)
     sess.warmup(8)
     key = sess.program_for(8).key
     traces_after_warmup = session.TRACE_COUNTS[key]
+    assert traces_after_warmup == 1     # one trace per cached program
     rng = np.random.default_rng(7)
-    Bs = [sess.place_rhs(rng.standard_normal((64, 8))) for _ in range(4)]
+    Bs = [sess.place_rhs(rng.standard_normal((64, 8)).astype(in_dt))
+          for _ in range(4)]
     refs = [np.asarray(b) for b in Bs]
     with jax.transfer_guard("disallow"):
         outs = [sess.solve(b) for b in Bs]      # donate=True: B consumed
     assert session.TRACE_COUNTS[key] == traces_after_warmup
     for b, x in zip(refs, outs):
-        np.testing.assert_allclose(L @ np.asarray(x), b, atol=1e-8)
+        assert x.dtype == sess.dtype
+        x64 = np.asarray(x, np.float64)
+        rel = (np.linalg.norm(L.astype(np.float64) @ x64 - b)
+               / np.linalg.norm(b))
+        assert rel < rtol, (precision, rel)
     assert sess.solves_served == 5              # warmup + 4
 
 
