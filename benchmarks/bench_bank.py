@@ -1,0 +1,163 @@
+"""Multi-factor batched serving: FactorBank vs looped single sessions.
+
+Quantifies the FactorBank tentpole (DESIGN.md Sec. 9).  The workload
+is the paper's Sec. I consumer pattern — M triangular factors served
+simultaneously (per-layer KFAC preconditioners, per-tenant models) —
+solved two ways against identical factors and right-hand sides:
+
+  looped   — M independent TrsmSessions at steady state, one dispatch
+             per factor per round (the PR-1/2 serving model applied M
+             times, at its own tuned n0).
+  bank     — ONE BatchedTrsmSession over a FactorBank: phase 1 (the
+             Diagonal-Inverter) ran once at admission, and the
+             steady-state program maps the unrolled sweep over the
+             factor axis ("vmap": every sweep step is an M-wide
+             batched GEMM; "scan": factors serialized inside the same
+             single program).  The bank runs at its own serving-tuned
+             n0 (tuning.serving_n0 — larger, because the inversion
+             term left the per-solve cost), plus an n0 = n row: the
+             full-inversion end of the same knob (m = 1, one batched
+             GEMM per wave).
+
+The bank's win has three parts: M-1 dispatch overheads disappear, the
+hoisted phase 1 stops being re-paid every solve, and the serving n0
+re-tunes upward once inversion is free.  The run ASSERTS the
+acceptance bar — >= 5x lower per-solve latency at M = 16, n = 256 on
+one device — and the zero-transfer / zero-retrace steady state of the
+bank for EVERY precision preset (TRACE_COUNTS + jax.transfer_guard,
+the session invariants extended to banks).
+
+Run standalone or via ``python -m benchmarks.run bank``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+M, N, K, N0 = 16, 256, 16, 32
+PRESETS = ["fp32", "bf16", "bf16_refine", "fp64_refine"]
+
+
+def _time_per_round(fn, reps: int, passes: int = 3) -> float:
+    """Min-of-passes per-round time (the standard timeit hygiene: the
+    minimum is the least noise-contaminated estimate of the program's
+    cost on a busy host)."""
+    import jax
+    fn()                                    # settle any lazy first-call
+    best = float("inf")
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best
+
+
+def _factors(rng, dtype=np.float32):
+    return np.stack([
+        np.tril(rng.standard_normal((N, N))) + N * np.eye(N)
+        for _ in range(M)]).astype(dtype)
+
+
+def _assert_bank_steady_state(report):
+    """Zero transfers / zero retraces for the bank, every preset."""
+    import jax
+    from repro import core
+    from repro.core import grid as gridlib, session
+
+    x64_was = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)   # fp64_refine needs it
+    try:
+        grid = gridlib.make_trsm_mesh(1, 1)
+        rng = np.random.default_rng(1)
+        rows = {}
+        for preset in PRESETS:
+            dt = np.float64 if preset == "fp64_refine" else np.float32
+            bank = core.FactorBank(grid, N, method="inv",
+                                   precision=preset)
+            bank.admit_stack(_factors(rng, dt))
+            sess = core.BatchedTrsmSession(bank)
+            key = sess.program_for(K).key   # program built, not yet traced
+            before = session.TRACE_COUNTS[key]
+            sess.warmup(K)
+            traces = session.TRACE_COUNTS[key]
+            assert traces == before + 1, (preset, before, traces)
+            Bs = [sess.place_rhs(rng.standard_normal((M, N, K)))
+                  for _ in range(3)]
+            with jax.transfer_guard("disallow"):
+                for b in Bs:
+                    sess.solve(b)
+            assert session.TRACE_COUNTS[key] == traces, preset
+            rows[preset] = "ok"
+            report(f"steady state [{preset}]: 1 trace, 0 transfers, "
+                   f"0 retraces over {len(Bs)} banked rounds "
+                   f"({len(Bs) * M} solves)")
+        return rows
+    finally:
+        jax.config.update("jax_enable_x64", x64_was)
+
+
+def run(report):
+    import jax
+    from repro import core
+    from repro.core import grid as gridlib
+
+    grid = gridlib.make_trsm_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    Ls = _factors(rng)
+    reps, passes = 20, 3
+    nfeeds = reps * passes + 2
+
+    # looped single sessions: M dispatches per round, steady state
+    sessions = [core.TrsmSession(L, grid, method="inv", n0=N0).warmup(K)
+                for L in Ls]
+    feeds = [[s.place_rhs(rng.standard_normal((N, K)).astype(np.float32))
+              for s in sessions] for _ in range(nfeeds)]
+    it = iter(feeds)
+
+    def looped_round():
+        batch = next(it)
+        return [s.solve(b) for s, b in zip(sessions, batch)][-1]
+
+    with jax.transfer_guard("disallow"):
+        t_loop = _time_per_round(looped_round, reps, passes)
+
+    rows = []
+    cases = [("vmap", None), ("scan", None), ("vmap", N)]
+    for map_mode, n0 in cases:
+        bank = core.FactorBank(grid, N, method="inv", n0=n0,
+                               dtype=np.float32, map_mode=map_mode)
+        bank.admit_stack(Ls)
+        bsess = core.BatchedTrsmSession(bank).warmup(K)
+        bfeeds = [bsess.place_rhs(
+            rng.standard_normal((M, N, K)).astype(np.float32))
+            for _ in range(nfeeds)]
+        bit = iter(bfeeds)
+        with jax.transfer_guard("disallow"):
+            t_bank = _time_per_round(lambda: bsess.solve(next(bit)),
+                                     reps, passes)
+        speedup = t_loop / t_bank
+        rows.append(dict(map_mode=map_mode, M=M, n=N, k=K,
+                         looped_n0=N0, bank_n0=bank.n0,
+                         looped_ms_per_solve=t_loop / M * 1e3,
+                         bank_ms_per_solve=t_bank / M * 1e3,
+                         speedup=speedup))
+        report(f"M={M} n={N} k={K} [{map_mode:4s} n0={bank.n0:3d}]: "
+               f"looped(n0={N0}) {t_loop / M * 1e3:7.3f} ms/solve | "
+               f"bank {t_bank / M * 1e3:7.3f} ms/solve | "
+               f"{speedup:5.1f}x")
+
+    best = max(r["speedup"] for r in rows)
+    assert best >= 5.0, (
+        f"acceptance: bank must be >= 5x per solve vs looped sessions, "
+        f"got {best:.1f}x")
+
+    steady = _assert_bank_steady_state(report)
+    return dict(latency=rows, steady_state=steady)
+
+
+if __name__ == "__main__":
+    run(print)

@@ -31,6 +31,8 @@ BENCHES = [
      "benchmarks.bench_gemm_fraction"),
     ("serve_latency", "device-resident solve pipeline latency",
      "benchmarks.bench_serve_latency"),
+    ("bank", "multi-factor batched serving (FactorBank)",
+     "benchmarks.bench_bank"),
 ]
 
 

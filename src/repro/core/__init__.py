@@ -5,17 +5,22 @@ Public API:
     trsm(L, B, grid, method="inv"|"rec", ...)   distributed solve L X = B
     TrsmSession(L, grid, precision=...)         factor resident on device,
                                                 serves batched RHS
+    FactorBank / BatchedTrsmSession             pool of M resident factors,
+                                                M solves in one dispatch
     PrecisionPolicy / PRESETS                   mixed-precision policies
                                                 (fp32, bf16, bf16_refine,
                                                 fp64_refine)
     CompiledSolverCache / default_cache()       LRU of compiled programs
     tri_inv.invert(L, grid)                     distributed L^{-1}
     cholesky.cholesky(A, grid)                  distributed chol via inversion
+    cholesky.cholesky_cyclic / lu.lu_cyclic     factor producers emitting
+                                                cyclic storage (bank feed)
     mm3d.matmul(L, X, grid)                     Sec. III 3D matmul
     tuning.tune(n, k, p)                        Sec. VIII a-priori parameters
     comm.trace()                                alpha-beta-gamma cost tracing
 """
 
+from repro.core.bank import BatchedTrsmSession, FactorBank  # noqa: F401
 from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
 from repro.core.precision import PrecisionPolicy, PRESETS  # noqa: F401
 from repro.core.session import (  # noqa: F401

@@ -1,0 +1,343 @@
+"""Multi-factor batched serving: FactorBank + BatchedTrsmSession
+(DESIGN.md Sec. 9).
+
+The paper's Sec. I pitch is that TRSM is the inner kernel of Cholesky /
+LU / QR — real workloads solve against *many* triangular factors at
+once (per-layer KFAC preconditioners, per-tenant models), not one.
+A :class:`~repro.core.session.TrsmSession` serves one resident factor;
+this module pools M of them:
+
+* :class:`FactorBank` — a device-resident pool of M same-order
+  triangular factors held as ONE stacked cyclic array (M, n, n),
+  sharded ``P(None, "x", ("z", "y"))`` — the single-factor
+  cyclic-storage contract (DESIGN.md Sec. 4) with a leading factor
+  axis.  Admission runs the same fused distribution gather as a
+  session (``grid.cyclic_matrix_device`` permutes the trailing two
+  axes, so a whole (M, n, n) stack distributes in one program), and a
+  refining precision policy keeps DUAL stacks (storage dtype for the
+  sweep + residual dtype for the refinement GEMM), cast once at
+  admission.  For the "inv" method admission ALSO runs phase 1 (the
+  paper's Diagonal-Inverter) once per factor: the factors are
+  immutable, so the inverted diagonal faces become resident state and
+  the steady-state program is the sweep alone — which is why the
+  bank's default n0 is the larger hoisted-serving argmin
+  (``tuning.serving_n0``), not the session's fused-solve argmin.
+
+* **Cyclic ingestion** — ``admit_cyclic`` accepts a factor ALREADY in
+  cyclic storage, exactly what ``core.cholesky.cholesky_cyclic`` /
+  ``core.lu.lu_cyclic`` produce: a factor computed on the grid enters
+  the bank with zero host traffic and zero re-permutation (no
+  unpermute -> re-permute round trip), closing the paper's
+  factor-producer -> TRSM-consumer loop on device.
+
+* :class:`BatchedTrsmSession` — solves op(L_i) X_i = B_i for ALL i in
+  one compiled program: the per-factor body (B-permute -> shard_map
+  sweep -> X-unpermute -> unrolled refinement) is mapped over the
+  factor axis with ``jax.vmap`` (every sweep step becomes an M-wide
+  batched GEMM; the default) or ``jax.lax.scan`` (factors serialized
+  inside the same single program; memory-lean for large M).  M
+  per-layer or per-tenant solves cost ONE dispatch, and the
+  single-session invariants extend verbatim: zero steady-state
+  host<->device transfers and zero retraces for every precision policy
+  (asserted in tests/test_factor_bank.py via
+  :data:`repro.core.session.TRACE_COUNTS` + ``jax.transfer_guard``).
+
+Programs come from the same :class:`CompiledSolverCache`; the bank
+width M (and map mode) join the cache key, so two same-width banks of
+the same configuration share one compiled program and the factors are
+runtime operands, never baked-in constants.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import precision as preclib
+from repro.core import session as sessionlib
+from repro.core.grid import TrsmGrid
+from repro.core.session import CompiledSolverCache, SolverProgram
+
+
+class FactorBank:
+    """A device-resident pool of M triangular factors in stacked cyclic
+    storage, ready for one-dispatch batched solves.
+
+        bank = FactorBank(grid, n=256, method="inv", n0=32,
+                          precision="bf16_refine")
+        for L in per_layer_factors:        # natural-layout (n, n)
+            bank.admit(L)
+        sess = BatchedTrsmSession(bank)
+        X = sess.solve(B_stack)            # (M, n, k) in one dispatch
+
+    All factors share one operator configuration (method, n0, lower,
+    transpose, precision): the bank is a pool of *interchangeable*
+    solves, which is what makes the single mapped program possible.
+
+    ``dtype`` / ``precision`` follow :class:`TrsmSession` (a preset
+    name or a PrecisionPolicy; default fp32 uniform).  ``map_mode``
+    picks how the batched program maps the factor axis ("vmap" |
+    "scan"); it is part of the compiled-program cache key.
+    """
+
+    def __init__(self, grid: TrsmGrid, n: int, *, method: str = "inv",
+                 n0: int | None = None, mode: str | None = None,
+                 lower: bool = True, transpose: bool = False,
+                 machine=None, block_inv: Callable | None = None,
+                 dtype=None, precision=None, map_mode: str = "vmap",
+                 cache: CompiledSolverCache | None = None):
+        if precision is None and dtype is None:
+            dtype = jnp.float32
+        self.policy = preclib.resolve(precision, dtype)
+        sessionlib._check_policy_supported(self.policy)
+        if map_mode not in ("vmap", "scan"):
+            raise ValueError(f"unknown map_mode {map_mode!r}")
+        if method not in ("inv", "rec"):
+            raise ValueError(f"bank method must be 'inv' or 'rec', got "
+                             f"{method!r} (auto-dispatch is k-dependent; "
+                             f"a bank's plan is fixed at admission)")
+        self.grid = grid
+        self.n = n
+        self.method = method
+        self.mode = mode
+        self.lower = lower
+        self.transpose = transpose
+        self.machine = machine
+        self.block_inv = block_inv
+        self.map_mode = map_mode
+        self.cache = cache if cache is not None \
+            else sessionlib.default_cache()
+        if method == "inv":
+            # n0 is pinned at construction (admission pre-inverts the
+            # diagonal blocks, so every program over this bank must
+            # agree on the block size) — default: the hoisted-serving
+            # argmin, which is LARGER than the session default because
+            # the inversion cost leaves the steady state (DESIGN.md
+            # Sec. 9 / tuning.serving_n0).
+            from repro.core import tuning
+            self.n0 = n0 if n0 is not None else tuning.serving_n0(n, grid)
+            if n % self.n0 or self.n0 % (grid.p1 * grid.p2):
+                raise ValueError(f"n0={self.n0} infeasible for n={n} on "
+                                 f"p1={grid.p1}, p2={grid.p2}")
+            from repro.core import inv_trsm
+            self._phase1_mode = mode or inv_trsm.pick_phase1_mode(
+                n, self.n0, grid)
+        else:
+            self.n0 = n0
+            self._phase1_mode = None
+        # resident cyclic copies, stored as admitted CHUNKS — tuples of
+        # per-role arrays with a leading chunk axis (an admit_stack's
+        # whole (M, ...) gather output stays one chunk, so the common
+        # admit-stack-then-serve path never re-slices or re-stacks it);
+        # the fused (M_total, ...) views are built lazily and cached
+        # until admission changes the pool.
+        self._chunks: list[tuple] = []
+        self._size = 0
+        self._stacks: tuple | None = None
+
+    # ------------------------------ admission ------------------------------
+
+    @property
+    def size(self) -> int:
+        """M — the number of resident factors."""
+        return self._size
+
+    def __len__(self) -> int:
+        return self.size
+
+    def _check_square(self, L, ndim: int) -> None:
+        if L.ndim != ndim or L.shape[-2:] != (self.n, self.n):
+            lead = "(M, " if ndim == 3 else "("
+            raise ValueError(f"factor must be {lead}{self.n}, {self.n}), "
+                             f"got {L.shape}")
+
+    def _phase1(self, L_lo, stacked: bool = False):
+        """Admission-time phase 1: invert the factor's diagonal blocks
+        ONCE (the paper's Diagonal-Inverter), so the steady-state
+        program is the sweep alone."""
+        ph1 = sessionlib._build_phase1(
+            self.grid, self.n, self.n0, self._phase1_mode,
+            self.policy.accumulate_dtype, self.block_inv, stacked)
+        return ph1(L_lo)
+
+    def _entry(self, parts: tuple, stacked: bool = False) -> tuple:
+        """(L_lo[, L_hi]) -> the resident tuple (L_lo[, Dt][, L_hi])."""
+        if self.method != "inv":
+            return parts
+        return (parts[0], self._phase1(parts[0], stacked)) + parts[1:]
+
+    def admit(self, L) -> int:
+        """Distribute one natural-layout (n, n) factor into the bank
+        (the session's fused gather, operator reductions folded in,
+        diagonal blocks pre-inverted); returns the factor's bank
+        index."""
+        L = jnp.asarray(L)
+        self._check_square(L, 2)
+        preps = sessionlib._factor_preps(self.grid, self.lower,
+                                         self.transpose, self.policy)
+        self._append(self._entry(tuple(p(L) for p in preps)))
+        return self.size - 1
+
+    def admit_stack(self, Ls) -> range:
+        """Distribute a whole natural-layout (M, n, n) stack in ONE
+        stacked gather program per dtype role (plus one stacked
+        phase-1 inversion); returns the admitted index range."""
+        Ls = jnp.asarray(Ls)
+        self._check_square(Ls, 3)
+        preps = sessionlib._factor_preps(self.grid, self.lower,
+                                         self.transpose, self.policy,
+                                         stacked=True)
+        stacks = self._entry(tuple(p(Ls) for p in preps), stacked=True)
+        first = self.size
+        self._append_chunk(stacks, Ls.shape[0])
+        return range(first, self.size)
+
+    def admit_cyclic(self, L_cyc) -> int:
+        """Direct cyclic ingestion: admit a factor ALREADY in the cyclic
+        storage the producers emit (``cholesky_cyclic`` / ``lu_cyclic``
+        outputs, or a session's ``factor_cyclic``) — no unpermute ->
+        re-permute host round trip, no layout change at all; only the
+        policy's dtype casts are applied (both resident copies when the
+        policy refines, so pass the factor at residual precision or
+        better).
+
+        Only valid for the identity operator reduction (lower=True,
+        transpose=False): for the other variants the distribution
+        gather is not the plain cyclic map, so a raw cyclic array would
+        be misinterpreted."""
+        if not self.lower or self.transpose:
+            raise ValueError(
+                "cyclic ingestion requires lower=True, transpose=False "
+                "(the reversal/transpose reductions are folded into the "
+                "natural-layout distribution gather; a pre-permuted "
+                "factor cannot carry them)")
+        L_cyc = jnp.asarray(L_cyc)
+        self._check_square(L_cyc, 2)
+        sharding = NamedSharding(self.grid.mesh, self.grid.spec_L())
+        dts = (self.policy.storage_dtype,)
+        if self.policy.refines:
+            dts += (self.policy.residual_dtype,)
+        parts = tuple(jax.device_put(jnp.asarray(L_cyc, dt), sharding)
+                      for dt in dts)
+        self._append(self._entry(parts))
+        return self.size - 1
+
+    def _append(self, entry: tuple) -> None:
+        """Admit one factor: a chunk of width 1."""
+        self._append_chunk(tuple(a[None] for a in entry), 1)
+
+    def _append_chunk(self, stacks: tuple, count: int) -> None:
+        self._chunks.append(stacks)
+        self._size += count
+        self._stacks = None
+
+    # ------------------------------- storage -------------------------------
+
+    def _role_specs(self) -> list:
+        """Per-role shard specs of a resident entry: L_lo[, Dt][, L_hi]."""
+        specs = [self.grid.spec_L()]
+        if self.method == "inv":
+            from repro.core.inv_trsm import SPEC_DT
+            specs.append(SPEC_DT)
+        if self.policy.refines:
+            specs.append(self.grid.spec_L())
+        return specs
+
+    def stacks(self) -> tuple:
+        """The resident stacked arrays — one (M, ...) stack per factor
+        role (sweep factor[, inverted diagonal faces][, residual-dtype
+        factor]), each sharded with a leading unmapped factor axis.
+        Built lazily after admission and cached: the steady state
+        reuses the same device buffers, and a pool admitted as one
+        ``admit_stack`` IS its gather output (no re-slice/re-stack —
+        ``jax.device_put`` onto the sharding it already has is free)."""
+        if not self._chunks:
+            raise ValueError("empty bank: admit factors before solving")
+        if self._stacks is None:
+            fused = self._chunks[0] if len(self._chunks) == 1 else tuple(
+                jnp.concatenate([c[r] for c in self._chunks])
+                for r in range(len(self._chunks[0])))
+            self._stacks = tuple(
+                jax.device_put(a,
+                               NamedSharding(self.grid.mesh,
+                                             P(None, *spec)))
+                for a, spec in zip(fused, self._role_specs()))
+        return self._stacks
+
+    @property
+    def factors_cyclic(self):
+        """The storage-dtype (M, n, n) stacked cyclic factor."""
+        return self.stacks()[0]
+
+
+class BatchedTrsmSession:
+    """Serve batched right-hand sides against every factor of a
+    :class:`FactorBank` in one compiled program.
+
+    ``solve(B)`` takes an (M, n, k) stack — row i is the RHS panel for
+    bank factor i — and returns the (M, n, k) solutions, natural layout,
+    at the bank policy's I/O dtype.  One dispatch, zero retraces and
+    zero host transfers in the steady state (after ``warmup``), for
+    every precision policy: the same invariants as
+    :class:`~repro.core.session.TrsmSession`, now amortized over M
+    factors.
+    """
+
+    def __init__(self, bank: FactorBank):
+        self.bank = bank
+        self.solves_served = 0
+
+    @property
+    def n(self) -> int:
+        return self.bank.n
+
+    @property
+    def policy(self):
+        return self.bank.policy
+
+    @property
+    def dtype(self):
+        """The I/O dtype (what ``solve`` returns, what ``place_rhs``
+        casts to): residual dtype for refining policies, compute dtype
+        otherwise."""
+        return self.bank.policy.io_dtype
+
+    def program_for(self, k: int) -> SolverProgram:
+        """The compiled batched :class:`SolverProgram` for RHS width k
+        at the bank's CURRENT width M (cached per (k, M))."""
+        b = self.bank
+        return sessionlib.get_solver(
+            b.grid, n=b.n, k=k, method=b.method, n0=b.n0, mode=b.mode,
+            lower=b.lower, transpose=b.transpose, machine=b.machine,
+            block_inv=b.block_inv, precision=b.policy, bank=b.size,
+            map_mode=b.map_mode, cache=b.cache)
+
+    def place_rhs(self, B):
+        """Pin an (M, n, k) RHS stack to the batched program's input
+        sharding (pays the unavoidable ingestion transfer up front, so
+        ``solve`` itself moves no data)."""
+        B = jnp.asarray(B, self.dtype)
+        prog = self.program_for(B.shape[-1])
+        return jax.device_put(B, prog.rhs_sharding)
+
+    def solve(self, B, *, donate: bool = True):
+        """Solve op(L_i) X_i = B_i for all M factors in one dispatch."""
+        M = self.bank.size
+        if B.ndim != 3 or B.shape[0] != M or B.shape[1] != self.n:
+            raise ValueError(f"rhs stack must be ({M}, {self.n}, k), "
+                             f"got {B.shape}")
+        prog = self.program_for(B.shape[-1])
+        fn = prog.solve_donating if donate else prog.solve
+        X = fn(self.bank.stacks(), B)
+        self.solves_served += M
+        return X
+
+    def warmup(self, k: int):
+        """Compile (and run once on zeros) the batched program for RHS
+        width k at the current bank width."""
+        B = jnp.zeros((self.bank.size, self.n, k), self.dtype)
+        self.solve(B, donate=True)
+        return self

@@ -143,15 +143,30 @@ def cholesky_fn(grid: TrsmGrid, n: int, n0: int | None = None):
                                  out_specs=spec))
 
 
+def cholesky_cyclic(A, grid: TrsmGrid, n0: int | None = None):
+    """Factor A (natural layout, symmetric PD) and return L in CYCLIC
+    storage — the factorization's own working layout, un-unpermuted.
+
+    This is the factor-producer end of the paper's producer->consumer
+    loop (Sec. I: "TRSM is used extensively ... Cholesky, LU, QR"): the
+    result feeds ``repro.core.bank.FactorBank.admit_cyclic`` (or any
+    cyclic-storage consumer) directly, with no unpermute -> re-permute
+    round trip and no host traffic."""
+    from repro.core.grid import cyclic_matrix_device
+    n = A.shape[0]
+    p1, p2 = grid.p1, grid.p2
+    Ac = cyclic_matrix_device(jnp.asarray(A), p1, p1 * p2)
+    return cholesky_fn(grid, n, n0)(Ac)
+
+
 def cholesky(A, grid: TrsmGrid, n0: int | None = None):
     """Natural-layout convenience entry point (A symmetric PD).
 
     Device-resident: the cyclic permutations run as on-device gathers
     (repro.core.grid.cyclic_matrix_device) and the compiled program is
-    memoized — no host round-trip, no per-call retrace."""
+    memoized — no host round-trip, no per-call retrace.  For feeding a
+    FactorBank keep the cyclic output instead: :func:`cholesky_cyclic`."""
     from repro.core.grid import cyclic_matrix_device
-    n = A.shape[0]
     p1, p2 = grid.p1, grid.p2
-    Ac = cyclic_matrix_device(jnp.asarray(A), p1, p1 * p2)
-    Lc = cholesky_fn(grid, n, n0)(Ac)
+    Lc = cholesky_cyclic(A, grid, n0)
     return cyclic_matrix_device(Lc, p1, p1 * p2, inverse=True)

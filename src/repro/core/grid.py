@@ -122,15 +122,22 @@ def cyclic_row_index(n: int, p: int, *, inverse: bool = False,
 @functools.partial(jax.jit, static_argnames=("p", "inverse", "reverse"))
 def cyclic_rows_device(a, p: int, *, inverse: bool = False,
                        reverse: bool = False):
-    """On-device natural <-> cyclic storage permutation along axis 0.
+    """On-device natural <-> cyclic storage permutation along the row
+    axis (axis 0 for an (n, k) operand; axis -2 for a stacked
+    (..., n, k) operand, so one gather permutes a whole factor bank's
+    worth of right-hand sides).
 
     The jitted equivalent of :func:`to_cyclic_rows` /
     :func:`from_cyclic_rows`: one gather, computed where the operand
     lives (XLA turns the static index array into a data-movement-only
     program; under GSPMD the gather is partitioned over the mesh), so
     the solve pipeline never bounces rows through host NumPy."""
-    idx = cyclic_row_index(a.shape[0], p, inverse=inverse, reverse=reverse)
-    return a[jnp.asarray(idx)]
+    if p == 1 and not reverse:
+        return a                       # identity permutation: no gather
+    axis = max(a.ndim - 2, 0)
+    idx = cyclic_row_index(a.shape[axis], p, inverse=inverse,
+                           reverse=reverse)
+    return jnp.take(a, jnp.asarray(idx), axis=axis)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -139,7 +146,10 @@ def cyclic_rows_device(a, p: int, *, inverse: bool = False,
 def cyclic_matrix_device(A, p_row: int, p_col: int, *,
                          inverse: bool = False, reverse_rows: bool = False,
                          reverse_cols: bool = False, transpose: bool = False):
-    """On-device natural <-> cyclic storage permutation for a matrix.
+    """On-device natural <-> cyclic storage permutation for a matrix,
+    or for a STACK of matrices (leading batch axes: the permutations
+    apply to the trailing two axes, so a factor bank's (M, n, n) stack
+    is distributed by the same single fused gather program).
 
     Composes (optional) transposition and (optional) per-axis reversal
     with the two cyclic gathers, so an upper/transposed factor is
@@ -148,12 +158,16 @@ def cyclic_matrix_device(A, p_row: int, p_col: int, *,
     — it is only meaningful for the forward direction, where the
     operator reductions L^T / JUJ are folded into distribution."""
     if transpose:
-        A = A.T
-    ri = cyclic_row_index(A.shape[0], p_row, inverse=inverse,
-                          reverse=reverse_rows)
-    ci = cyclic_row_index(A.shape[1], p_col, inverse=inverse,
-                          reverse=reverse_cols)
-    return A[jnp.asarray(ri)][:, jnp.asarray(ci)]
+        A = jnp.swapaxes(A, -2, -1)
+    if p_row > 1 or reverse_rows:      # p == 1 without reversal is the
+        ri = cyclic_row_index(A.shape[-2], p_row, inverse=inverse,
+                              reverse=reverse_rows)
+        A = jnp.take(A, jnp.asarray(ri), axis=-2)
+    if p_col > 1 or reverse_cols:      # identity: skip the gather
+        ci = cyclic_row_index(A.shape[-1], p_col, inverse=inverse,
+                              reverse=reverse_cols)
+        A = jnp.take(A, jnp.asarray(ci), axis=-1)
+    return A
 
 
 def shard(grid: TrsmGrid, arr, spec):

@@ -146,8 +146,17 @@ def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode,
     raise ValueError(mode)
 
 
-def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
-                       accum_dtype=None):
+def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
+                 accum_dtype=None, unroll=False):
+    """Phase 2 (sweep, paper Alg. It-Inv-TRSM lines 3-10) against
+    ALREADY-INVERTED diagonal faces Dt (m, n0/p1, n0/p1).
+
+    Split out of the fused solve so a factor bank can hoist phase 1 to
+    admission time (the factor is immutable, so re-inverting its
+    diagonal blocks every solve is pure steady-state waste) and serve
+    with this sweep alone.  ``unroll`` unrolls the m-trip loop at trace
+    time — the banked programs use it so XLA sees straight-line batched
+    GEMMs instead of a loop of dynamic slices."""
     m = n // n0
     nl = n // p1
     kl = k // p2
@@ -157,13 +166,9 @@ def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
     ct = Bloc.dtype
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else ct
 
-    Dt = _invert_diag_blocks(Lloc, n=n, n0=n0, p1=p1, p2=p2,
-                             block_inv=block_inv, mode=mode,
-                             accum_dtype=acc)
-
     row_g = jnp.arange(nl) * p1 + xi                   # global row ids
 
-    def body(i, carry):
+    def body(i, carry, update=True):
         Bcur, Xacc = carry
         Bi = jax.lax.dynamic_slice(Bcur, (i * a, 0), (a, kl))
         Dti = jax.lax.dynamic_index_in_dim(Dt, i, axis=0, keepdims=False)
@@ -173,6 +178,8 @@ def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
         Xi = comm.psum(jax.lax.dot(Dti, Bi, preferred_element_type=acc),
                        "x").astype(ct)
         Xacc = jax.lax.dynamic_update_slice(Xacc, Xi, (i * a, 0))
+        if not update:
+            return Bcur, Xacc
         panel = jax.lax.dynamic_slice(Lloc, (0, i * b), (nl, b))
         pg = comm.all_gather(panel, "z", axis=0, tiled=False)  # (p2, nl, b)
         pg = jnp.transpose(pg, (1, 2, 0)).reshape(nl, a)  # cols t' = c*p2+z
@@ -183,9 +190,75 @@ def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
         return Bcur, Xacc
 
     x0 = compat.pcast_varying(jnp.zeros((nl, kl), Bloc.dtype), ("y", "z"))
+    if unroll:
+        carry = (Bloc, x0)
+        for i in range(m):
+            # the final trailing update only touches the discarded
+            # remainder of B; unrolling lets us drop it entirely
+            carry = body(i, carry, update=i + 1 < m)
+        return carry[1]
     with comm.scope(m):
         _, X = jax.lax.fori_loop(0, m, body, (Bloc, x0))
     return X
+
+
+def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
+                       accum_dtype=None):
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else Bloc.dtype
+    Dt = _invert_diag_blocks(Lloc, n=n, n0=n0, p1=p1, p2=p2,
+                             block_inv=block_inv, mode=mode,
+                             accum_dtype=acc)
+    return _sweep_shard(Lloc, Dt, Bloc, n=n, k=k, n0=n0, p1=p1, p2=p2,
+                        accum_dtype=acc)
+
+
+# Sharding of the inverted-diagonal-faces array Dt (m, n0, n0): rows
+# cyclic over y, cols cyclic over x (the transposed face the solve GEMM
+# consumes), replicated over z — permuted storage like everything else.
+SPEC_DT = P(None, "y", "x")
+
+
+def it_inv_phase1_sharded(grid: TrsmGrid, n: int, n0: int,
+                          block_inv: Callable | None = None,
+                          mode: str | None = None, accum_dtype=None):
+    """Build the (un-jitted) shard_map program for phase 1 ALONE:
+    L_cyc (n, n) P("x", ("z","y")) -> Dt (m, n0, n0) :data:`SPEC_DT`,
+    the transposed-face pieces of the inverted diagonal blocks.
+
+    This is the factor-bank admission path (DESIGN.md Sec. 9): a
+    resident factor is immutable, so its diagonal-block inversion runs
+    ONCE here and the steady state runs :func:`it_inv_sweep_sharded`
+    against the resident Dt — the per-solve cost drops the inversion
+    term, which is also why the bank's tuned n0 is larger
+    (``tuning.serving_n0``)."""
+    mode = mode or pick_phase1_mode(n, n0, grid)
+    binv = block_inv if block_inv is not None else blocked.tri_inv_batched
+    body = functools.partial(_invert_diag_blocks, n=n, n0=n0,
+                             p1=grid.p1, p2=grid.p2, block_inv=binv,
+                             mode=mode, accum_dtype=accum_dtype)
+    return compat.shard_map(body, mesh=grid.mesh,
+                            in_specs=(grid.spec_L(),),
+                            out_specs=SPEC_DT,
+                            check_vma=block_inv is None)
+
+
+def it_inv_sweep_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
+                         accum_dtype=None, unroll: bool = True):
+    """Build the (un-jitted) shard_map program for the SWEEP against
+    pre-inverted diagonal faces: (L_cyc, Dt, B_cyc) -> X_cyc.
+
+    Layouts as :func:`it_inv_trsm_sharded` plus Dt per :data:`SPEC_DT`
+    (an :func:`it_inv_phase1_sharded` output).  Mode-independent: the
+    phase-1 scheme only matters when Dt is produced."""
+    check_divisibility(n, k, n0, grid)
+    body = functools.partial(_sweep_shard, n=n, k=k, n0=n0,
+                             p1=grid.p1, p2=grid.p2,
+                             accum_dtype=accum_dtype, unroll=unroll)
+    return compat.shard_map(body, mesh=grid.mesh,
+                            in_specs=(grid.spec_L(), SPEC_DT,
+                                      grid.spec_B()),
+                            out_specs=grid.spec_X())
 
 
 def pick_phase1_mode(n: int, n0: int, grid: TrsmGrid) -> str:

@@ -102,14 +102,29 @@ def lu_fn(grid: TrsmGrid, n: int, n0: int | None = None):
                                  out_specs=(spec, spec)))
 
 
-def lu(A, grid: TrsmGrid, n0: int | None = None):
-    """Natural-layout LU (no pivoting): returns (L, U), A = L @ U.
+def lu_cyclic(A, grid: TrsmGrid, n0: int | None = None):
+    """LU-factor A (natural layout) and return (L_cyc, U_cyc) in CYCLIC
+    storage — the factorization's own working layout, un-unpermuted.
 
-    Device-resident: on-device cyclic permutations, memoized program."""
+    The factor-producer end of the paper's producer->consumer loop:
+    ``L_cyc`` feeds ``repro.core.bank.FactorBank.admit_cyclic``
+    directly (lower solves), with no unpermute -> re-permute round
+    trip.  (``U_cyc`` consumers need the transpose reduction folded at
+    distribution, so upper banks ingest U via the natural layout.)"""
     from repro.core.grid import cyclic_matrix_device
     n = A.shape[0]
     p1, p2 = grid.p1, grid.p2
     Ac = cyclic_matrix_device(jnp.asarray(A), p1, p1 * p2)
-    Lc, Uc = lu_fn(grid, n, n0)(Ac)
+    return lu_fn(grid, n, n0)(Ac)
+
+
+def lu(A, grid: TrsmGrid, n0: int | None = None):
+    """Natural-layout LU (no pivoting): returns (L, U), A = L @ U.
+
+    Device-resident: on-device cyclic permutations, memoized program.
+    For feeding a FactorBank keep the cyclic output: :func:`lu_cyclic`."""
+    from repro.core.grid import cyclic_matrix_device
+    p1, p2 = grid.p1, grid.p2
+    Lc, Uc = lu_cyclic(A, grid, n0)
     return (cyclic_matrix_device(Lc, p1, p1 * p2, inverse=True),
             cyclic_matrix_device(Uc, p1, p1 * p2, inverse=True))

@@ -56,11 +56,22 @@ def apply_cyclic_operator(L_cyc, X, *, p1: int, p2: int, reverse: bool,
     against the resident factor, and the inverse gather by the factor's
     ROW map.  The transpose flag needs no case here: it was applied to
     the matrix before distribution, so it is part of op(A) already.
+
+    Accepts stacked operands too — L_cyc (M, n, n) with X (M, n, k) —
+    in which case the gathers permute the trailing row axis and the
+    GEMM is one batched contraction: a factor bank's whole refinement
+    residual is three ops (DESIGN.md Sec. 9).
     """
     Xg = gridlib.cyclic_rows_device(X, p1 * p2, reverse=reverse)
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else X.dtype
-    Y = jax.lax.dot(L_cyc, Xg.astype(L_cyc.dtype),
-                    preferred_element_type=acc)
+    if L_cyc.ndim == 2:
+        Y = jax.lax.dot(L_cyc, Xg.astype(L_cyc.dtype),
+                        preferred_element_type=acc)
+    else:
+        Y = jax.lax.dot_general(
+            L_cyc, Xg.astype(L_cyc.dtype),
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=acc)
     return gridlib.cyclic_rows_device(Y, p1, inverse=True, reverse=reverse)
 
 

@@ -335,6 +335,70 @@ def check_session() -> int:
     return fails
 
 
+def check_bank() -> int:
+    """Multi-factor batched serving on multi-device grids: stacked
+    admission + cyclic ingestion, vmap/scan mapped programs, mixed
+    precision, and the banked steady state (DESIGN.md Sec. 9)."""
+    from repro import core
+    from repro.core import cholesky, grid as gridlib, session
+    from repro.core.bank import BatchedTrsmSession, FactorBank
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    rng = np.random.default_rng(9)
+    M, n, k = 3, 64, 16
+    for (p1, p2, method, map_mode, precision) in [
+            (2, 2, "inv", "vmap", None),
+            (2, 2, "inv", "scan", None),
+            (2, 1, "rec", "vmap", None),
+            (2, 2, "inv", "vmap", "bf16_refine")]:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        dt = np.float32 if precision else np.float64
+        Ls = np.stack([_random_tril(10 + i, n, dt) for i in range(M)])
+        bank = FactorBank(grid, n, method=method,
+                          n0=None if method == "inv" else 16,
+                          dtype=None if precision else dt,
+                          precision=precision, map_mode=map_mode)
+        bank.admit_stack(Ls[:2])
+        bank.admit(Ls[2])
+        sess = BatchedTrsmSession(bank)
+        key = sess.program_for(k).key
+        before = session.TRACE_COUNTS[key]
+        sess.warmup(k)
+        Bs = [sess.place_rhs(rng.standard_normal((M, n, k)).astype(dt))
+              for _ in range(3)]
+        with jax.transfer_guard("disallow"):
+            outs = [sess.solve(b, donate=False) for b in Bs]
+        rel = max(np.linalg.norm(Ls[i].astype(np.float64)
+                                 @ np.asarray(x[i], np.float64)
+                                 - np.asarray(b[i]))
+                  / np.linalg.norm(np.asarray(b[i]))
+                  for b, x in zip(Bs, outs) for i in range(M))
+        steady = session.TRACE_COUNTS[key] == before + 1
+        ok = rel < (1e-5 if precision else 1e-10) and steady
+        print(f"bank {method} p1={p1} p2={p2} {map_mode} "
+              f"{precision or 'uniform'} n0={bank.n0}: relres={rel:.2e} "
+              f"retraces={'0' if steady else 'NONZERO'} "
+              f"{'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    # cyclic ingestion from a grid-resident factorization
+    grid = gridlib.make_trsm_mesh(2, 2)
+    L0 = _random_tril(20, n)
+    A = L0 @ L0.T
+    bank = FactorBank(grid, n, dtype=np.float64)
+    bank.admit_cyclic(cholesky.cholesky_cyclic(A, grid))
+    sess = BatchedTrsmSession(bank)
+    B = rng.standard_normal((1, n, k))
+    X = np.asarray(sess.solve(sess.place_rhs(B))[0], np.float64)
+    Lnat = np.asarray(cholesky.cholesky(A, grid), np.float64)
+    rel = np.linalg.norm(Lnat @ X - B[0]) / np.linalg.norm(B[0])
+    ok = rel < 1e-10
+    print(f"bank cyclic-ingest p1=2 p2=2: relres={rel:.2e} "
+          f"{'OK' if ok else 'FAIL'}")
+    fails += 0 if ok else 1
+    return fails
+
+
 CHECKS = {
     "order": check_collective_order,
     "it_inv_trsm": check_it_inv_trsm,
@@ -345,6 +409,7 @@ CHECKS = {
     "doubling": check_doubling_mode,
     "lu": check_lu,
     "session": check_session,
+    "bank": check_bank,
 }
 
 

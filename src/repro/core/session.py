@@ -117,7 +117,10 @@ class CompiledSolverCache:
     * ``method`` — "inv" (It-Inv-TRSM) or "rec" (recursive baseline),
     * ``mode`` — the inv phase-1 scheme (alltoall/doubling/allgather),
     * ``lower, transpose`` — the operator variant,
-    * ``block_inv`` — the optional diagonal-block inverter hook.
+    * ``block_inv`` — the optional diagonal-block inverter hook,
+    * ``bank, map_mode`` — the factor-bank width M (None for a
+      single-factor program) and how the batched program maps over the
+      factor axis ("vmap" | "scan"); see ``repro.core.bank``.
 
     Thread-safe; eviction drops the jitted callables (XLA frees the
     executables with them).
@@ -175,14 +178,18 @@ def default_cache() -> CompiledSolverCache:
 # ------------------------- program construction -------------------------
 
 @functools.lru_cache(maxsize=128)
-def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype):
+def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype,
+                stacked: bool = False):
     """Jitted L_nat -> L_cyc distribution (shared by both methods: rec
     and inv use the same P("x", ("z","y")) factor layout).  Memoized on
     its full key — including the target dtype, so a refining policy's
     storage- and residual-precision copies are two entries — and every
     RHS width and every session for the same configuration reuses one
-    traced program."""
-    from jax.sharding import NamedSharding
+    traced program.  ``stacked`` builds the factor-bank variant: the
+    SAME fused gather applied to an (M, n, n) stack in one program
+    (grid.cyclic_matrix_device permutes the trailing two axes), output
+    sharded P(None, "x", ("z","y"))."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
     p1, p2 = grid.p1, grid.p2
     rev = _needs_reversal(lower, transpose)
 
@@ -192,18 +199,37 @@ def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype):
             L, p1, p1 * p2, reverse_rows=rev, reverse_cols=rev,
             transpose=transpose)
 
-    return jax.jit(prep,
-                   out_shardings=NamedSharding(grid.mesh, grid.spec_L()))
+    spec = P(None, *grid.spec_L()) if stacked else grid.spec_L()
+    return jax.jit(prep, out_shardings=NamedSharding(grid.mesh, spec))
 
 
 def _factor_preps(grid: TrsmGrid, lower: bool, transpose: bool,
-                  policy: PrecisionPolicy) -> tuple:
+                  policy: PrecisionPolicy, stacked: bool = False) -> tuple:
     """The (storage[, residual]) distribution programs for a policy."""
-    preps = (_build_prep(grid, lower, transpose, policy.storage_dtype),)
+    preps = (_build_prep(grid, lower, transpose, policy.storage_dtype,
+                         stacked),)
     if policy.refines:
         preps += (_build_prep(grid, lower, transpose,
-                              policy.residual_dtype),)
+                              policy.residual_dtype, stacked),)
     return preps
+
+
+@functools.lru_cache(maxsize=128)
+def _build_phase1(grid: TrsmGrid, n: int, n0: int, mode: str,
+                  accum, block_inv, stacked: bool = False):
+    """Jitted phase-1 program L_cyc -> Dt (the inverted diagonal
+    faces), shared by factor-bank admission and banked-program prep.
+    ``stacked`` maps it over a leading factor axis (one program inverts
+    a whole (M, n, n) stack's diagonal blocks)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import inv_trsm
+    prog = inv_trsm.it_inv_phase1_sharded(
+        grid, n, n0, mode=mode,
+        accum_dtype=jnp.dtype(accum) if accum is not None else None,
+        block_inv=block_inv)
+    fn = jax.vmap(prog) if stacked else prog
+    spec = P(None, *inv_trsm.SPEC_DT) if stacked else inv_trsm.SPEC_DT
+    return jax.jit(fn, out_shardings=NamedSharding(grid.mesh, spec))
 
 
 def _check_policy_supported(policy: PrecisionPolicy) -> None:
@@ -218,35 +244,79 @@ def _check_policy_supported(policy: PrecisionPolicy) -> None:
 
 
 def _build_solver(grid: TrsmGrid, *, n, k, n0, policy, method, mode,
-                  lower, transpose, block_inv, key) -> SolverProgram:
+                  lower, transpose, block_inv, key, bank=None,
+                  map_mode="vmap") -> SolverProgram:
     from jax.sharding import NamedSharding, PartitionSpec as P
     p1, p2 = grid.p1, grid.p2
     rev = _needs_reversal(lower, transpose)
     compute = policy.compute_dtype
     accum = policy.accumulate_dtype
 
+    # Batched-bank programs map ONLY the cyclic-storage sweep over the
+    # leading factor axis ("vmap": every sweep step is an M-wide
+    # batched GEMM; "scan": factors serialized inside the same single
+    # program, memory-lean for large banks).  Everything around the
+    # sweep stays stack-level: the B-permute / X-unpermute are per-axis
+    # row permutations IDENTICAL across factors, so they run as ONE
+    # batched gather for the whole (M, n, k) stack, and the refinement
+    # residual is one batched GEMM between two such gathers
+    # (apply_cyclic_operator on stacked operands).
+    def _map_factors(fn):
+        if map_mode == "vmap":
+            return jax.vmap(fn)
+
+        def scanned(*stacks):
+            return jax.lax.scan(lambda c, xs: (c, fn(*xs)), None,
+                                stacks)[1]
+        return scanned
+
+    prefactored = bank is not None and method == "inv"
     if method == "inv":
         from repro.core import inv_trsm
         resolved_mode = mode or inv_trsm.pick_phase1_mode(n, n0, grid)
-        sharded = inv_trsm.it_inv_trsm_sharded(grid, n, k, n0,
-                                               block_inv=block_inv,
-                                               mode=resolved_mode,
-                                               accum_dtype=accum)
         # natural-B placement: columns over z (matching spec_B), rows
         # replicated so the row-permutation gather is shard-local.
         rhs_spec = P(None, "z")
 
-        def base_solve(L_cyc, B):
-            B_cyc = gridlib.cyclic_rows_device(
-                jnp.asarray(B, compute), p1, reverse=rev)
-            X_cyc = sharded(L_cyc, B_cyc)
-            return gridlib.cyclic_rows_device(X_cyc, p1, inverse=True,
-                                              reverse=rev)
+        if prefactored:
+            # Banked steady state: the diagonal-block inversion was
+            # hoisted to admission (the factor is immutable), so the
+            # program is the sweep alone against the resident Dt —
+            # unrolled, so mapping over factors yields straight-line
+            # batched GEMMs (DESIGN.md Sec. 9).  Unrolling is capped:
+            # a factor order with no good power-of-two divisor can pin
+            # n0 = 1, and a straight-line m = n sweep would blow up
+            # trace/compile time — past the cap the sweep keeps its
+            # fori_loop (still one mapped program).
+            sweep = _map_factors(inv_trsm.it_inv_sweep_sharded(
+                grid, n, k, n0, accum_dtype=accum,
+                unroll=(n // n0) <= 64))
+
+            def base_solve(L_pair, B):
+                B_cyc = gridlib.cyclic_rows_device(
+                    jnp.asarray(B, compute), p1, reverse=rev)
+                X_cyc = sweep(L_pair[0], L_pair[1], B_cyc)
+                return gridlib.cyclic_rows_device(X_cyc, p1, inverse=True,
+                                                  reverse=rev)
+        else:
+            sharded = inv_trsm.it_inv_trsm_sharded(grid, n, k, n0,
+                                                   block_inv=block_inv,
+                                                   mode=resolved_mode,
+                                                   accum_dtype=accum)
+
+            def base_solve(L_cyc, B):
+                B_cyc = gridlib.cyclic_rows_device(
+                    jnp.asarray(B, compute), p1, reverse=rev)
+                X_cyc = sharded(L_cyc, B_cyc)
+                return gridlib.cyclic_rows_device(X_cyc, p1, inverse=True,
+                                                  reverse=rev)
     elif method == "rec":
         from repro.core import rec_trsm
         resolved_mode = None
         sharded = rec_trsm.rec_trsm_sharded(grid, n, k, n0,
                                             accum_dtype=accum)
+        if bank is not None:
+            sharded = _map_factors(sharded)
         rhs_spec = P(None, ("z", "y"))
 
         def base_solve(L_cyc, B):
@@ -258,22 +328,52 @@ def _build_solver(grid: TrsmGrid, *, n, k, n0, policy, method, mode,
     else:
         raise ValueError(f"unknown method {method!r}")
 
+    # Factor tuple layout (flat, shardable): (L_lo[, Dt][, L_hi]) — Dt
+    # present only for prefactored (banked inv) programs, where the
+    # sweep operand is the (L_lo, Dt) pair.  The refinement loop is
+    # dimension-agnostic, so the SAME body serves single factors and
+    # whole banks.
+    def split(factor):
+        L_sweep = (factor[0], factor[1]) if prefactored else factor[0]
+        L_hi = factor[-1] if policy.refines else None
+        return L_sweep, L_hi
+
     def program(factor, B):
         TRACE_COUNTS[key] += 1
-        L_lo = factor[0]
-        L_hi = factor[1] if policy.refines else None
-        return refinelib.refined_solve(base_solve, L_lo, L_hi, B,
+        L_sweep, L_hi = split(factor)
+        return refinelib.refined_solve(base_solve, L_sweep, L_hi, B,
                                        policy=policy, p1=p1, p2=p2,
                                        reverse=rev)
 
-    preps = _factor_preps(grid, lower, transpose, policy)
-    L_sh = NamedSharding(grid.mesh, grid.spec_L())
-    rhs_sh = NamedSharding(grid.mesh, rhs_spec)
-    jit_kw = dict(in_shardings=((L_sh,) * len(preps), rhs_sh),
+    stacked = bank is not None
+    preps = _factor_preps(grid, lower, transpose, policy, stacked)
+    if prefactored:
+        ph1 = _build_phase1(grid, n, n0, resolved_mode, accum, block_inv,
+                            stacked)
+
+        def prep_fn(L):
+            parts = tuple(p(L) for p in preps)     # (L_lo[, L_hi])
+            return (parts[0], ph1(parts[0])) + parts[1:]
+    else:
+        def prep_fn(L):
+            return tuple(p(L) for p in preps)
+
+    def _lead(spec):
+        return P(None, *spec) if stacked else spec
+
+    factor_specs = [_lead(grid.spec_L())]
+    if prefactored:
+        from repro.core.inv_trsm import SPEC_DT
+        factor_specs.append(_lead(SPEC_DT))
+    if policy.refines:
+        factor_specs.append(_lead(grid.spec_L()))
+    factor_sh = tuple(NamedSharding(grid.mesh, s) for s in factor_specs)
+    rhs_sh = NamedSharding(grid.mesh, _lead(rhs_spec))
+    jit_kw = dict(in_shardings=(factor_sh, rhs_sh),
                   out_shardings=rhs_sh)
     return SolverProgram(
         key=key,
-        prep=lambda L: tuple(p(L) for p in preps),
+        prep=prep_fn,
         solve=jax.jit(program, **jit_kw),
         solve_donating=jax.jit(program, donate_argnums=(1,), **jit_kw),
         rhs_sharding=rhs_sh,
@@ -307,6 +407,7 @@ def get_solver(grid: TrsmGrid, *, n: int, k: int, dtype=None,
                transpose: bool = False, machine=None,
                block_inv: Callable | None = None,
                precision=None,
+               bank: int | None = None, map_mode: str = "vmap",
                cache: CompiledSolverCache | None = None) -> SolverProgram:
     """Fetch (or build) the compiled solve program for a configuration.
 
@@ -315,17 +416,31 @@ def get_solver(grid: TrsmGrid, *, n: int, k: int, dtype=None,
     :class:`~repro.core.precision.PrecisionPolicy`; when omitted, the
     uniform single-dtype policy at ``dtype`` is used (the legacy
     pipeline).  Exactly one of ``precision`` / ``dtype`` is required.
+
+    ``bank`` requests the BATCHED program over a stack of M factors
+    (``repro.core.bank.FactorBank``): ``factor`` becomes a tuple of
+    (M, n, n) stacks and B an (M, n, k) stack, solved in one dispatch
+    by mapping the per-factor body over the leading axis with
+    ``map_mode`` ("vmap" | "scan", see DESIGN.md Sec. 9).  The bank
+    width (and map mode) join the cache key: banks of different widths
+    are different compiled artifacts, while every same-width bank of
+    the same configuration shares one program.
     """
     cache = cache if cache is not None else _DEFAULT_CACHE
+    if bank is not None and bank < 1:
+        raise ValueError(f"bank width must be >= 1, got {bank}")
+    if map_mode not in ("vmap", "scan"):
+        raise ValueError(f"unknown map_mode {map_mode!r}")
     method, n0 = resolve_plan(grid, n, k, method=method, n0=n0,
                               machine=machine)
     policy = preclib.resolve(precision, dtype)
     _check_policy_supported(policy)
     key = (n, k, n0, policy, grid, method, mode, lower, transpose,
-           block_inv)
+           block_inv, bank, map_mode if bank is not None else None)
     return cache.get(key, lambda: _build_solver(
         grid, n=n, k=k, n0=n0, policy=policy, method=method, mode=mode,
-        lower=lower, transpose=transpose, block_inv=block_inv, key=key))
+        lower=lower, transpose=transpose, block_inv=block_inv, key=key,
+        bank=bank, map_mode=map_mode))
 
 
 # ------------------------------ sessions ------------------------------

@@ -143,11 +143,20 @@ def _feasible_n0(n: int, p1: int, p2: int) -> list[int]:
 
 
 def _inv_subgrid(n: int, n0: int, p: int) -> tuple[int, int]:
-    """r1, r2 per Sec. VI-A: r1^2 r2 = p n0 / n, ideal ratio r2 = 4 r1."""
-    q = max(1.0, p * n0 / n)
+    """r1, r2 per Sec. VI-A: r1^2 r2 = p n0 / n, ideal ratio r2 = 4 r1.
+
+    The subgrid is a processor ASSIGNMENT, so feasibility means
+    r1^2 * r2 <= p.  Snapping each factor to its nearest power of two
+    independently can overshoot (e.g. q = 6 snaps r2 from 3 up to 8,
+    an 8-processor subgrid on a 6-processor machine); clamp each factor
+    back down in power-of-two steps until the product fits."""
+    q = max(1.0, min(float(p), p * n0 / n))
     r1 = _snap_pow2((q / 4.0) ** (1 / 3))
-    r2 = max(1, int(q) // (r1 * r1))
-    r2 = _snap_pow2(r2)
+    while r1 > 1 and r1 * r1 > p:
+        r1 //= 2
+    r2 = _snap_pow2(max(1, int(q) // (r1 * r1)))
+    while r2 > 1 and r1 * r1 * r2 > p:
+        r2 //= 2
     return r1, r2
 
 
@@ -197,6 +206,30 @@ def tune_for_grid(n: int, k: int, grid,
             best = (t, TrsmPlan(regime(n, k, p), p1, p2, n0, r1, r2,
                                 c, n, k, p))
     return best[1]
+
+
+def serving_n0(n: int, grid) -> int:
+    """Diagonal-block size for the HOISTED steady state (factor banks,
+    DESIGN.md Sec. 9).
+
+    The Sec. VIII argmin balances sweep latency (fewer, larger blocks)
+    against diagonal-inversion flops (more, smaller blocks).  A factor
+    bank inverts the diagonal blocks ONCE at admission, so the
+    inversion term leaves the per-solve cost entirely and the argmin
+    degenerates monotonically toward the largest feasible block.  We
+    stop at n0 <= n/2 (the largest feasible block that keeps m >= 2,
+    i.e. keeps the substitution structure of the sweep) as the
+    stability hedge: the Sec. V bound on inversion error grows with
+    the inverted block's order, and m = 1 would be full triangular
+    inversion — an explicit opt-in (n0 = n), not a preference.  The
+    one exception: when the cyclic layout admits NO block smaller than
+    n (n0 = n is the only feasible size, e.g. n = p1^2*p2), m = 1 is
+    forced rather than chosen and is returned — there is no hedged
+    alternative to decline to pick.  k does not enter: with inversion
+    hoisted, every remaining cost term scales the same way in k."""
+    feas = _feasible_n0(n, grid.p1, grid.p2)
+    capped = [n0 for n0 in feas if n0 <= n // 2]
+    return max(capped) if capped else max(feas)
 
 
 def tuning_table(n: int, k: int, p: int) -> dict:

@@ -11,6 +11,13 @@ TRSM solve serving against a device-resident factor.
     PYTHONPATH=src python -m repro.launch.serve --workload trsm \
         --n 256 --panel-k 16 --requests 64 [--p1 2 --p2 2] \
         [--precision fp32|bf16|bf16_refine|fp64_refine]
+
+    # multi-factor batched serving: M resident factors (a FactorBank),
+    # per-factor request queues, every wave = ONE dispatch covering all
+    # M factors (per-layer preconditioners / per-tenant models)
+    PYTHONPATH=src python -m repro.launch.serve --workload trsm-bank \
+        --bank 16 --n 256 --panel-k 16 --requests 256 \
+        [--map-mode vmap|scan] [--precision bf16_refine]
 """
 
 from __future__ import annotations
@@ -60,9 +67,43 @@ def serve_trsm(args):
           f"{policy.refine_steps} refine passes)")
 
 
+def serve_trsm_bank(args):
+    """Serve solve requests against a bank of M resident factors."""
+    if args.precision == "fp64_refine":
+        jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    n, M = args.n, args.bank
+    Ls = np.stack([np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+                   for _ in range(M)])
+    if args.precision != "fp64_refine":
+        Ls = Ls.astype(np.float32)
+    server = ss.make_trsm_bank_server(
+        Ls, p1=args.p1, p2=args.p2, panel_k=args.panel_k,
+        method=args.method, n0=args.n0, precision=args.precision,
+        map_mode=args.map_mode)
+    widths = rng.integers(1, args.panel_k + 1, args.requests)
+    t0 = time.time()
+    for i, w in enumerate(widths):
+        server.submit(int(i % M), rng.standard_normal((n, int(w))))
+    outs = server.drain()
+    jax.block_until_ready([x for xs in outs.values() for x in xs])
+    dt = time.time() - t0
+    waves = server.waves_solved
+    policy = server.session.policy
+    print(f"served {server.requests_served} solve requests "
+          f"({int(widths.sum())} columns) against {M} factors in "
+          f"{waves} waves (one dispatch per wave, {M} solves each), "
+          f"{dt:.3f}s ({dt / max(waves, 1) * 1e3:.2f} ms/wave, "
+          f"{dt / max(waves * M, 1) * 1e3:.3f} ms/solve) on grid "
+          f"p1={args.p1} p2={args.p2} n={n} "
+          f"map_mode={server.session.bank.map_mode} "
+          f"precision={policy.name} ({policy.refine_steps} refine passes)")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="lm", choices=["lm", "trsm"])
+    ap.add_argument("--workload", default="lm",
+                    choices=["lm", "trsm", "trsm-bank"])
     ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", default="debug",
@@ -79,6 +120,11 @@ def main():
     ap.add_argument("--p2", type=int, default=1)
     ap.add_argument("--method", default="inv",
                     choices=["inv", "rec", "auto"])
+    ap.add_argument("--bank", type=int, default=16,
+                    help="factor count M for the trsm-bank workload")
+    ap.add_argument("--map-mode", default="vmap",
+                    choices=["vmap", "scan"],
+                    help="how the bank program maps the factor axis")
     ap.add_argument("--precision", default=None,
                     choices=["fp32", "bf16", "bf16_refine", "fp64_refine"],
                     help="mixed-precision policy for the trsm workload "
@@ -87,6 +133,8 @@ def main():
 
     if args.workload == "trsm":
         return serve_trsm(args)
+    if args.workload == "trsm-bank":
+        return serve_trsm_bank(args)
     if not args.arch:
         ap.error("--arch is required for the lm workload")
 

@@ -122,6 +122,72 @@ def _precondition(G, Aema, Bema, damping, mode="whiten"):
     return P.T if transpose else P
 
 
+def factor_banks_from_state(state, *, damping: float = 1e-3,
+                            grid=None, precision=None,
+                            method: str = "inv", n0: int | None = None,
+                            map_mode: str = "vmap"):
+    """Pool a kfac_ca optimizer state's per-layer Cholesky factors into
+    :class:`repro.core.FactorBank`s for batched serving (DESIGN.md
+    Sec. 9).
+
+    Every eligible tensor contributes its DAMPED Kronecker-factor
+    Cholesky factors — ``chol(A + lam I)`` (d_out side) and
+    ``chol(B + lam I)`` (d_in side), the same damping rule the
+    preconditioner applies — and factors of equal order are grouped
+    into one bank per dimension, so applying / auditing the whole
+    model's preconditioners is one batched dispatch per distinct layer
+    width instead of 2 x #layers session solves.
+
+    Returns ``(banks, manifest)``: ``banks`` maps dimension d to a
+    FactorBank of all d x d factors, ``manifest`` maps d to the
+    parallel list of ``(param_path, side, unit)`` tags (side "A" =
+    output/Gram side, "B" = input side; unit indexes stacked 3D
+    parameters, None for 2D) — ``manifest[d][i]`` names the factor at
+    bank index i.
+    """
+    from repro.core import FactorBank
+    from repro.core.grid import make_trsm_mesh
+
+    grid = grid if grid is not None else make_trsm_mesh(1, 1)
+    banks: dict[int, FactorBank] = {}
+    manifest: dict[int, list] = {}
+
+    def admit(d, L, tags):
+        """Admit one (d, d) factor or a stacked (u, d, d) chunk — the
+        stack goes through the bank's one-dispatch admit_stack path."""
+        if d not in banks:
+            banks[d] = FactorBank(grid, d, method=method, n0=n0,
+                                  dtype=None if precision is not None
+                                  else L.dtype,
+                                  precision=precision, map_mode=map_mode)
+            manifest[d] = []
+        if L.ndim == 2:
+            banks[d].admit(L)
+        else:
+            banks[d].admit_stack(L)
+        manifest[d].extend(tags)
+
+    def damped_chol(M):
+        d = M.shape[-1]
+        lam = damping * (jnp.trace(M) / d + 1e-12)
+        return _chol(M + lam * jnp.eye(d, dtype=M.dtype))
+
+    leaves = jax.tree_util.tree_leaves_with_path(
+        state["kron"], is_leaf=lambda t: isinstance(t, tuple))
+    for path, kron in leaves:
+        if not (isinstance(kron, tuple) and len(kron) == 2):
+            continue
+        name = jax.tree_util.keystr(path)
+        for side, M in zip(("A", "B"), kron):
+            if M.ndim == 2:
+                admit(M.shape[-1], damped_chol(M), [(name, side, None)])
+            else:                       # stacked units: vmapped chol,
+                cs = jax.vmap(damped_chol)(M)   # one stacked admission
+                admit(M.shape[-1], cs,
+                      [(name, side, u) for u in range(M.shape[0])])
+    return banks, manifest
+
+
 def kfac_ca(lr=1e-3, ema=0.95, damping=1e-3, max_dim=8192, min_dim=8,
             clip_norm=1.0, update_freq: int = 1, mode: str = "whiten",
             **adam_kw):

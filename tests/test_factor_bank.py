@@ -1,0 +1,295 @@
+"""Multi-factor batched serving (repro.core.bank): admission paths vs
+the per-factor reference, the batched steady-state invariants for every
+precision preset, cyclic ingestion from the factor producers, the
+banked request server, and the KFAC per-layer hookup (single-device
+grid; the multi-device variants run in the `bank` selfcheck —
+repro.core.selfcheck, exercised by tests/test_core_distributed.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import cholesky, grid as gridlib, lu, session
+from repro.core.bank import BatchedTrsmSession, FactorBank
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return gridlib.make_trsm_mesh(1, 1)
+
+
+def _factors(M=4, n=64, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    Ls = np.stack([np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+                   for _ in range(M)])
+    return Ls.astype(dtype), rng
+
+
+def _check(Ls, X, B, tol):
+    X = np.asarray(X, np.float64)
+    for i in range(Ls.shape[0]):
+        rel = (np.linalg.norm(Ls[i].astype(np.float64) @ X[i] - B[i])
+               / np.linalg.norm(B[i]))
+        assert rel < tol, (i, rel)
+
+
+# ----------------------------- correctness -----------------------------
+
+@pytest.mark.parametrize("method,map_mode", [("inv", "vmap"),
+                                             ("inv", "scan"),
+                                             ("rec", "vmap")])
+def test_bank_matches_per_factor_reference(grid, method, map_mode):
+    Ls, rng = _factors()
+    B = rng.standard_normal((4, 64, 8)).astype(np.float32)
+    bank = FactorBank(grid, 64, method=method,
+                      n0=None if method == "inv" else 16,
+                      dtype=np.float32, map_mode=map_mode)
+    assert bank.admit(Ls[0]) == 0
+    assert bank.admit_stack(Ls[1:]) == range(1, 4)
+    sess = BatchedTrsmSession(bank)
+    X = sess.solve(sess.place_rhs(B))
+    assert X.shape == (4, 64, 8) and X.dtype == sess.dtype
+    _check(Ls, X, B, 1e-4)
+    # per-factor sessions agree
+    ref = core.TrsmSession(Ls[2], grid, method=method,
+                           n0=bank.n0 if method == "inv" else 16)
+    Xr = ref.solve(ref.place_rhs(B[2]))
+    np.testing.assert_allclose(np.asarray(X[2]), np.asarray(Xr),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("lower,transpose", [(False, False), (True, True),
+                                             (False, True)])
+def test_bank_operator_variants(grid, lower, transpose):
+    Ls, rng = _factors()
+    As = Ls if lower else np.ascontiguousarray(np.swapaxes(Ls, 1, 2))
+    B = rng.standard_normal((4, 64, 8)).astype(np.float32)
+    bank = FactorBank(grid, 64, lower=lower, transpose=transpose,
+                      dtype=np.float32)
+    bank.admit_stack(As)
+    X = np.asarray(BatchedTrsmSession(bank).solve(
+        jnp.asarray(B)), np.float64)
+    for i in range(4):
+        op = As[i].T if transpose else As[i]
+        rel = np.linalg.norm(op @ X[i] - B[i]) / np.linalg.norm(B[i])
+        assert rel < 1e-4, (lower, transpose, i, rel)
+
+
+def test_bank_input_validation(grid):
+    bank = FactorBank(grid, 64, dtype=np.float32)
+    with pytest.raises(ValueError, match="factor must be"):
+        bank.admit(np.zeros((32, 32), np.float32))
+    with pytest.raises(ValueError, match="factor must be"):
+        bank.admit_stack(np.zeros((2, 32, 32), np.float32))
+    with pytest.raises(ValueError, match="empty bank"):
+        bank.stacks()
+    with pytest.raises(ValueError, match="map_mode"):
+        FactorBank(grid, 64, dtype=np.float32, map_mode="pmap")
+    with pytest.raises(ValueError, match="method"):
+        FactorBank(grid, 64, dtype=np.float32, method="auto")
+    bank.admit(np.eye(64, dtype=np.float32))
+    sess = BatchedTrsmSession(bank)
+    with pytest.raises(ValueError, match="rhs stack"):
+        sess.solve(jnp.zeros((2, 64, 4)))     # M mismatch
+    with pytest.raises(ValueError, match="rhs stack"):
+        sess.solve(jnp.zeros((64, 4)))        # missing factor axis
+
+
+# ------------------- cyclic ingestion (producer loop) -------------------
+
+def test_bank_cyclic_ingestion_from_cholesky_and_lu(grid):
+    Ls, rng = _factors(M=2)
+    A1 = (Ls[0] @ Ls[0].T).astype(np.float32)           # SPD
+    A2 = (Ls[1] + 64 * np.eye(64)).astype(np.float32)   # diag-dominant
+    bank = FactorBank(grid, 64, dtype=np.float32)
+    bank.admit_cyclic(cholesky.cholesky_cyclic(A1, grid))
+    bank.admit_cyclic(lu.lu_cyclic(A2, grid)[0])
+    B = rng.standard_normal((2, 64, 8)).astype(np.float32)
+    X = np.asarray(BatchedTrsmSession(bank).solve(jnp.asarray(B)),
+                   np.float64)
+    L1 = np.asarray(cholesky.cholesky(A1, grid), np.float64)
+    L2 = np.asarray(lu.lu(A2, grid)[0], np.float64)
+    for L, x, b in zip((L1, L2), X, B):
+        assert np.linalg.norm(L @ x - b) / np.linalg.norm(b) < 1e-4
+    # the natural-layout producers agree with their cyclic outputs
+    np.testing.assert_allclose(
+        np.asarray(gridlib.cyclic_matrix_device(
+            cholesky.cholesky_cyclic(A1, grid), grid.p1,
+            grid.p1 * grid.p2, inverse=True)),
+        np.asarray(cholesky.cholesky(A1, grid)))
+
+
+def test_bank_cyclic_ingestion_rejects_folded_variants(grid):
+    bank = FactorBank(grid, 64, dtype=np.float32, lower=False)
+    with pytest.raises(ValueError, match="cyclic ingestion"):
+        bank.admit_cyclic(np.eye(64, dtype=np.float32))
+
+
+# --------------------- steady-state invariants ---------------------
+
+@pytest.mark.parametrize("precision,in_dt,rtol", [
+    (None, np.float64, 1e-10),
+    ("fp32", np.float32, 1e-5),
+    ("bf16", np.float32, 5e-2),
+    ("bf16_refine", np.float32, 1e-5),
+    ("fp64_refine", np.float64, 1e-11),
+])
+def test_bank_steady_state_no_transfers_no_retraces(grid, precision,
+                                                    in_dt, rtol):
+    M, n, k = 3, 64, 8
+    Ls, rng = _factors(M=M, dtype=in_dt)
+    bank = FactorBank(grid, n, precision=precision,
+                      dtype=None if precision else in_dt)
+    bank.admit_stack(Ls)
+    sess = BatchedTrsmSession(bank)
+    key = sess.program_for(k).key          # built, not yet traced
+    before = session.TRACE_COUNTS[key]
+    sess.warmup(k)
+    assert session.TRACE_COUNTS[key] == before + 1
+    Bs = [sess.place_rhs(rng.standard_normal((M, n, k)).astype(in_dt))
+          for _ in range(3)]
+    refs = [np.asarray(b) for b in Bs]
+    with jax.transfer_guard("disallow"):
+        outs = [sess.solve(b) for b in Bs]
+    assert session.TRACE_COUNTS[key] == before + 1
+    for b, x in zip(refs, outs):
+        assert x.dtype == sess.dtype
+        _check(Ls, x, b, rtol)
+    assert sess.solves_served == (1 + len(Bs)) * M
+
+
+def test_bank_width_is_a_cache_key(grid):
+    Ls, rng = _factors()
+    cache = session.CompiledSolverCache()
+    kw = dict(dtype=np.float32, cache=cache)
+    b2 = FactorBank(grid, 64, **kw)
+    b2.admit_stack(Ls[:2])
+    b3 = FactorBank(grid, 64, **kw)
+    b3.admit_stack(Ls[:3])
+    s2, s3 = BatchedTrsmSession(b2), BatchedTrsmSession(b3)
+    assert s2.program_for(8).key != s3.program_for(8).key
+    assert cache.stats()["misses"] == 2
+    # same width, same config -> same program (cache hit)
+    b2b = FactorBank(grid, 64, **kw)
+    b2b.admit_stack(Ls[2:])
+    assert BatchedTrsmSession(b2b).program_for(8).key == \
+        s2.program_for(8).key
+    assert cache.stats()["hits"] >= 1
+
+
+# ------------------------- banked request server -------------------------
+
+def test_banked_server_per_factor_queues_one_packed_drain(grid):
+    from repro.train import serve_step as ss
+    M, n, panel_k = 3, 64, 4
+    Ls, rng = _factors(M=M)
+    server = ss.make_trsm_bank_server(Ls, panel_k=panel_k)
+    subs = {f: [] for f in range(M)}
+    for i in range(8):
+        f = i % M
+        r = rng.standard_normal((n, int(rng.integers(1, panel_k + 1))))
+        r = r.astype(np.float32)
+        subs[f].append(r)
+        server.submit(f, r)
+    outs = server.drain()
+    assert server.pending() == 0
+    # factor 0 got 3 requests of width <= 4: at most 3 waves, each ONE
+    # dispatch covering all factors
+    assert server.waves_solved <= 3
+    assert server.requests_served == 8
+    for f in range(M):
+        assert [o.shape[1] for o in outs[f]] == \
+            [r.shape[1] for r in subs[f]]
+        for r, x in zip(subs[f], outs[f]):
+            rel = (np.linalg.norm(Ls[f] @ np.asarray(x, np.float64) - r)
+                   / np.linalg.norm(r))
+            assert rel < 1e-4, (f, rel)
+    with pytest.raises(ValueError, match="unknown factor"):
+        server.submit(M, np.zeros((n, 1), np.float32))
+    with pytest.raises(ValueError, match="wider than panel"):
+        server.submit(0, np.zeros((n, panel_k + 1), np.float32))
+
+
+def test_banked_server_serves_factors_admitted_after_construction(grid):
+    """The bank is mutable: a factor admitted after the server is built
+    must be submittable and drain must cover the new width (the next
+    wave simply compiles at the new bank width)."""
+    from repro.train import serve_step as ss
+    Ls, rng = _factors(M=3)
+    server = ss.make_trsm_bank_server(Ls[:2], panel_k=4)
+    server.session.bank.admit(Ls[2])
+    reqs = {f: rng.standard_normal((64, 2)).astype(np.float32)
+            for f in range(3)}
+    for f, r in reqs.items():
+        server.submit(f, r)
+    outs = server.drain()
+    assert server.waves_solved == 1 and set(outs) == {0, 1, 2}
+    for f, r in reqs.items():
+        rel = (np.linalg.norm(
+            Ls[f] @ np.asarray(outs[f][0], np.float64) - r)
+            / np.linalg.norm(r))
+        assert rel < 1e-4, (f, rel)
+    with pytest.raises(ValueError, match="unknown factor"):
+        server.submit(3, np.zeros((64, 1), np.float32))
+
+
+# --------------------------- KFAC hookup ---------------------------
+
+def test_kfac_factor_banks_serve_per_layer_solves(grid):
+    import importlib
+    kfac = importlib.import_module("repro.optim.kfac_ca")
+    rng = np.random.default_rng(3)
+    params = {"w": jnp.asarray(rng.standard_normal((16, 8)), jnp.float32),
+              "stack": jnp.asarray(rng.standard_normal((2, 16, 8)),
+                                   jnp.float32),
+              "norm": jnp.ones((16,), jnp.float32)}   # ineligible
+    opt = kfac.kfac_ca(min_dim=8)
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)
+    banks, manifest = kfac.factor_banks_from_state(state, grid=grid)
+    # w and stack (2 units) contribute: A-side d=16 x3, B-side d=8 x3
+    assert {d: b.size for d, b in banks.items()} == {16: 3, 8: 3}
+    assert [tag[1] for tag in manifest[16]] == ["A", "A", "A"]
+    assert sorted((tag[2] for tag in manifest[16]),
+                  key=lambda u: (u is None, u)) == [0, 1, None]
+    sess = BatchedTrsmSession(banks[16])
+    B = rng.standard_normal((3, 16, 4)).astype(np.float32)
+    X = np.asarray(sess.solve(sess.place_rhs(B)), np.float64)
+    assert np.isfinite(X).all()
+    # each solve inverts the damped Cholesky factor it was banked with
+    Lc = np.asarray(bank_factor_natural(banks[16], 0), np.float64)
+    rel = np.linalg.norm(Lc @ X[0] - B[0]) / np.linalg.norm(B[0])
+    assert rel < 1e-4, rel
+
+
+def bank_factor_natural(bank, i):
+    """Undo the cyclic distribution of bank factor i (test helper)."""
+    return gridlib.cyclic_matrix_device(
+        bank.stacks()[0][i], bank.grid.p1, bank.grid.p1 * bank.grid.p2,
+        inverse=True)
+
+
+# ------------------------ batched cyclic gathers ------------------------
+
+def test_stacked_cyclic_gathers_match_per_matrix():
+    A = np.random.default_rng(4).standard_normal((3, 16, 16))
+    for pr, pc in ((2, 4), (4, 2)):
+        stacked = np.asarray(gridlib.cyclic_matrix_device(
+            jnp.asarray(A), pr, pc))
+        for i in range(3):
+            np.testing.assert_array_equal(
+                stacked[i], gridlib.to_cyclic_matrix(A[i], pr, pc))
+    rows = np.asarray(gridlib.cyclic_rows_device(jnp.asarray(A), 4))
+    for i in range(3):
+        np.testing.assert_array_equal(rows[i],
+                                      gridlib.to_cyclic_rows(A[i], 4))

@@ -278,3 +278,18 @@ def test_param_counts_are_plausible():
     for arch, target in approx.items():
         n = configs.get(arch).param_count
         assert 0.4 * target < n < 2.6 * target, (arch, n, target)
+
+
+def test_greedy_generate_guards_cache_overflow():
+    """prompt + max_new beyond the cache capacity must be a clear
+    ValueError, not a silently clamped (corrupted) cache write."""
+    from repro.train import serve_step as ss
+    cfg = configs.get_smoke("smollm-360m")
+    params = lm.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 4)))
+    # S + max_new - 1 positions are written: 4 + 3 - 1 = 6 fits exactly
+    out = ss.greedy_generate(cfg, params, prompt, max_new=3, max_seq=6)
+    assert out.shape == (1, 3)
+    with pytest.raises(ValueError, match="max_seq"):
+        ss.greedy_generate(cfg, params, prompt, max_new=4, max_seq=6)

@@ -10,7 +10,7 @@ hypothesis = pytest.importorskip(
     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import blocked
+from repro.core import blocked, tuning
 from repro.core.grid import (cyclic_perm, inv_perm, to_cyclic_matrix,
                              from_cyclic_matrix, to_cyclic_rows,
                              from_cyclic_rows)
@@ -111,6 +111,22 @@ def test_cholesky_factorization(n, bs, seed):
     A = M @ M.T + n * np.eye(n)
     L = cholesky.chol_blocked_local(jnp.asarray(A), bs)
     np.testing.assert_allclose(np.asarray(L @ L.T), A, atol=1e-7)
+
+
+@given(n0=st.integers(1, 128), mult=st.integers(1, 32),
+       p=st.integers(1, 4096))
+@settings(max_examples=200, deadline=None)
+def test_inv_subgrid_is_feasible(n0, mult, p):
+    """The Sec. VI-A inversion subgrid is a processor ASSIGNMENT:
+    whatever (n, n0, p) the tuner visits, the snapped (r1, r2) must
+    satisfy r1^2 * r2 <= p (power-of-two rounding used to oversubscribe
+    — e.g. q = 6 snapped r2 from 3 up to 8), and both factors must stay
+    positive powers of two."""
+    n = n0 * mult                       # n0 always divides n
+    r1, r2 = tuning._inv_subgrid(n, n0, p)
+    assert r1 >= 1 and r2 >= 1
+    assert r1 & (r1 - 1) == 0 and r2 & (r2 - 1) == 0
+    assert r1 * r1 * r2 <= p, (n, n0, p, r1, r2)
 
 
 @given(n=pow2, p=pow2, reverse=st.booleans(), k=st.sampled_from([1, 3, 8]))

@@ -163,6 +163,54 @@ def test_session_steady_state_no_transfers_no_retraces(grid, precision,
     assert sess.solves_served == 5              # warmup + 4
 
 
+def test_multifactor_cache_sharing_no_baked_constants(grid):
+    """Two same-shape sessions with DIFFERENT factor values must share
+    one compiled program — the factor is a runtime operand, never a
+    constant folded into the executable — and the same must hold for
+    same-width factor banks (the batched program is keyed on the bank
+    width, not on the factors)."""
+    from repro.core.bank import BatchedTrsmSession, FactorBank
+    session.default_cache().clear()
+    session.TRACE_COUNTS.clear()
+    L1, B = _mats(seed=1)
+    L2, _ = _mats(seed=2)
+
+    s1 = core.TrsmSession(L1, grid, method="inv", n0=16)
+    s2 = core.TrsmSession(L2, grid, method="inv", n0=16)
+    X1 = s1.solve(s1.place_rhs(B))
+    X2 = s2.solve(s2.place_rhs(B))
+    assert s1.program_for(8).key == s2.program_for(8).key
+    (key,) = list(session.TRACE_COUNTS)
+    assert session.TRACE_COUNTS[key] == 1          # one trace, two sessions
+    st = session.default_cache().stats()
+    assert st["misses"] == 1 and st["hits"] >= 1, st
+    # different factors -> different (correct) answers: nothing baked in
+    np.testing.assert_allclose(L1 @ np.asarray(X1), B, atol=1e-8)
+    np.testing.assert_allclose(L2 @ np.asarray(X2), B, atol=1e-8)
+    assert not np.allclose(np.asarray(X1), np.asarray(X2))
+
+    # the bank: same width + config -> one batched program, two banks
+    session.TRACE_COUNTS.clear()
+    Ls_a = np.stack([L1, L2])
+    Ls_b = np.stack([L2, L1])
+    banks = []
+    for Ls in (Ls_a, Ls_b):
+        bank = FactorBank(grid, 64, n0=16, dtype=np.float64)
+        bank.admit_stack(Ls)
+        banks.append(BatchedTrsmSession(bank))
+    Bs = np.stack([B, B])
+    Xa = banks[0].solve(banks[0].place_rhs(Bs))
+    Xb = banks[1].solve(banks[1].place_rhs(Bs))
+    bkey = banks[0].program_for(8).key
+    assert bkey == banks[1].program_for(8).key and bkey != key
+    assert session.TRACE_COUNTS[bkey] == 1         # one trace, two banks
+    for Ls, X in ((Ls_a, Xa), (Ls_b, Xb)):
+        for i in range(2):
+            np.testing.assert_allclose(Ls[i] @ np.asarray(X[i]), B,
+                                       atol=1e-8)
+    assert not np.allclose(np.asarray(Xa), np.asarray(Xb))
+
+
 def test_session_rejects_bad_rhs(grid):
     L, _ = _mats(n=32, k=4)
     sess = core.TrsmSession(L, grid, method="inv", n0=8)
@@ -190,6 +238,26 @@ def test_trsm_request_server_packs_and_answers():
         np.testing.assert_allclose(L @ np.asarray(x), r, atol=1e-8)
     with pytest.raises(ValueError):
         server.submit(rng.standard_normal((n, 9)))   # wider than panel
+
+
+def test_trsm_request_server_first_fit_no_head_of_line_underfill():
+    """A wide head-of-line request must not strand narrow requests into
+    underfilled panels: widths (3, 4, 1) at panel_k=4 pack as [3+1],
+    [4] — two panels, not three — and drain still returns solutions in
+    submit order."""
+    from repro.train import serve_step as ss
+    n = 64
+    rng = np.random.default_rng(6)
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    server = ss.make_trsm_server(L, panel_k=4, n0=16)
+    reqs = [rng.standard_normal((n, w)) for w in (3, 4, 1)]
+    for r in reqs:
+        server.submit(r)
+    outs = server.drain()
+    assert server.panels_solved == 2, server.panels_solved
+    assert [o.shape[1] for o in outs] == [3, 4, 1]   # submit order
+    for r, x in zip(reqs, outs):
+        np.testing.assert_allclose(L @ np.asarray(x), r, atol=1e-8)
 
 
 # ----------------------- degenerate kernel blocks -----------------------
