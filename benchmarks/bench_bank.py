@@ -5,9 +5,12 @@ is the paper's Sec. I consumer pattern — M triangular factors served
 simultaneously (per-layer KFAC preconditioners, per-tenant models) —
 solved two ways against identical factors and right-hand sides:
 
-  looped   — M independent TrsmSessions at steady state, one dispatch
-             per factor per round (the PR-1/2 serving model applied M
-             times, at its own tuned n0).
+  looped   — M independent single-factor solves at steady state, one
+             dispatch per factor per round (the PR-1/2 serving model —
+             the fused program with phase 1 inside, driven through the
+             unbanked compiled-solver path — applied M times, at its
+             own tuned n0; kept on that path so the comparison
+             semantics match the recorded baseline).
   bank     — ONE BatchedTrsmSession over a FactorBank: phase 1 (the
              Diagonal-Inverter) ran once at admission, and the
              steady-state program maps the unrolled sweep over the
@@ -65,21 +68,20 @@ def _factors(rng, dtype=np.float32):
 def _assert_bank_steady_state(report):
     """Zero transfers / zero retraces for the bank, every preset."""
     import jax
-    from repro import core
-    from repro.core import grid as gridlib, session
+    from repro import api
+    from repro.core import session
 
     x64_was = jax.config.read("jax_enable_x64")
     jax.config.update("jax_enable_x64", True)   # fp64_refine needs it
     try:
-        grid = gridlib.make_trsm_mesh(1, 1)
+        grid = api.make_trsm_mesh(1, 1)
         rng = np.random.default_rng(1)
         rows = {}
         for preset in PRESETS:
             dt = np.float64 if preset == "fp64_refine" else np.float32
-            bank = core.FactorBank(grid, N, method="inv",
-                                   precision=preset)
-            bank.admit_stack(_factors(rng, dt))
-            sess = core.BatchedTrsmSession(bank)
+            sess = api.Solver.from_factors(_factors(rng, dt), grid,
+                                           method="inv",
+                                           precision=preset)
             key = sess.program_for(K).key   # program built, not yet traced
             before = session.TRACE_COUNTS[key]
             sess.warmup(K)
@@ -102,25 +104,35 @@ def _assert_bank_steady_state(report):
 
 def run(report):
     import jax
-    from repro import core
-    from repro.core import grid as gridlib
+    from repro import api
+    from repro.core import precision as preclib
+    from repro.core.solver import SolveSpec, solver_for
 
-    grid = gridlib.make_trsm_mesh(1, 1)
+    grid = api.make_trsm_mesh(1, 1)
     rng = np.random.default_rng(0)
     Ls = _factors(rng)
     reps, passes = 20, 3
     nfeeds = reps * passes + 2
 
-    # looped single sessions: M dispatches per round, steady state
-    sessions = [core.TrsmSession(L, grid, method="inv", n0=N0).warmup(K)
-                for L in Ls]
-    feeds = [[s.place_rhs(rng.standard_normal((N, K)).astype(np.float32))
-              for s in sessions] for _ in range(nfeeds)]
-    it = iter(feeds)
+    # looped single-factor solves: M dispatches per round, steady
+    # state, via the PR-1/2 serving model — the UNBANKED fused program
+    # (phase 1 re-runs inside every solve), factors distributed once
+    spec = SolveSpec(n=N, k=K, grid=grid,
+                     policy=preclib.resolve(None, np.float32),
+                     method="inv", n0=N0)
+    prog = solver_for(spec)
+    factors = [prog.prep(L) for L in Ls]
+    feeds = [[jax.device_put(
+        rng.standard_normal((N, K)).astype(np.float32),
+        prog.rhs_sharding) for _ in Ls] for _ in range(nfeeds)]
+    for b in feeds[-1]:
+        prog.solve_donating(factors[0], b)          # warm
+    it = iter(feeds[:-1])
 
     def looped_round():
         batch = next(it)
-        return [s.solve(b) for s, b in zip(sessions, batch)][-1]
+        return [prog.solve_donating(f, b)
+                for f, b in zip(factors, batch)][-1]
 
     with jax.transfer_guard("disallow"):
         t_loop = _time_per_round(looped_round, reps, passes)
@@ -128,10 +140,9 @@ def run(report):
     rows = []
     cases = [("vmap", None), ("scan", None), ("vmap", N)]
     for map_mode, n0 in cases:
-        bank = core.FactorBank(grid, N, method="inv", n0=n0,
-                               dtype=np.float32, map_mode=map_mode)
-        bank.admit_stack(Ls)
-        bsess = core.BatchedTrsmSession(bank).warmup(K)
+        bsess = api.Solver.from_factors(Ls, grid, method="inv", n0=n0,
+                                        dtype=np.float32,
+                                        map_mode=map_mode).warmup(K)
         bfeeds = [bsess.place_rhs(
             rng.standard_normal((M, N, K)).astype(np.float32))
             for _ in range(nfeeds)]
@@ -141,11 +152,11 @@ def run(report):
                                      reps, passes)
         speedup = t_loop / t_bank
         rows.append(dict(map_mode=map_mode, M=M, n=N, k=K,
-                         looped_n0=N0, bank_n0=bank.n0,
+                         looped_n0=N0, bank_n0=bsess.n0,
                          looped_ms_per_solve=t_loop / M * 1e3,
                          bank_ms_per_solve=t_bank / M * 1e3,
                          speedup=speedup))
-        report(f"M={M} n={N} k={K} [{map_mode:4s} n0={bank.n0:3d}]: "
+        report(f"M={M} n={N} k={K} [{map_mode:4s} n0={bsess.n0:3d}]: "
                f"looped(n0={N0}) {t_loop / M * 1e3:7.3f} ms/solve | "
                f"bank {t_bank / M * 1e3:7.3f} ms/solve | "
                f"{speedup:5.1f}x")

@@ -9,9 +9,10 @@ configurations of repeated solves against a FIXED factor:
   cached   — core.trsm today: on-device permutations, compiled program
              from the CompiledSolverCache (L still re-distributed per
              call — the one-shot API's cost).
-  session  — TrsmSession steady state: factor resident in cyclic device
-             storage, one compiled program per RHS shape, donated B;
-             zero host transfers, zero retraces.
+  session  — repro.api.Solver (width-1) steady state: factor resident
+             in cyclic device storage — diagonal blocks pre-inverted
+             at admission — one compiled program per RHS shape,
+             donated B; zero host transfers, zero retraces.
   bf16_refine — the same steady state under the bf16_refine precision
              policy: bf16 (MXU-native) sweep + 2 unrolled on-device
              refinement passes serving fp32 answers (DESIGN.md Sec. 7).
@@ -59,15 +60,14 @@ def _legacy_solve(L, B, grid, n0):
 def run(report):
     import jax
     import jax.numpy as jnp
-    from repro import core
-    from repro.core import grid as gridlib
+    from repro import api, core
 
     rows = []
     cases = [(1, 1, 256, 16, 32), (2, 2, 256, 16, 32)]
     for (p1, p2, n, k, n0) in cases:
         if p1 * p1 * p2 > len(jax.devices()):
             continue
-        grid = gridlib.make_trsm_mesh(p1, p2)
+        grid = api.make_trsm_mesh(p1, p2)
         rng = np.random.default_rng(0)
         L = np.tril(rng.standard_normal((n, n))).astype(np.float32) \
             + n * np.eye(n, dtype=np.float32)
@@ -77,19 +77,28 @@ def run(report):
         t_legacy = _time_per_call(
             lambda: _legacy_solve(L, B, grid, n0), reps_slow)
 
+        st0 = api.default_cache().stats()
         core.trsm(L, B, grid, method="inv", n0=n0)        # warm the cache
         t_cached = _time_per_call(
             lambda: core.trsm(L, B, grid, method="inv", n0=n0), reps)
+        st1 = api.default_cache().stats()
+        # steady-state hit rate of the one-shot path: every timed call
+        # after the warm-up must hit the compiled-program cache
+        hits = st1["hits"] - st0["hits"]
+        lookups = hits + st1["misses"] - st0["misses"]
+        hit_rate = hits / lookups if lookups else 0.0
 
-        sess = core.TrsmSession(L, grid, method="inv", n0=n0).warmup(k)
+        sess = api.Solver.from_factor(L, grid, method="inv",
+                                      n0=n0).warmup(k)
         Bs = [sess.place_rhs(rng.standard_normal((n, k)).astype(np.float32))
               for _ in range(reps)]
         it = iter(Bs)
         with jax.transfer_guard("disallow"):
             t_session = _time_per_call(lambda: sess.solve(next(it)), reps)
 
-        sess_bf = core.TrsmSession(L, grid, method="inv", n0=n0,
-                                   precision="bf16_refine").warmup(k)
+        sess_bf = api.Solver.from_factor(
+            L, grid, method="inv", n0=n0,
+            precision="bf16_refine").warmup(k)
         Bs_bf = [sess_bf.place_rhs(
             rng.standard_normal((n, k)).astype(np.float32))
             for _ in range(reps)]
@@ -101,14 +110,17 @@ def run(report):
                    legacy_ms=t_legacy * 1e3, cached_ms=t_cached * 1e3,
                    session_ms=t_session * 1e3,
                    bf16_refine_ms=t_bf * 1e3,
-                   speedup=t_legacy / t_session)
+                   speedup=t_legacy / t_session,
+                   cache_hit_rate=hit_rate)
         rows.append(row)
         report(f"p1={p1} p2={p2} n={n} k={k}: "
                f"legacy {row['legacy_ms']:8.2f} ms | "
-               f"cached {row['cached_ms']:7.2f} ms | "
+               f"cached {row['cached_ms']:7.2f} ms "
+               f"(hit rate {hit_rate:.2f}) | "
                f"session {row['session_ms']:6.2f} ms | "
                f"bf16_refine {row['bf16_refine_ms']:6.2f} ms | "
                f"{row['speedup']:6.1f}x")
+        assert hit_rate > 0.9, f"one-shot cache hit rate {hit_rate}"
     return rows
 
 

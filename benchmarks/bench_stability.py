@@ -99,12 +99,12 @@ def run_policy_sweep(report):
                 for pol in policies:
                     in_dt = np.float64 if pol == "fp64_refine" \
                         else np.float32
-                    sess = core.TrsmSession(L64.astype(in_dt), grid,
-                                            method="inv", n0=n0,
-                                            precision=pol)
+                    sess = core.Solver.from_factor(
+                        L64.astype(in_dt), grid, method="inv", n0=n0,
+                        precision=pol)
                     sess.warmup(k)
                     B = sess.place_rhs(B64.astype(in_dt))
-                    X = np.asarray(sess.solve(B, donate=False),
+                    X = np.asarray(sess.solve(B, donate=False)[0],
                                    np.float64)
                     rr = (np.linalg.norm(L64 @ X - B64)
                           / np.linalg.norm(B64))

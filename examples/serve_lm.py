@@ -8,10 +8,10 @@ length) and per-step decode, with simple continuous batching: finished
 sequences are replaced from a request queue.
 
 Also demos the paper's serving workload (--serve-solves N): a
-TrsmSession holds a triangular factor resident in cyclic device storage
-and serves batched solve requests through the same continuous-batching
-pattern — the steady state is pure device work (zero host transfers,
-zero retraces)."""
+repro.api.Solver holds a triangular factor resident in cyclic device
+storage and a SolveServer serves batched solve requests through the
+same continuous-batching pattern — the steady state is pure device
+work (zero host transfers, zero retraces)."""
 
 import argparse
 import os
@@ -98,21 +98,23 @@ def main():
 def serve_solves(args):
     """Continuous batching for the paper's workload: solve requests
     against a factor held resident in cyclic device storage."""
-    from repro.train import serve_step as ss
+    from repro import api
 
     n = args.solve_n
     rng = np.random.default_rng(1)
     L = (np.tril(rng.standard_normal((n, n)))
          + n * np.eye(n)).astype(np.float32)
-    server = ss.make_trsm_server(L, panel_k=8, method="inv",
-                                 precision=args.solve_precision)
+    solver = api.Solver.from_factor(L, api.make_trsm_mesh(1, 1),
+                                    method="inv",
+                                    precision=args.solve_precision)
+    server = api.SolveServer(solver, panel_k=8).warmup()
     t0 = time.time()
     for _ in range(args.serve_solves):
         server.submit(jnp.asarray(rng.standard_normal((n,))))
-    outs = server.drain()
+    outs = server.drain()[0]
     jax.block_until_ready(outs[-1])
     dt = time.time() - t0
-    policy = server.session.policy
+    policy = solver.policy
     print(f"served {server.requests_served} solve requests "
           f"(n={n}, precision={policy.name}) in "
           f"{server.panels_solved} panels, {dt:.3f}s — "

@@ -1,0 +1,42 @@
+"""The declarative front door to the solve stack (DESIGN.md Sec. 10).
+
+One import surface for everything a serving client needs:
+
+    from repro import api
+
+    grid = api.make_trsm_mesh(2, 2)                 # p1 x p1 x p2 mesh
+    spec = api.SolveSpec.auto(n=4096, k=64, grid=grid,
+                              precision="bf16_refine")
+    server = api.SolveServer.from_spec(spec, L, panel_k=16)
+    server.submit(b)
+    X, = server.drain()[0]
+
+* :class:`SolveSpec` — a frozen, hashable description of one solve
+  configuration (problem / plan / execution); ``SolveSpec.auto``
+  resolves method, grid, and block size a priori from the paper's
+  Sec. VIII cost model, and a concrete spec IS the compiled-program
+  cache key.
+* :class:`Solver` — resident factor(s) at any bank width (a width-1
+  bank is the single-factor case), one compiled program per RHS
+  width, zero steady-state host<->device transfers and retraces.
+* :class:`SolveServer` — continuous batching over a Solver: per-factor
+  queues, first-fit packed panels, one dispatch per wave.
+* :class:`FactorBank` — the admission layer (stacked cyclic storage,
+  hoisted phase 1, cyclic ingestion from the on-grid factor
+  producers).
+* :func:`trsm` — one-shot solves through the same compiled-program
+  cache; :func:`solver_for` — the spec -> compiled-program mapping.
+
+Everything here is re-exported from ``repro.core``; this module is the
+stable spelling for scripts and downstream users.
+"""
+
+from repro.core import trsm  # noqa: F401
+from repro.core.bank import FactorBank  # noqa: F401
+from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
+from repro.core.precision import (  # noqa: F401
+    PRESETS, PrecisionPolicy)
+from repro.core.session import (  # noqa: F401
+    CompiledSolverCache, default_cache)
+from repro.core.solver import (  # noqa: F401
+    Solver, SolveServer, SolveSpec, plan_grid, resolve_plan, solver_for)

@@ -1,12 +1,19 @@
 """Communication-avoiding TRSM (Wicky/Solomonik/Hoefler, CS.DC 2016).
 
-Public API:
+Public API (the declarative front door is ``repro.api`` /
+``repro.core.solver``; DESIGN.md Sec. 10):
 
-    trsm(L, B, grid, method="inv"|"rec", ...)   distributed solve L X = B
-    TrsmSession(L, grid, precision=...)         factor resident on device,
-                                                serves batched RHS
-    FactorBank / BatchedTrsmSession             pool of M resident factors,
-                                                M solves in one dispatch
+    SolveSpec.auto(n, k, grid=|p=, ...)         frozen a-priori solve spec
+                                                (= the compiled-program
+                                                cache key)
+    Solver.from_factor / from_factors / from_spec
+                                                resident factor(s), any bank
+                                                width, one dispatch per solve
+    SolveServer(solver, panel_k)                continuous-batching front-end
+    trsm(L, B, grid, method="inv"|"rec", ...)   one-shot distributed solve
+    FactorBank                                  the admission layer: M
+                                                factors in stacked cyclic
+                                                storage
     PrecisionPolicy / PRESETS                   mixed-precision policies
                                                 (fp32, bf16, bf16_refine,
                                                 fp64_refine)
@@ -18,6 +25,11 @@ Public API:
     mm3d.matmul(L, X, grid)                     Sec. III 3D matmul
     tuning.tune(n, k, p)                        Sec. VIII a-priori parameters
     comm.trace()                                alpha-beta-gamma cost tracing
+
+Deprecated (thin shims, one DeprecationWarning each — see the README
+migration table): TrsmSession -> Solver.from_factor,
+BatchedTrsmSession -> Solver.from_bank, and the request servers in
+repro.train.serve_step -> SolveServer.
 """
 
 from repro.core.bank import BatchedTrsmSession, FactorBank  # noqa: F401
@@ -25,6 +37,8 @@ from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
 from repro.core.precision import PrecisionPolicy, PRESETS  # noqa: F401
 from repro.core.session import (  # noqa: F401
     CompiledSolverCache, TrsmSession, default_cache)
+from repro.core.solver import (  # noqa: F401
+    Solver, SolveServer, SolveSpec, solver_for)
 
 
 def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
@@ -58,11 +72,15 @@ def trsm(L, B, grid, method: str = "inv", n0: int | None = None,
     :class:`TrsmSession`, which also keeps L distributed across calls.
     """
     import jax.numpy as jnp
-    from repro.core import session
+    from repro.core import solver as solverlib
     n, k = B.shape
-    prog = session.get_solver(grid, n=n, k=k, dtype=jnp.result_type(L),
-                              method=method, n0=n0, mode=mode,
-                              lower=lower, transpose=transpose,
-                              machine=machine, block_inv=block_inv,
-                              precision=precision)
+    method, n0 = solverlib.resolve_plan(grid, n, k, method=method,
+                                        n0=n0, machine=machine)
+    from repro.core import precision as preclib
+    spec = SolveSpec(n=n, k=k, grid=grid,
+                     policy=preclib.resolve(precision,
+                                            jnp.result_type(L)),
+                     method=method, n0=n0, mode=mode, lower=lower,
+                     transpose=transpose, block_inv=block_inv)
+    prog = solver_for(spec)
     return prog.solve(prog.prep(L), B)

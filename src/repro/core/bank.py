@@ -272,72 +272,78 @@ class FactorBank:
         """The storage-dtype (M, n, n) stacked cyclic factor."""
         return self.stacks()[0]
 
+    @property
+    def factors_cyclic_residual(self):
+        """The residual-precision (M, n, n) stacked copy (None unless
+        the policy refines)."""
+        return self.stacks()[-1] if self.policy.refines else None
+
 
 class BatchedTrsmSession:
-    """Serve batched right-hand sides against every factor of a
-    :class:`FactorBank` in one compiled program.
+    """DEPRECATED multi-factor serving session — a thin shim over
+    :meth:`repro.core.solver.Solver.from_bank`, kept for source
+    compatibility; results are bit-identical to the
+    :class:`~repro.core.solver.Solver` path.
 
     ``solve(B)`` takes an (M, n, k) stack — row i is the RHS panel for
-    bank factor i — and returns the (M, n, k) solutions, natural layout,
-    at the bank policy's I/O dtype.  One dispatch, zero retraces and
-    zero host transfers in the steady state (after ``warmup``), for
-    every precision policy: the same invariants as
-    :class:`~repro.core.session.TrsmSession`, now amortized over M
-    factors.
+    bank factor i — and returns the (M, n, k) solutions in one
+    dispatch, with the usual steady-state invariants (zero transfers,
+    zero retraces, every precision policy).  New code:
+
+        solver = repro.api.Solver.from_bank(bank)   # or .from_factors
+        X = solver.solve(B_stack)
     """
 
     def __init__(self, bank: FactorBank):
-        self.bank = bank
-        self.solves_served = 0
+        from repro.core import solver as solverlib
+        solverlib._warn_deprecated("BatchedTrsmSession",
+                                   "Solver.from_bank")
+        self._solver = solverlib.Solver.from_bank(bank)
+
+    @classmethod
+    def _wrap(cls, solver) -> "BatchedTrsmSession":
+        self = object.__new__(cls)
+        self._solver = solver
+        return self
+
+    @property
+    def bank(self) -> FactorBank:
+        return self._solver.bank
+
+    @property
+    def solves_served(self) -> int:
+        return self._solver.solves_served
 
     @property
     def n(self) -> int:
-        return self.bank.n
+        return self._solver.n
 
     @property
     def policy(self):
-        return self.bank.policy
+        return self._solver.policy
 
     @property
     def dtype(self):
         """The I/O dtype (what ``solve`` returns, what ``place_rhs``
         casts to): residual dtype for refining policies, compute dtype
         otherwise."""
-        return self.bank.policy.io_dtype
+        return self._solver.dtype
 
     def program_for(self, k: int) -> SolverProgram:
-        """The compiled batched :class:`SolverProgram` for RHS width k
-        at the bank's CURRENT width M (cached per (k, M))."""
-        b = self.bank
-        return sessionlib.get_solver(
-            b.grid, n=b.n, k=k, method=b.method, n0=b.n0, mode=b.mode,
-            lower=b.lower, transpose=b.transpose, machine=b.machine,
-            block_inv=b.block_inv, precision=b.policy, bank=b.size,
-            map_mode=b.map_mode, cache=b.cache)
+        return self._solver.program_for(k)
 
     def place_rhs(self, B):
-        """Pin an (M, n, k) RHS stack to the batched program's input
-        sharding (pays the unavoidable ingestion transfer up front, so
-        ``solve`` itself moves no data)."""
-        B = jnp.asarray(B, self.dtype)
-        prog = self.program_for(B.shape[-1])
-        return jax.device_put(B, prog.rhs_sharding)
+        return self._solver.place_rhs(jnp.asarray(B, self.dtype))
 
     def solve(self, B, *, donate: bool = True):
-        """Solve op(L_i) X_i = B_i for all M factors in one dispatch."""
+        """Solve op(L_i) X_i = B_i for all M factors in one dispatch
+        (strictly the (M, n, k) stack form, as before)."""
         M = self.bank.size
         if B.ndim != 3 or B.shape[0] != M or B.shape[1] != self.n:
             raise ValueError(f"rhs stack must be ({M}, {self.n}, k), "
                              f"got {B.shape}")
-        prog = self.program_for(B.shape[-1])
-        fn = prog.solve_donating if donate else prog.solve
-        X = fn(self.bank.stacks(), B)
-        self.solves_served += M
-        return X
+        return self._solver.solve(B, donate=donate)
 
     def warmup(self, k: int):
-        """Compile (and run once on zeros) the batched program for RHS
-        width k at the current bank width."""
-        B = jnp.zeros((self.bank.size, self.n, k), self.dtype)
-        self.solve(B, donate=True)
+        self._solver.warmup(k)
         return self

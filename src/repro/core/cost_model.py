@@ -234,6 +234,16 @@ def it_inv_trsm_cost(n: float, k: float, n0: float, p1: float, p2: float,
             + update_phase_cost(n, k, n0, p1, p2))
 
 
+def it_inv_trsm_steady_cost(n: float, k: float, n0: float,
+                            p1: float, p2: float) -> Cost:
+    """Per-solve It-Inv cost in the HOISTED steady state (DESIGN.md
+    Secs. 9-10): the Diagonal-Inverter ran once at factor admission, so
+    a resident-factor solve pays only the sweep (solve + update
+    phases)."""
+    return (solve_phase_cost(n, k, n0, p1, p2)
+            + update_phase_cost(n, k, n0, p1, p2))
+
+
 # --------------------- Sec. IX comparison table ---------------------
 
 def paper_table_row(n: float, k: float, p: float) -> dict:

@@ -316,11 +316,15 @@ def solve(L, B, grid: TrsmGrid, n0: int, *, block_inv=None,
           mode: str | None = None):
     """Convenience end-to-end solve: natural-layout L, B in; X out.
 
-    Device-resident: routes through the compiled-solver cache
-    (repro.core.session), so the cyclic permutations run as on-device
-    gathers and repeated same-shape calls reuse the compiled program."""
-    from repro.core import session
-    prog = session.get_solver(grid, n=B.shape[0], k=B.shape[1], n0=n0,
-                              dtype=jnp.result_type(L), method="inv",
-                              mode=mode, block_inv=block_inv)
+    Device-resident: routes through the compiled-solver cache via a
+    :class:`repro.core.solver.SolveSpec`, so the cyclic permutations
+    run as on-device gathers and repeated same-shape calls reuse the
+    compiled program."""
+    from repro.core import precision as preclib
+    from repro.core.solver import SolveSpec, solver_for
+    spec = SolveSpec(n=B.shape[0], k=B.shape[1], grid=grid,
+                     policy=preclib.resolve(None, jnp.result_type(L)),
+                     method="inv", n0=n0, mode=mode,
+                     block_inv=block_inv)
+    prog = solver_for(spec)
     return prog.solve(prog.prep(L), B)

@@ -148,8 +148,14 @@ def rec_trsm_fn(grid: TrsmGrid, n: int, k: int, n0: int | None = None):
 
 def solve(L, B, grid: TrsmGrid, n0: int | None = None):
     """Natural-layout convenience entry point (device-resident: cached
-    compiled program, on-device cyclic permutations)."""
-    from repro.core import session
-    prog = session.get_solver(grid, n=B.shape[0], k=B.shape[1], n0=n0,
-                              dtype=jnp.result_type(L), method="rec")
+    compiled program via a :class:`repro.core.solver.SolveSpec`,
+    on-device cyclic permutations)."""
+    from repro.core import precision as preclib
+    from repro.core.solver import SolveSpec, solver_for
+    n, k = B.shape
+    spec = SolveSpec(n=n, k=k, grid=grid,
+                     policy=preclib.resolve(None, jnp.result_type(L)),
+                     method="rec",
+                     n0=n0 or default_n0(n, k, grid.p1, grid.p2))
+    prog = solver_for(spec)
     return prog.solve(prog.prep(L), B)

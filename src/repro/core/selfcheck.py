@@ -265,7 +265,8 @@ def check_lu() -> int:
 
 def check_session() -> int:
     """Device-resident pipeline: lower/upper/transposed solves via the
-    compiled-solver cache and TrsmSession, on multi-device grids."""
+    compiled-solver cache and a width-1 Solver, on multi-device
+    grids."""
     from repro import core
     from repro.core import grid as gridlib, session
 
@@ -292,7 +293,7 @@ def check_session() -> int:
                   f"{'OK' if ok else 'FAIL'}")
             fails += 0 if ok else 1
         # steady state: resident factor, no retrace across repeated solves
-        sess = core.TrsmSession(L, grid, method=method, n0=n0)
+        sess = core.Solver.from_factor(L, grid, method=method, n0=n0)
         sess.warmup(k)
         key = sess.program_for(k).key
         before = session.TRACE_COUNTS[key]
@@ -301,7 +302,7 @@ def check_session() -> int:
         with jax.transfer_guard("disallow"):
             # donate=False: B is re-read below to verify the residual
             outs = [sess.solve(b, donate=False) for b in Bs]
-        err = max(np.abs(L @ np.asarray(x) - np.asarray(b)).max()
+        err = max(np.abs(L @ np.asarray(x[0]) - np.asarray(b[0])).max()
                   for b, x in zip(Bs, outs))
         steady = session.TRACE_COUNTS[key] == before
         ok = err < 1e-8 and steady
@@ -315,8 +316,8 @@ def check_session() -> int:
         grid = gridlib.make_trsm_mesh(p1, p2)
         n, k, n0 = 64, 16, 16
         L = _random_tril(5, n, np.float32)
-        sess = core.TrsmSession(L, grid, method=method, n0=n0,
-                                precision="bf16_refine")
+        sess = core.Solver.from_factor(L, grid, method=method, n0=n0,
+                                       precision="bf16_refine")
         sess.warmup(k)
         key = sess.program_for(k).key
         before = session.TRACE_COUNTS[key]
@@ -324,8 +325,9 @@ def check_session() -> int:
         with jax.transfer_guard("disallow"):
             X = sess.solve(B, donate=False)
         rel = (np.linalg.norm(L.astype(np.float64)
-                              @ np.asarray(X, np.float64) - np.asarray(B))
-               / np.linalg.norm(np.asarray(B)))
+                              @ np.asarray(X[0], np.float64)
+                              - np.asarray(B[0]))
+               / np.linalg.norm(np.asarray(B[0])))
         steady = session.TRACE_COUNTS[key] == before
         ok = rel < 1e-5 and steady and X.dtype == jnp.float32
         print(f"session bf16_refine p1={p1} p2={p2} {method}: "
@@ -341,7 +343,7 @@ def check_bank() -> int:
     precision, and the banked steady state (DESIGN.md Sec. 9)."""
     from repro import core
     from repro.core import cholesky, grid as gridlib, session
-    from repro.core.bank import BatchedTrsmSession, FactorBank
+    from repro.core.bank import FactorBank
 
     jax.config.update("jax_enable_x64", True)
     fails = 0
@@ -361,7 +363,7 @@ def check_bank() -> int:
                           precision=precision, map_mode=map_mode)
         bank.admit_stack(Ls[:2])
         bank.admit(Ls[2])
-        sess = BatchedTrsmSession(bank)
+        sess = core.Solver.from_bank(bank)
         key = sess.program_for(k).key
         before = session.TRACE_COUNTS[key]
         sess.warmup(k)
@@ -387,7 +389,7 @@ def check_bank() -> int:
     A = L0 @ L0.T
     bank = FactorBank(grid, n, dtype=np.float64)
     bank.admit_cyclic(cholesky.cholesky_cyclic(A, grid))
-    sess = BatchedTrsmSession(bank)
+    sess = core.Solver.from_bank(bank)
     B = rng.standard_normal((1, n, k))
     X = np.asarray(sess.solve(sess.place_rhs(B))[0], np.float64)
     Lnat = np.asarray(cholesky.cholesky(A, grid), np.float64)

@@ -8,20 +8,22 @@ the shard_map program — a round-trip that dwarfs the collectives the
 algorithm saves.  ScaLAPACK-style practice keeps factors resident in
 distributed block-cyclic storage; this module does the same:
 
-* ``CompiledSolverCache`` — an LRU of compiled solve programs keyed on
-  ``(n, k, n0, policy, grid, method, mode, lower, transpose,
-  block_inv)``.  Each program fuses, in ONE jitted computation: the
+* ``CompiledSolverCache`` — an LRU of compiled solve programs keyed by
+  :class:`repro.core.solver.SolveSpec` (the frozen declarative solve
+  description; the SOLE key type — see DESIGN.md Sec. 10).  Each
+  program fuses, in ONE jitted computation: the
   on-device cyclic permutation of B (with the upper/transpose reversal
   identity folded into the gather), the shard_map solver, the inverse
   permutation of X back to natural layout, and — when the precision
   policy refines — the fixed-trip iterative-refinement loop
   (``repro.core.refine``).  B's buffer is donated in the serving
   variant.
-* ``TrsmSession`` — holds a factor in cyclic device storage (distributed
-  once, via the jitted ``prep`` program) and serves batched right-hand
-  sides; the steady state performs zero host<->device transfers and zero
-  retraces FOR EVERY PRECISION POLICY (asserted in tests via
-  :data:`TRACE_COUNTS` and ``jax.transfer_guard``).
+* ``TrsmSession`` — DEPRECATED shim over
+  :class:`repro.core.solver.Solver` (``Solver.from_factor``): one
+  resident factor served with zero steady-state host<->device
+  transfers and zero retraces FOR EVERY PRECISION POLICY (asserted in
+  tests via :data:`TRACE_COUNTS` and ``jax.transfer_guard``).  New
+  code uses ``repro.api``.
 
 Precision (DESIGN.md Sec. 7): a :class:`repro.core.precision
 .PrecisionPolicy` splits the pipeline's dtypes into storage / compute /
@@ -93,7 +95,7 @@ class SolverProgram:
     ``mode`` (the inv phase-1 scheme), ``n0`` (diagonal-block size) and
     ``policy`` (the :class:`PrecisionPolicy` the program was built for).
     """
-    key: tuple
+    key: object                  # the program's SolveSpec (cache key)
     prep: Callable
     solve: Callable
     solve_donating: Callable
@@ -105,22 +107,16 @@ class SolverProgram:
 
 
 class CompiledSolverCache:
-    """LRU cache of :class:`SolverProgram`s (and factor-prep programs).
+    """LRU cache of :class:`SolverProgram`s, keyed by
+    :class:`repro.core.solver.SolveSpec` — the sole key type.
 
-    Keyed on everything that changes the compiled artifact:
-
-    * ``n, k`` — solve shape (factor order, RHS width),
-    * ``n0`` — diagonal-block size (the Sec. VIII tuning knob),
-    * ``policy`` — the full :class:`PrecisionPolicy` (storage / compute
-      / accumulate / residual dtypes and refinement trip count),
-    * ``grid`` — the TrsmGrid (mesh identity + p1/p2),
-    * ``method`` — "inv" (It-Inv-TRSM) or "rec" (recursive baseline),
-    * ``mode`` — the inv phase-1 scheme (alltoall/doubling/allgather),
-    * ``lower, transpose`` — the operator variant,
-    * ``block_inv`` — the optional diagonal-block inverter hook,
-    * ``bank, map_mode`` — the factor-bank width M (None for a
-      single-factor program) and how the batched program maps over the
-      factor axis ("vmap" | "scan"); see ``repro.core.bank``.
+    A spec carries everything that changes the compiled artifact (the
+    solve shape, plan, operator variant, precision policy, grid/mesh
+    identity, bank width and map mode — the field-by-field table is
+    DESIGN.md Sec. 10), so two call sites that build equal specs share
+    one compiled program and nothing can be left out of the key by
+    accident.  The positional-tuple keys of PRs 1-3 are gone;
+    ``get`` rejects non-spec keys.
 
     Thread-safe; eviction drops the jitted callables (XLA frees the
     executables with them).
@@ -134,7 +130,13 @@ class CompiledSolverCache:
         self.misses = 0
         self.evictions = 0
 
-    def get(self, key: tuple, build: Callable):
+    def get(self, key, build: Callable):
+        from repro.core.solver import SolveSpec
+        if not isinstance(key, SolveSpec):
+            raise TypeError(
+                f"CompiledSolverCache keys are SolveSpec instances, got "
+                f"{type(key).__name__} (positional-tuple keys were "
+                f"removed; build a spec via repro.api.SolveSpec)")
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
@@ -157,8 +159,13 @@ class CompiledSolverCache:
         return key in self._entries
 
     def stats(self) -> dict:
+        """Observability snapshot: size/hits/misses/evictions plus the
+        derived hit rate (surfaced by ``launch.serve --cache-stats``
+        and recorded by benchmarks/bench_serve_latency.py)."""
+        total = self.hits + self.misses
         return dict(size=len(self._entries), hits=self.hits,
-                    misses=self.misses, evictions=self.evictions)
+                    misses=self.misses, evictions=self.evictions,
+                    hit_rate=self.hits / total if total else 0.0)
 
     def clear(self) -> None:
         with self._lock:
@@ -243,10 +250,17 @@ def _check_policy_supported(policy: PrecisionPolicy) -> None:
                 f"True)) before building the solver")
 
 
-def _build_solver(grid: TrsmGrid, *, n, k, n0, policy, method, mode,
-                  lower, transpose, block_inv, key, bank=None,
-                  map_mode="vmap") -> SolverProgram:
+def _build_solver(spec) -> SolverProgram:
+    """Build the compiled (prep, solve) program pair for a concrete
+    :class:`repro.core.solver.SolveSpec` (which is also the program's
+    cache key and TRACE_COUNTS key)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    grid, key = spec.grid, spec
+    n, k, n0 = spec.n, spec.k, spec.n0
+    policy, method, mode = spec.policy, spec.method, spec.mode
+    lower, transpose = spec.lower, spec.transpose
+    block_inv = spec.block_inv
+    bank, map_mode = spec.bank_width, spec.map_mode or "vmap"
     p1, p2 = grid.p1, grid.p2
     rev = _needs_reversal(lower, transpose)
     compute = policy.compute_dtype
@@ -383,22 +397,13 @@ def _build_solver(grid: TrsmGrid, *, n, k, n0, policy, method, mode,
 def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
                  n0: int | None = None, machine=None):
     """Host-side (pure arithmetic) resolution of method/n0 so the cache
-    key is concrete.
-
-    ``method="auto"`` dispatches through the Sec. VIII alpha-beta-gamma
-    model (``tuning.choose_method``); an unset ``n0`` is tuned for the
-    grid ("inv") or set to the Sec. IV-A base-case size ("rec")."""
-    if method == "auto":
-        from repro.core import tuning
-        method, _, _ = tuning.choose_method(n, k, grid.p, machine)
-    if n0 is None:
-        if method == "inv":
-            from repro.core import tuning
-            n0 = tuning.tune_for_grid(n, k, grid).n0
-        else:
-            from repro.core import rec_trsm
-            n0 = rec_trsm.default_n0(n, k, grid.p1, grid.p2)
-    return method, n0
+    key is concrete.  Delegates to the ONE resolution path,
+    :func:`repro.core.solver.resolve_plan` (the former
+    ``resolve_plan`` / ``tuning.tune`` / ``choose_method`` overlap,
+    folded)."""
+    from repro.core import solver as solverlib
+    return solverlib.resolve_plan(grid, n, k, method=method, n0=n0,
+                                  machine=machine)
 
 
 def get_solver(grid: TrsmGrid, *, n: int, k: int, dtype=None,
@@ -426,55 +431,38 @@ def get_solver(grid: TrsmGrid, *, n: int, k: int, dtype=None,
     are different compiled artifacts, while every same-width bank of
     the same configuration shares one program.
     """
-    cache = cache if cache is not None else _DEFAULT_CACHE
+    from repro.core import solver as solverlib
     if bank is not None and bank < 1:
         raise ValueError(f"bank width must be >= 1, got {bank}")
     if map_mode not in ("vmap", "scan"):
         raise ValueError(f"unknown map_mode {map_mode!r}")
     method, n0 = resolve_plan(grid, n, k, method=method, n0=n0,
                               machine=machine)
-    policy = preclib.resolve(precision, dtype)
-    _check_policy_supported(policy)
-    key = (n, k, n0, policy, grid, method, mode, lower, transpose,
-           block_inv, bank, map_mode if bank is not None else None)
-    return cache.get(key, lambda: _build_solver(
-        grid, n=n, k=k, n0=n0, policy=policy, method=method, mode=mode,
-        lower=lower, transpose=transpose, block_inv=block_inv, key=key,
-        bank=bank, map_mode=map_mode))
+    spec = solverlib.SolveSpec(
+        n=n, k=k, grid=grid, policy=preclib.resolve(precision, dtype),
+        method=method, n0=n0, mode=mode, lower=lower,
+        transpose=transpose, block_inv=block_inv, bank_width=bank,
+        map_mode=map_mode if bank is not None else None)
+    return solverlib.solver_for(spec, cache)
 
 
 # ------------------------------ sessions ------------------------------
 
 class TrsmSession:
-    """A triangular factor held resident in cyclic device storage,
-    serving batched right-hand sides.
+    """DEPRECATED single-factor serving session — a thin shim over
+    :meth:`repro.core.solver.Solver.from_factor` (a width-1 factor
+    bank), kept for source compatibility; results are bit-identical to
+    the :class:`~repro.core.solver.Solver` path.
 
-    Contract (the "cyclic-storage contract", see ROADMAP.md and
-    DESIGN.md Sec. 4): the factor is distributed ONCE at construction —
-    an on-device gather to ScaLAPACK-style permuted storage
-    ``P("x", ("z","y"))``, with the upper/transpose operator reduction
-    folded into the gather, cast to the precision policy's storage
-    dtype (plus a residual-dtype copy when the policy refines) — and
-    never touches the host again.  ``solve(B)`` runs one compiled
-    program (B-permute -> shard_map sweep -> X-unpermute, refinement
-    passes unrolled inside) per RHS shape; after the first call for a
-    shape the steady state performs zero host<->device transfers and
-    zero retraces, for every precision policy.
+    The contract is unchanged (the "cyclic-storage contract", see
+    ROADMAP.md and DESIGN.md Secs. 4-5, 10): the factor is distributed
+    ONCE at construction, never touches the host again, and ``solve``
+    runs one compiled program per RHS shape with zero steady-state
+    host<->device transfers and zero retraces for every precision
+    policy.  New code:
 
-        sess = TrsmSession(L, grid, method="inv", n0=16)
-        for B in rhs_stream:            # B: (n, k) device array
-            X = sess.solve(B)           # X: (n, k), natural layout
-
-        # MXU-native sweep, fp32-accurate answers:
-        sess = TrsmSession(L, grid, precision="bf16_refine")
-
-    ``donate=True`` (default) donates B's device buffer to the solve —
-    serving semantics: the RHS is consumed.  Pass ``donate=False`` to
-    keep B alive.
-
-    ``dtype`` (attribute) is the session's I/O dtype — what ``solve``
-    returns and what :meth:`place_rhs` casts requests to: the residual
-    dtype for refining policies, the compute dtype otherwise.
+        solver = repro.api.Solver.from_factor(L, grid, n0=16)
+        X = solver.solve(B)
     """
 
     def __init__(self, L, grid: TrsmGrid, *, method: str = "inv",
@@ -483,72 +471,96 @@ class TrsmSession:
                  machine=None, block_inv: Callable | None = None,
                  dtype=None, precision=None,
                  cache: CompiledSolverCache | None = None):
-        L = jnp.asarray(L) if dtype is None else jnp.asarray(L, dtype)
-        if L.ndim != 2 or L.shape[0] != L.shape[1]:
-            raise ValueError(f"factor must be square, got {L.shape}")
-        self.policy = preclib.resolve(precision, L.dtype)
-        _check_policy_supported(self.policy)
-        self.grid = grid
-        self.n = L.shape[0]
-        self.dtype = self.policy.io_dtype
-        self.method = method
-        self.n0 = n0
-        self.mode = mode
-        self.lower = lower
-        self.transpose = transpose
-        self.machine = machine
-        self.block_inv = block_inv
-        self.cache = cache if cache is not None else _DEFAULT_CACHE
-        # Distribute once; the prep programs are shared across k-shapes.
-        preps = _factor_preps(grid, lower, transpose, self.policy)
-        self._factor = tuple(p(L) for p in preps)
-        self.solves_served = 0
+        from repro.core import solver as solverlib
+        solverlib._warn_deprecated("TrsmSession", "Solver.from_factor")
+        with solverlib._shim_quiet():
+            self._solver = solverlib.Solver.from_factor(
+                L, grid, method=method, n0=n0, mode=mode, lower=lower,
+                transpose=transpose, machine=machine,
+                block_inv=block_inv, dtype=dtype, precision=precision,
+                cache=cache)
+
+    @classmethod
+    def _wrap(cls, solver) -> "TrsmSession":
+        self = object.__new__(cls)
+        self._solver = solver
+        return self
+
+    # ------------- former attributes, read off the Solver -------------
+
+    @property
+    def n(self) -> int:
+        return self._solver.n
+
+    @property
+    def grid(self) -> TrsmGrid:
+        return self._solver.grid
+
+    @property
+    def policy(self) -> PrecisionPolicy:
+        return self._solver.policy
+
+    @property
+    def dtype(self):
+        return self._solver.dtype
+
+    @property
+    def method(self) -> str:
+        return self._solver.method
+
+    @property
+    def n0(self) -> int | None:
+        return self._solver.n0
+
+    @property
+    def mode(self) -> str | None:
+        return self._solver.bank.mode
+
+    @property
+    def cache(self) -> CompiledSolverCache:
+        return self._solver.cache
+
+    @property
+    def solves_served(self) -> int:
+        return self._solver.solves_served
 
     @property
     def factor_cyclic(self):
-        """The resident sweep factor (cyclic storage, storage dtype,
-        sharded P("x",("z","y")))."""
-        return self._factor[0]
+        """The resident sweep factor (cyclic storage, storage dtype)."""
+        return self._solver.bank.factors_cyclic[0]
 
     @property
     def factor_cyclic_residual(self):
         """The residual-precision resident copy (None unless the
         policy refines)."""
-        return self._factor[1] if self.policy.refines else None
+        res = self._solver.bank.factors_cyclic_residual
+        return None if res is None else res[0]
 
     def program_for(self, k: int) -> SolverProgram:
-        """The compiled :class:`SolverProgram` serving RHS width k
-        (built and cached on first use)."""
-        return get_solver(self.grid, n=self.n, k=k,
-                          method=self.method, n0=self.n0, mode=self.mode,
-                          lower=self.lower, transpose=self.transpose,
-                          machine=self.machine, block_inv=self.block_inv,
-                          precision=self.policy, cache=self.cache)
+        return self._solver.program_for(k)
 
     def place_rhs(self, B):
-        """Place a right-hand side on the grid with the pinned natural
-        layout the solve program expects.  A serving client that calls
-        this when the request arrives pays the (unavoidable) ingestion
-        transfer up front; ``solve`` itself then moves no data at all."""
+        """Pin an (n, k) right-hand side to the solve program's input
+        placement, returned at the legacy (n, k) shape (``solve``
+        lifts it to the width-1 stack internally with a pure on-device
+        expand, so the steady state stays transfer-free)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
         prog = self.program_for(B.shape[1])
-        return jax.device_put(jnp.asarray(B, self.dtype),
-                              prog.rhs_sharding)
+        # the program's RHS sharding minus the leading factor axis
+        sharding = NamedSharding(self.grid.mesh,
+                                 P(*prog.rhs_sharding.spec[1:]))
+        return jax.device_put(jnp.asarray(B, self.dtype), sharding)
 
     def solve(self, B, *, donate: bool = True):
-        """Solve op(L) X = B for a batched RHS (n, k); X natural layout,
-        at the session's I/O dtype (refined to residual precision when
-        the policy refines)."""
+        """Solve op(L) X = B; accepts an (n, k) RHS or the (1, n, k)
+        placed form, returns X as (n, k)."""
+        if B.ndim == 3 and B.shape[0] == 1:
+            return jax.lax.squeeze(self._solver.solve(B, donate=donate),
+                                   (0,))
         if B.ndim != 2 or B.shape[0] != self.n:
             raise ValueError(f"rhs must be ({self.n}, k), got {B.shape}")
-        prog = self.program_for(B.shape[1])
-        fn = prog.solve_donating if donate else prog.solve
-        X = fn(self._factor, B)
-        self.solves_served += 1
-        return X
+        return self._solver.solve(B, donate=donate)
 
-    def warmup(self, k: int):
-        """Compile (and run once on zeros) the program for RHS width k,
-        so the first real request is served at steady-state latency."""
-        B = jnp.zeros((self.n, k), self.dtype)
-        self.solve(B, donate=True)
+    def warmup(self, k: int) -> "TrsmSession":
+        self._solver.warmup(k)
         return self

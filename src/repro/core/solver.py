@@ -1,0 +1,689 @@
+"""Unified front door for the solve stack: SolveSpec + Solver +
+SolveServer (DESIGN.md Sec. 10; re-exported as ``repro.api``).
+
+The paper's central claim is that the *choice* of algorithm — the
+block-inversion size n0 interpolating between standard TRSM and full
+triangular inversion, the processor grid, and the method itself — can
+be made **a priori** from the communication cost analysis (Sec. VIII).
+After three PRs that decision was scattered over four entry points
+(``tuning.tune``, ``tuning.choose_method``, ``session.resolve_plan``,
+``session.get_solver``) and two parallel class hierarchies
+(``TrsmSession``/``TrsmRequestServer`` vs ``BatchedTrsmSession``/
+``BankedTrsmServer``), keyed by a brittle positional tuple.  This
+module collapses all of it into three declarative pieces:
+
+* :class:`SolveSpec` — a frozen, hashable description of ONE solve
+  configuration: the problem (n, k, operator variant), the plan
+  (method, n0, mode, grid — resolvable a priori via
+  :meth:`SolveSpec.auto`, which consumes a frozen
+  :class:`~repro.core.tuning.TrsmPlan` verbatim), and the execution
+  policy (precision, bank width, map mode).  A concrete spec **is**
+  the :class:`~repro.core.session.CompiledSolverCache` key — the sole
+  key type; the positional tuples are gone.
+
+* :class:`Solver` — ONE serving class subsuming the former
+  ``TrsmSession`` (single resident factor) and ``BatchedTrsmSession``
+  (bank of M factors): a :class:`~repro.core.bank.FactorBank` is the
+  admission layer and a width-1 bank IS the single-factor case.
+  Admission distributes each factor once (operator reductions folded
+  into the gather, policy dtype casts, phase 1 — the paper's
+  Diagonal-Inverter — hoisted for method "inv"); the steady state is
+  one compiled program per RHS width with zero host<->device
+  transfers and zero retraces, at any bank width, for every precision
+  policy.
+
+* :class:`SolveServer` — ONE continuous-batching front-end subsuming
+  ``TrsmRequestServer``/``BankedTrsmServer``: per-factor request
+  queues, first-fit packed fixed-width panels, one dispatch per wave
+  covering every factor, submit-order results.
+
+The deprecated names remain as thin shims (one ``DeprecationWarning``
+each, bit-identical results) so existing call sites keep working;
+internal code must use this module (CI errors on internal callers of
+the deprecated API).
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import threading
+import warnings
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as preclib
+from repro.core.bank import FactorBank
+from repro.core.grid import TrsmGrid
+from repro.core.precision import PrecisionPolicy
+
+
+# --------------------------- deprecation shims ---------------------------
+
+_QUIET = threading.local()
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    """One DeprecationWarning per deprecated entry point, attributed to
+    the caller (stacklevel: helper -> shim -> caller).  Suppressed when
+    a shim builds other shims internally (:func:`_shim_quiet`), so each
+    deprecated call emits exactly ONE warning."""
+    if getattr(_QUIET, "on", False):
+        return
+    warnings.warn(f"{old} is deprecated; use {new} (see the README "
+                  f"migration table)", DeprecationWarning, stacklevel=3)
+
+
+@contextlib.contextmanager
+def _shim_quiet():
+    prev = getattr(_QUIET, "on", False)
+    _QUIET.on = True
+    try:
+        yield
+    finally:
+        _QUIET.on = prev
+
+
+# ----------------------------- plan resolution -----------------------------
+
+def plan_grid(p1: int, p2: int) -> TrsmGrid:
+    """A mesh-less grid (p1 x p1 x p2) for plan-only specs: carries the
+    processor-grid arithmetic of a :class:`SolveSpec` without touching
+    devices.  Executable paths (:func:`solver_for`, :class:`Solver`)
+    require a real mesh (``repro.core.grid.make_trsm_mesh``)."""
+    return TrsmGrid(None, p1, p2)
+
+
+def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
+                 n0: int | None = None, machine=None,
+                 hoisted: bool = False) -> tuple[str, int]:
+    """The ONE place method/n0 defaults are resolved (pure host-side
+    arithmetic, so cache keys are concrete).
+
+    ``method="auto"`` dispatches through the Sec. VIII alpha-beta-gamma
+    model — the fused comparison (``tuning.choose_method``) for
+    one-shot solves, or the sweep-only steady comparison
+    (``tuning.choose_serving_method``) when ``hoisted``: a resident
+    factor pays phase 1 once at admission, so the inversion term must
+    not count against "inv" in the per-solve dispatch.  An unset
+    ``n0`` is consumed verbatim from the tuner's frozen
+    :class:`~repro.core.tuning.TrsmPlan` for "inv" (``tune_for_grid``
+    — or the hoisted-serving argmin ``serving_n0``), and set to the
+    Sec. IV-A base-case size for "rec"."""
+    from repro.core import tuning
+    if method == "auto":
+        if hoisted:
+            method, h_n0, _ = tuning.choose_serving_method(
+                n, k, grid, machine, n0=n0)
+            if method == "inv" and n0 is None:
+                n0 = h_n0
+        else:
+            method, _, _ = tuning.choose_method(n, k, grid.p, machine)
+    if n0 is None:
+        if method == "inv":
+            n0 = tuning.serving_n0(n, grid) if hoisted else \
+                tuning.tune_for_grid(n, k, grid, machine).n0
+        else:
+            from repro.core import rec_trsm
+            n0 = rec_trsm.default_n0(n, k, grid.p1, grid.p2)
+    return method, n0
+
+
+# ------------------------------- SolveSpec -------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """A frozen, hashable description of one solve configuration — and
+    the sole :class:`~repro.core.session.CompiledSolverCache` key type.
+
+    Field groups (the spec-field <-> cache-key table is DESIGN.md
+    Sec. 10):
+
+    * problem — ``n`` (factor order), ``k`` (RHS width; ``None`` marks
+      a template spec that a :class:`Solver` completes per width),
+      ``lower``/``transpose`` (the operator variant, DESIGN.md Sec. 3).
+    * plan — ``method`` ("inv" | "rec"; ``"auto"`` is resolved BEFORE
+      a spec exists, via :meth:`auto`), ``n0`` (diagonal-block size),
+      ``mode`` (inv phase-1 scheme), ``grid`` (p1 x p1 x p2 placement;
+      mesh identity is part of the key), ``block_inv`` (optional
+      diagonal-inverter kernel hook).
+    * execution — ``policy`` (the full
+      :class:`~repro.core.precision.PrecisionPolicy`), ``bank_width``
+      (``None`` = the unbanked one-shot program; M >= 1 = the batched
+      program over an M-factor stack) and ``map_mode`` ("vmap" |
+      "scan"; normalized to ``None`` when unbanked).
+
+    Every field changes the compiled artifact, which is exactly why
+    the spec is the cache key: two call sites that build equal specs
+    share one compiled program, and nothing that matters can be left
+    out of the key by accident.
+    """
+    n: int
+    k: int | None
+    grid: TrsmGrid
+    policy: PrecisionPolicy
+    method: str = "inv"
+    n0: int | None = None
+    mode: str | None = None
+    lower: bool = True
+    transpose: bool = False
+    block_inv: Callable | None = None
+    bank_width: int | None = None
+    map_mode: str | None = None
+
+    def __post_init__(self):
+        if self.method not in ("inv", "rec"):
+            raise ValueError(
+                f"spec method must be 'inv' or 'rec', got {self.method!r}"
+                f" (resolve 'auto' through SolveSpec.auto)")
+        if self.bank_width is not None and self.bank_width < 1:
+            raise ValueError(f"bank width must be >= 1, got "
+                             f"{self.bank_width}")
+        if self.bank_width is None:
+            object.__setattr__(self, "map_mode", None)
+        elif self.map_mode is None:
+            object.__setattr__(self, "map_mode", "vmap")
+        if self.map_mode not in (None, "vmap", "scan"):
+            raise ValueError(f"unknown map_mode {self.map_mode!r}")
+
+    # ------------------------------ queries ------------------------------
+
+    @property
+    def is_concrete(self) -> bool:
+        """True when the spec can key a compiled program: shape and
+        plan fully resolved, grid backed by a real mesh."""
+        return (self.k is not None and self.n0 is not None
+                and self.grid is not None
+                and self.grid.mesh is not None)
+
+    def with_k(self, k: int) -> "SolveSpec":
+        """The same configuration at RHS width k."""
+        return dataclasses.replace(self, k=k)
+
+    def validate(self) -> "SolveSpec":
+        """Check plan feasibility (raises ValueError): n0 must tile the
+        factor (``n0 | n``) and, for "inv", respect the cyclic layout
+        (``(p1*p2) | n0`` — each rank owns a contiguous slice of every
+        diagonal block)."""
+        n0 = self.n0
+        if n0 is not None:
+            if n0 < 1 or self.n % n0:
+                raise ValueError(f"n0={n0} does not tile n={self.n}")
+            if self.method == "inv" and self.grid is not None \
+                    and n0 % (self.grid.p1 * self.grid.p2):
+                raise ValueError(
+                    f"n0={n0} infeasible for the cyclic layout on "
+                    f"p1={self.grid.p1}, p2={self.grid.p2}")
+        return self
+
+    # ---------------------------- construction ----------------------------
+
+    @classmethod
+    def auto(cls, n: int, k: int, *, grid: TrsmGrid | None = None,
+             p: int | None = None, method: str = "auto",
+             n0: int | None = None, mode: str | None = None,
+             lower: bool = True, transpose: bool = False,
+             machine=None, precision=None, dtype=None,
+             block_inv: Callable | None = None,
+             bank_width: int | None = None,
+             map_mode: str | None = None,
+             hoisted: bool | None = None) -> "SolveSpec":
+        """The a-priori front door: resolve the plan ONCE from the
+        Sec. VIII cost model and freeze it into a spec.
+
+        Pass either a ``grid`` (mesh pinned — n0/method tuned for it)
+        or a processor count ``p`` (the tuner also picks p1/p2; the
+        result carries a mesh-less :func:`plan_grid` and is a
+        plan-only spec until re-targeted at a real mesh).  The tuner's
+        frozen :class:`~repro.core.tuning.TrsmPlan` is consumed
+        verbatim — same n0, same grid factors.  ``hoisted`` selects
+        the serving-n0 argmin (defaults to True exactly when
+        ``bank_width`` is set, i.e. when phase 1 runs at admission).
+        ``precision`` accepts a preset name or PrecisionPolicy;
+        ``dtype`` the legacy uniform policy; default fp32."""
+        from repro.core import tuning
+        if hoisted is None:
+            hoisted = bank_width is not None
+        if grid is None:
+            if p is None:
+                raise ValueError("SolveSpec.auto needs grid= or p=")
+            if method == "auto":
+                method, plan, _ = tuning.choose_method(n, k, p, machine)
+            else:
+                plan = tuning.tune(n, k, p, machine)
+            grid = plan_grid(plan.p1, plan.p2)
+            if n0 is None and method == "inv" and not hoisted:
+                n0 = plan.n0                      # the plan, verbatim
+        method, n0 = resolve_plan(grid, n, k, method=method, n0=n0,
+                                  machine=machine, hoisted=hoisted)
+        if precision is None and dtype is None:
+            dtype = jnp.float32
+        return cls(n=n, k=k, grid=grid,
+                   policy=preclib.resolve(precision, dtype),
+                   method=method, n0=n0, mode=mode, lower=lower,
+                   transpose=transpose, block_inv=block_inv,
+                   bank_width=bank_width, map_mode=map_mode).validate()
+
+    @classmethod
+    def from_plan(cls, plan, *, k: int | None = None,
+                  grid: TrsmGrid | None = None, precision=None,
+                  dtype=None, mode: str | None = None,
+                  lower: bool = True, transpose: bool = False,
+                  block_inv: Callable | None = None,
+                  bank_width: int | None = None,
+                  map_mode: str | None = None) -> "SolveSpec":
+        """Freeze a tuner-produced :class:`~repro.core.tuning.TrsmPlan`
+        into a spec VERBATIM (method, n0, and grid factors are the
+        plan's own).  ``grid`` may re-target the plan at a real mesh,
+        but must agree with the plan's (p1, p2)."""
+        if grid is None:
+            grid = plan_grid(plan.p1, plan.p2)
+        elif (grid.p1, grid.p2) != (plan.p1, plan.p2):
+            raise ValueError(
+                f"grid ({grid.p1}, {grid.p2}) does not match the "
+                f"plan's ({plan.p1}, {plan.p2})")
+        if precision is None and dtype is None:
+            dtype = jnp.float32
+        return cls(n=plan.n, k=plan.k if k is None else k, grid=grid,
+                   policy=preclib.resolve(precision, dtype),
+                   method=plan.method, n0=plan.n0, mode=mode,
+                   lower=lower, transpose=transpose, block_inv=block_inv,
+                   bank_width=bank_width, map_mode=map_mode).validate()
+
+
+def solver_for(spec: SolveSpec, cache=None):
+    """Fetch (or build) the compiled
+    :class:`~repro.core.session.SolverProgram` for a concrete spec —
+    the spec IS the cache key."""
+    from repro.core import session
+    if not isinstance(spec, SolveSpec):
+        raise TypeError(f"solver_for takes a SolveSpec, got "
+                        f"{type(spec).__name__}")
+    if not spec.is_concrete:
+        raise ValueError(
+            f"spec is not concrete (k={spec.k}, n0={spec.n0}, mesh="
+            f"{'set' if spec.grid and spec.grid.mesh is not None else None}"
+            f"): fill k/n0 and target a real mesh before compiling")
+    session._check_policy_supported(spec.policy)
+    cache = cache if cache is not None else session.default_cache()
+    return cache.get(spec, lambda: session._build_solver(spec))
+
+
+# -------------------------------- Solver --------------------------------
+
+class Solver:
+    """ONE serving class for resident triangular factors — any bank
+    width, any precision policy, single- and multi-factor (DESIGN.md
+    Sec. 10).
+
+    A :class:`~repro.core.bank.FactorBank` is the admission layer: the
+    factor(s) are distributed ONCE into stacked cyclic device storage
+    (operator reductions folded into the gather, policy dtype casts,
+    and — for method "inv" — phase 1, the paper's Diagonal-Inverter,
+    hoisted so the steady state is the sweep alone).  A width-1 bank
+    IS the single-factor case; there is no separate session type.
+
+        solver = Solver.from_factor(L, grid, precision="bf16_refine")
+        X = solver.solve(B)                   # B: (n, k) -> X: (n, k)
+
+        solver = Solver.from_factors(Ls, grid)      # (M, n, n) stack
+        X = solver.solve(Bs)                  # (M, n, k) in ONE dispatch
+
+    ``solve`` accepts an (n, k) RHS when the width is 1 (returned in
+    kind) or an (M, n, k) stack; after ``warmup`` the steady state
+    performs zero host<->device transfers and zero retraces per RHS
+    width, for every precision policy and every bank width (asserted
+    in tests/test_api_solver.py at widths 1 and 16).
+
+    Programs come from the :class:`CompiledSolverCache`, keyed by this
+    solver's :meth:`spec_for` — same-width same-config solvers share
+    one compiled program; factors are runtime operands, never baked-in
+    constants.
+    """
+
+    def __init__(self, bank: FactorBank, *, cache=None):
+        self.bank = bank
+        self.cache = cache if cache is not None else bank.cache
+        self.solves_served = 0
+
+    # ---------------------------- constructors ----------------------------
+
+    @classmethod
+    def from_factor(cls, L, grid: TrsmGrid, *, method: str = "inv",
+                    n0: int | None = None, mode: str | None = None,
+                    lower: bool = True, transpose: bool = False,
+                    machine=None, block_inv: Callable | None = None,
+                    dtype=None, precision=None, map_mode: str = "vmap",
+                    k_hint: int | None = None, cache=None) -> "Solver":
+        """A width-1 solver around one natural-layout (n, n) factor
+        (the former ``TrsmSession``).  ``method="auto"`` resolves the
+        algorithm a priori from the cost model at ``k_hint`` RHS
+        columns (default n); an unset n0 defaults to the
+        hoisted-serving argmin (``tuning.serving_n0`` — phase 1 runs
+        at admission, see DESIGN.md Sec. 9)."""
+        L = jnp.asarray(L) if dtype is None else jnp.asarray(L, dtype)
+        if L.ndim != 2 or L.shape[0] != L.shape[1]:
+            raise ValueError(f"factor must be square, got {L.shape}")
+        n = L.shape[0]
+        if method == "auto":
+            method, n0 = resolve_plan(grid, n, k_hint or n,
+                                      method="auto", n0=n0,
+                                      machine=machine, hoisted=True)
+        bank = FactorBank(grid, n, method=method, n0=n0, mode=mode,
+                          lower=lower, transpose=transpose,
+                          machine=machine, block_inv=block_inv,
+                          dtype=None if precision is not None else L.dtype,
+                          precision=precision, map_mode=map_mode,
+                          cache=cache)
+        bank.admit(L)
+        return cls(bank, cache=cache)
+
+    @classmethod
+    def from_factors(cls, Ls, grid: TrsmGrid, *, method: str = "inv",
+                     n0: int | None = None, mode: str | None = None,
+                     lower: bool = True, transpose: bool = False,
+                     machine=None, block_inv: Callable | None = None,
+                     dtype=None, precision=None, map_mode: str = "vmap",
+                     cache=None) -> "Solver":
+        """A width-M solver over an (M, n, n) natural-layout stack,
+        admitted in one stacked gather (the former bank construction +
+        ``BatchedTrsmSession``)."""
+        Ls = jnp.asarray(Ls) if dtype is None else jnp.asarray(Ls, dtype)
+        if Ls.ndim != 3 or Ls.shape[-1] != Ls.shape[-2]:
+            raise ValueError(f"factor stack must be (M, n, n), got "
+                             f"{Ls.shape}")
+        bank = FactorBank(grid, Ls.shape[-1], method=method, n0=n0,
+                          mode=mode, lower=lower, transpose=transpose,
+                          machine=machine, block_inv=block_inv,
+                          dtype=None if precision is not None
+                          else Ls.dtype,
+                          precision=precision, map_mode=map_mode,
+                          cache=cache)
+        bank.admit_stack(Ls)
+        return cls(bank, cache=cache)
+
+    @classmethod
+    def from_bank(cls, bank: FactorBank, *, cache=None) -> "Solver":
+        """Serve an existing (possibly still-growing) FactorBank."""
+        return cls(bank, cache=cache)
+
+    @classmethod
+    def from_spec(cls, spec: SolveSpec, factors=None, *,
+                  cache=None) -> "Solver":
+        """Spec-driven construction: build the admission bank from a
+        spec's plan/execution fields and admit ``factors`` (one (n, n)
+        factor or an (M, n, n) stack).  The spec's grid must carry a
+        real mesh, and when the spec pins a ``bank_width`` the admitted
+        factor count must match it — the spec is the cache key, so a
+        width mismatch would silently key programs on a different spec
+        than the one declared."""
+        if spec.grid is None or spec.grid.mesh is None:
+            raise ValueError("spec has a plan-only grid; re-target it "
+                             "at a real mesh (make_trsm_mesh) first")
+        spec.validate()
+        bank = FactorBank(spec.grid, spec.n, method=spec.method,
+                          n0=spec.n0, mode=spec.mode, lower=spec.lower,
+                          transpose=spec.transpose,
+                          block_inv=spec.block_inv,
+                          precision=spec.policy,
+                          map_mode=spec.map_mode or "vmap", cache=cache)
+        solver = cls(bank, cache=cache)
+        if factors is not None:
+            factors = jnp.asarray(factors)
+            if factors.ndim == 3:
+                bank.admit_stack(factors)
+            else:
+                bank.admit(factors)
+        if spec.bank_width is not None and bank.size != spec.bank_width:
+            raise ValueError(
+                f"spec pins bank_width={spec.bank_width} but "
+                f"{bank.size} factor(s) were admitted; pass a "
+                f"matching stack (or a spec with bank_width=None)")
+        return solver
+
+    # ------------------------------ queries ------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.bank.n
+
+    @property
+    def width(self) -> int:
+        """M — the number of resident factors (live: admitting to the
+        bank grows the width; the next solve keys on the new width)."""
+        return self.bank.size
+
+    @property
+    def grid(self) -> TrsmGrid:
+        return self.bank.grid
+
+    @property
+    def policy(self) -> PrecisionPolicy:
+        return self.bank.policy
+
+    @property
+    def dtype(self):
+        """I/O dtype (what ``solve`` returns, what :meth:`place_rhs`
+        casts to): residual dtype when the policy refines, compute
+        dtype otherwise."""
+        return self.bank.policy.io_dtype
+
+    @property
+    def method(self) -> str:
+        return self.bank.method
+
+    @property
+    def n0(self) -> int | None:
+        return self.bank.n0
+
+    def spec_for(self, k: int) -> SolveSpec:
+        """The concrete :class:`SolveSpec` (== cache key) serving RHS
+        width k at the current bank width."""
+        b = self.bank
+        n0 = b.n0
+        if n0 is None:                       # "rec" with unpinned n0
+            from repro.core import rec_trsm
+            n0 = rec_trsm.default_n0(b.n, k, b.grid.p1, b.grid.p2)
+        return SolveSpec(n=b.n, k=k, grid=b.grid, policy=b.policy,
+                         method=b.method, n0=n0, mode=b.mode,
+                         lower=b.lower, transpose=b.transpose,
+                         block_inv=b.block_inv, bank_width=b.size,
+                         map_mode=b.map_mode)
+
+    def program_for(self, k: int):
+        """The compiled :class:`~repro.core.session.SolverProgram` for
+        RHS width k (built and cached on first use)."""
+        return solver_for(self.spec_for(k), self.cache)
+
+    # ------------------------------ serving ------------------------------
+
+    def _lift(self, B):
+        """Normalize an RHS to the (M, n, k) stack form; returns
+        (stack, was_2d)."""
+        if B.ndim == 2:
+            if self.width != 1:
+                raise ValueError(
+                    f"rhs stack must be ({self.width}, {self.n}, k) for "
+                    f"a width-{self.width} solver, got {B.shape}")
+            if B.shape[0] != self.n:
+                raise ValueError(f"rhs must be ({self.n}, k), got "
+                                 f"{B.shape}")
+            return jax.lax.expand_dims(B, (0,)), True
+        if B.ndim != 3 or B.shape[0] != self.width \
+                or B.shape[1] != self.n:
+            raise ValueError(f"rhs stack must be ({self.width}, "
+                             f"{self.n}, k), got {B.shape}")
+        return B, False
+
+    def place_rhs(self, B):
+        """Pin an RHS — (n, k) at width 1, or an (M, n, k) stack — to
+        the solve program's input sharding, in stack form.  A serving
+        client that places requests as they arrive pays the
+        (unavoidable) ingestion transfer up front; ``solve`` itself
+        then moves no data at all."""
+        B, _ = self._lift(jnp.asarray(B, self.dtype))
+        prog = self.program_for(B.shape[-1])
+        return jax.device_put(B, prog.rhs_sharding)
+
+    def solve(self, B, *, donate: bool = True):
+        """Solve op(L_i) X_i = B_i for every resident factor in ONE
+        dispatch; X is returned in the rank B was given (an (n, k) RHS
+        at width 1 yields an (n, k) X).  ``donate=True`` (serving
+        semantics) donates the RHS buffer."""
+        B, squeeze = self._lift(B)
+        prog = self.program_for(B.shape[-1])
+        fn = prog.solve_donating if donate else prog.solve
+        X = fn(self.bank.stacks(), B)
+        self.solves_served += self.width
+        # lax.squeeze, not X[0]: the getitem spelling lowers through
+        # dynamic_slice, whose index operand is a host->device upload
+        # on every call — it would break the zero-transfer steady state
+        return jax.lax.squeeze(X, (0,)) if squeeze else X
+
+    def warmup(self, k: int) -> "Solver":
+        """Compile (and run once on zeros) the program for RHS width k
+        at the current bank width, so the first real request is served
+        at steady-state latency.  Also pre-runs the rank adapters
+        (stack/slice) used by width-1 (n, k) serving."""
+        B = jnp.zeros((self.width, self.n, k), self.dtype)
+        X = self.solve(B, donate=True)
+        if self.width == 1:
+            jax.lax.expand_dims(jnp.zeros((self.n, k), self.dtype),
+                                (0,))                   # lift path
+            jax.lax.squeeze(X, (0,))                    # squeeze path
+        return self
+
+
+# ------------------------------ SolveServer ------------------------------
+
+def _pack_wave(queue: collections.deque, panel_k: int) -> list:
+    """First-fit pack one panel's worth of requests off the queue.
+
+    Walks the whole queue in FIFO order and takes EVERY request that
+    still fits in the remaining panel width (not just a contiguous
+    head-of-line prefix): a wide request at the head no longer strands
+    narrow requests behind it in an underfilled panel.  Skipped
+    requests keep their relative order for the next wave.  Returns the
+    packed [(seq, b), ...]; the queue keeps the rest."""
+    wave: list = []
+    width = 0
+    leftover: collections.deque = collections.deque()
+    while queue:
+        seq, b = queue.popleft()
+        if width + b.shape[1] <= panel_k:
+            wave.append((seq, b))
+            width += b.shape[1]
+        else:
+            leftover.append((seq, b))
+    queue.extend(leftover)
+    return wave
+
+
+class SolveServer:
+    """ONE continuous-batching front-end for a :class:`Solver` at any
+    width (subsumes ``TrsmRequestServer`` and ``BankedTrsmServer``).
+
+    Incoming solve requests (RHS column blocks of varying width,
+    addressed to a bank factor — factor 0 is the whole bank at width
+    1) are first-fit packed into fixed-width (n, panel_k) panels, one
+    panel slot per factor, and every wave is ONE dispatch covering all
+    factors: one executable for all traffic, zero retraces and zero
+    host transfers in the steady state.  Factors with an empty queue
+    ride along as zero panels (a solve of zeros is zeros, so idle
+    factors never contaminate results and the program shape never
+    changes); ``drain`` returns each factor's solutions in its own
+    submit order.
+
+        server = SolveServer(Solver.from_factors(Ls, grid), panel_k=16)
+        server.warmup()
+        server.submit(b, factor=2)
+        outs = server.drain()          # {factor: [X, ...]}
+    """
+
+    def __init__(self, solver: Solver, panel_k: int):
+        self.solver = solver
+        self.panel_k = panel_k
+        # lazily keyed by factor index, validated against the solver's
+        # CURRENT width — factors admitted after server construction
+        # are servable immediately (the next wave's program is simply
+        # keyed on the new width)
+        self._queues: dict[int, collections.deque] = {}
+        self._seq = 0
+        self.requests_served = 0
+        self.waves_solved = 0
+
+    @classmethod
+    def from_spec(cls, spec: SolveSpec, factors, *, panel_k: int = 16,
+                  cache=None, warm: bool = True) -> "SolveServer":
+        """Spec-driven construction: admit ``factors`` under ``spec``
+        and return a (warmed) server."""
+        server = cls(Solver.from_spec(spec, factors, cache=cache),
+                     panel_k=panel_k)
+        return server.warmup() if warm else server
+
+    @property
+    def panels_solved(self) -> int:
+        """Alias of ``waves_solved`` (a width-1 wave is one panel)."""
+        return self.waves_solved
+
+    def submit(self, b, factor: int = 0) -> None:
+        """Enqueue one RHS block — an (n,) vector or (n, j) columns —
+        for bank factor ``factor``."""
+        if not 0 <= factor < self.solver.width:
+            raise ValueError(f"unknown factor {factor}; bank holds "
+                             f"{self.solver.width}")
+        b = jnp.asarray(b, self.solver.dtype)
+        if b.ndim == 1:
+            b = b[:, None]
+        if b.ndim != 2 or b.shape[0] != self.solver.n:
+            raise ValueError(f"rhs must be ({self.solver.n}, j), "
+                             f"got {b.shape}")
+        if b.shape[1] > self.panel_k:
+            raise ValueError(f"request wider than panel: {b.shape[1]} > "
+                             f"{self.panel_k}")
+        self._queues.setdefault(factor, collections.deque())
+        self._queues[factor].append((self._seq, b))
+        self._seq += 1
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def warmup(self) -> "SolveServer":
+        self.solver.warmup(self.panel_k)
+        return self
+
+    def drain(self) -> dict:
+        """Serve all queued requests for all factors.  Returns
+        {factor: [X, ...]} for every CURRENT bank factor (empty list
+        if none were queued), each factor's solutions in its own
+        submit order."""
+        n, pk = self.solver.n, self.panel_k
+        M = self.solver.width
+        results: dict[int, dict] = {f: {} for f in range(M)}
+        while self.pending():
+            waves = {f: _pack_wave(q, pk)
+                     for f, q in self._queues.items() if q}
+            panels = []
+            for f in range(M):
+                wave = waves.get(f, [])
+                if wave:
+                    panel = jnp.concatenate([b for _, b in wave], axis=1)
+                    w = panel.shape[1]
+                    if w < pk:
+                        panel = jnp.pad(panel, ((0, 0), (0, pk - w)))
+                else:
+                    panel = jnp.zeros((n, pk), self.solver.dtype)
+                panels.append(panel)
+            X = self.solver.solve(jnp.stack(panels))
+            self.waves_solved += 1
+            for f, wave in waves.items():
+                off = 0
+                for seq, b in wave:
+                    results[f][seq] = X[f, :, off:off + b.shape[1]]
+                    off += b.shape[1]
+                self.requests_served += len(wave)
+        return {f: [res[s] for s in sorted(res)]
+                for f, res in results.items()}

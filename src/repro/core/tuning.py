@@ -40,10 +40,15 @@ class TrsmPlan:
       F flops) the model predicts for this plan.
     * ``n, k, p`` — the problem the plan was derived for.
 
-    Plans are produced by :func:`tune` / :func:`tune_for_grid`; the
-    compiled-solver cache (repro.core.session) calls these when the
-    caller leaves ``n0`` unset, so a plan is also the provenance record
-    for "why did the session pick this block size".
+    * ``method`` — which algorithm the plan is for: ``"inv"``
+      (It-Inv-TRSM, what :func:`tune` costs) or ``"rec"`` (the
+      recursive baseline; :func:`choose_method` stamps the winner).
+
+    Plans are produced by :func:`tune` / :func:`tune_for_grid` /
+    :func:`choose_method`; ``repro.core.solver.SolveSpec.auto`` (and
+    through it the compiled-solver cache) consumes a plan VERBATIM
+    when the caller leaves method/n0 unset, so a plan is also the
+    provenance record for "why did the solver pick this block size".
     """
     regime: str          # "1d" | "2d" | "3d"
     p1: int
@@ -55,6 +60,7 @@ class TrsmPlan:
     n: int
     k: int
     p: int
+    method: str = "inv"
 
     @property
     def grid(self):
@@ -174,8 +180,14 @@ def tune(n: int, k: int, p: int,
     the plan: a bf16 sweep changes gamma and beta by the same factor
     at leading order, leaving the argmin unchanged."""
     machine = machine or cm.tpu_v5e()
+    grids = feasible_grids(p)
+    if not grids:
+        # p admits no power-of-two p1^2 * p2 == p factorization (e.g.
+        # p = 6): plan for the largest power of two <= p — using fewer
+        # processors is always a valid (and mappable) assignment
+        grids = feasible_grids(2 ** int(math.log2(p)))
     best = None
-    for p1, p2 in feasible_grids(p):
+    for p1, p2 in grids:
         for n0 in _feasible_n0(n, p1, p2):
             r1, r2 = _inv_subgrid(n, n0, p)
             c = cm.it_inv_trsm_cost(n, k, n0, p1, p2, r1, r2)
@@ -253,4 +265,28 @@ def choose_method(n: int, k: int, p: int,
     t_inv = plan.cost.time(machine)
     t_rec = cm.rec_trsm_cost(n, k, p).time(machine)
     method = "inv" if t_inv <= t_rec else "rec"
+    plan = dataclasses.replace(plan, method=method)
     return method, plan, {"inv": t_inv, "rec": t_rec}
+
+
+def choose_serving_method(n: int, k: int, grid,
+                          machine: cm.Machine | None = None,
+                          n0: int | None = None):
+    """Auto-dispatch for the HOISTED steady state (a resident factor:
+    phase 1 — the Diagonal-Inverter — runs once at admission).
+
+    :func:`choose_method` compares the FUSED It-Inv cost, inversion
+    term included; for a serving solver that term leaves the per-solve
+    cost entirely, so the fused comparison systematically under-credits
+    "inv" (exactly the regime the hoisting optimization targets).
+    This variant compares Rec-TRSM against the sweep-only steady cost
+    at the serving block size, on the pinned grid.  Returns
+    ``(method, n0, modeled_times)`` — n0 is the serving argmin (or the
+    caller's, passed through)."""
+    machine = machine or cm.tpu_v5e()
+    n0 = n0 if n0 is not None else serving_n0(n, grid)
+    t_inv = cm.it_inv_trsm_steady_cost(n, k, n0, grid.p1,
+                                       grid.p2).time(machine)
+    t_rec = cm.rec_trsm_cost(n, k, grid.p).time(machine)
+    method = "inv" if t_inv <= t_rec else "rec"
+    return method, n0, {"inv": t_inv, "rec": t_rec}

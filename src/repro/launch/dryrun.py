@@ -8,6 +8,13 @@ the collective schedule for the roofline table.
     PYTHONPATH=src python -m repro.launch.dryrun \
         --arch qwen3-1.7b --shape train_4k --mesh single,multi
 
+Also the SolveSpec plan smoke (--spec): print the a-priori resolved
+plan (method, grid, n0, inversion subgrid, modeled times) for solve
+problems — by default one per paper regime — touching no devices:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --spec
+    PYTHONPATH=src python -m repro.launch.dryrun --spec 16384,512,256
+
 The XLA_FLAGS line above MUST run before any other import (jax locks
 the device count on first init); that is why it is the first statement
 of this file and why this flag is never set globally.
@@ -149,6 +156,30 @@ def build_decode(cfg, sh, mesh, arch, kv_dtype=jnp.bfloat16):
     return fn, tuple(args), {}
 
 
+# -------------------------- SolveSpec smoke --------------------------
+
+# one (n, k, p) per paper regime (Sec. VIII): tall solve (2d), the
+# general 3d case, and the many-RHS 1d case
+SPEC_REGIMES = [(16384, 128, 64), (16384, 512, 256), (256, 65536, 64)]
+
+
+def run_spec_smoke(triples) -> int:
+    """Resolve and print the a-priori plan (SolveSpec.auto) for each
+    (n, k, p) — pure cost-model arithmetic, no devices touched."""
+    from repro.core import cost_model as cm, tuning
+    from repro.core.solver import SolveSpec
+    for (n, k, p) in triples:
+        spec = SolveSpec.auto(n, k, p=p)
+        method, plan, times = tuning.choose_method(n, k, p)
+        assert method == spec.method, (method, spec.method)
+        print(f"[spec] n={n} k={k} p={p}: regime={tuning.regime(n, k, p)}"
+              f" -> method={spec.method} grid={plan.p1}x{plan.p1}x"
+              f"{plan.p2} n0={spec.n0} r=({plan.r1},{plan.r2}) "
+              f"modeled inv={times['inv']:.3e}s rec={times['rec']:.3e}s "
+              f"(machine: {cm.tpu_v5e().name})")
+    return 0
+
+
 # ------------------------------ runner ------------------------------
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
@@ -231,7 +262,16 @@ def main():
                     help="artifact suffix (perf-iteration runs)")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--spec", nargs="*", default=None, metavar="N,K,P",
+                    help="print the auto-resolved SolveSpec plan for "
+                         "each n,k,p triple (default: one per paper "
+                         "regime) and exit")
     args = ap.parse_args()
+
+    if args.spec is not None:
+        triples = [tuple(int(x) for x in s.split(","))
+                   for s in args.spec] or SPEC_REGIMES
+        return run_spec_smoke(triples)
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
     shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")

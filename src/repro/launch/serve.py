@@ -10,7 +10,7 @@ TRSM solve serving against a device-resident factor.
     # (bf16_refine = MXU-native sweep + on-device refinement to fp32)
     PYTHONPATH=src python -m repro.launch.serve --workload trsm \
         --n 256 --panel-k 16 --requests 64 [--p1 2 --p2 2] \
-        [--precision fp32|bf16|bf16_refine|fp64_refine]
+        [--precision fp32|bf16|bf16_refine|fp64_refine] [--cache-stats]
 
     # multi-factor batched serving: M resident factors (a FactorBank),
     # per-factor request queues, every wave = ONE dispatch covering all
@@ -35,8 +35,17 @@ from repro.models import lm
 from repro.train import serve_step as ss
 
 
+def _print_cache_stats():
+    from repro import api
+    st = api.default_cache().stats()
+    print(f"compiled-solver cache: size={st['size']} hits={st['hits']} "
+          f"misses={st['misses']} evictions={st['evictions']} "
+          f"hit_rate={st['hit_rate']:.3f}")
+
+
 def serve_trsm(args):
     """Serve TRSM solve requests against a device-resident factor."""
+    from repro import api
     if args.precision == "fp64_refine":
         jax.config.update("jax_enable_x64", True)
     rng = np.random.default_rng(0)
@@ -44,31 +53,35 @@ def serve_trsm(args):
     L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
     if args.precision != "fp64_refine":
         L = L.astype(np.float32)
-    server = ss.make_trsm_server(L, p1=args.p1, p2=args.p2,
-                                 panel_k=args.panel_k,
-                                 method=args.method, n0=args.n0,
-                                 precision=args.precision)
+    grid = api.make_trsm_mesh(args.p1, args.p2)
+    solver = api.Solver.from_factor(L, grid, method=args.method,
+                                    n0=args.n0, precision=args.precision,
+                                    k_hint=args.panel_k)
+    server = api.SolveServer(solver, args.panel_k).warmup()
     widths = rng.integers(1, args.panel_k + 1, args.requests)
     t0 = time.time()
     for w in widths:
         server.submit(jnp.asarray(rng.standard_normal((n, int(w)))))
-    outs = server.drain()
+    outs = server.drain()[0]
     if outs:
         jax.block_until_ready(outs[-1])
     dt = time.time() - t0
     panels = server.panels_solved
-    policy = server.session.policy
+    policy = solver.policy
     print(f"served {server.requests_served} solve requests "
           f"({int(widths.sum())} columns) in {panels} panels, "
           f"{dt:.3f}s ({dt / max(panels, 1) * 1e3:.2f} ms/panel) "
           f"on grid p1={args.p1} p2={args.p2} n={n} "
-          f"method={server.session.method} precision={policy.name} "
+          f"method={solver.method} precision={policy.name} "
           f"(sweep {policy.compute}, serve {policy.io_dtype.name}, "
           f"{policy.refine_steps} refine passes)")
+    if args.cache_stats:
+        _print_cache_stats()
 
 
 def serve_trsm_bank(args):
     """Serve solve requests against a bank of M resident factors."""
+    from repro import api
     if args.precision == "fp64_refine":
         jax.config.update("jax_enable_x64", True)
     rng = np.random.default_rng(0)
@@ -77,27 +90,31 @@ def serve_trsm_bank(args):
                    for _ in range(M)])
     if args.precision != "fp64_refine":
         Ls = Ls.astype(np.float32)
-    server = ss.make_trsm_bank_server(
-        Ls, p1=args.p1, p2=args.p2, panel_k=args.panel_k,
-        method=args.method, n0=args.n0, precision=args.precision,
-        map_mode=args.map_mode)
+    grid = api.make_trsm_mesh(args.p1, args.p2)
+    solver = api.Solver.from_factors(Ls, grid, method=args.method,
+                                     n0=args.n0,
+                                     precision=args.precision,
+                                     map_mode=args.map_mode)
+    server = api.SolveServer(solver, args.panel_k).warmup()
     widths = rng.integers(1, args.panel_k + 1, args.requests)
     t0 = time.time()
     for i, w in enumerate(widths):
-        server.submit(int(i % M), rng.standard_normal((n, int(w))))
+        server.submit(rng.standard_normal((n, int(w))), int(i % M))
     outs = server.drain()
     jax.block_until_ready([x for xs in outs.values() for x in xs])
     dt = time.time() - t0
     waves = server.waves_solved
-    policy = server.session.policy
+    policy = solver.policy
     print(f"served {server.requests_served} solve requests "
           f"({int(widths.sum())} columns) against {M} factors in "
           f"{waves} waves (one dispatch per wave, {M} solves each), "
           f"{dt:.3f}s ({dt / max(waves, 1) * 1e3:.2f} ms/wave, "
           f"{dt / max(waves * M, 1) * 1e3:.3f} ms/solve) on grid "
           f"p1={args.p1} p2={args.p2} n={n} "
-          f"map_mode={server.session.bank.map_mode} "
+          f"map_mode={solver.bank.map_mode} "
           f"precision={policy.name} ({policy.refine_steps} refine passes)")
+    if args.cache_stats:
+        _print_cache_stats()
 
 
 def main():
@@ -129,6 +146,9 @@ def main():
                     choices=["fp32", "bf16", "bf16_refine", "fp64_refine"],
                     help="mixed-precision policy for the trsm workload "
                          "(default: uniform at the factor dtype)")
+    ap.add_argument("--cache-stats", action="store_true",
+                    help="print compiled-solver cache stats (hits/misses"
+                         "/evictions/hit rate) after the drain")
     args = ap.parse_args()
 
     if args.workload == "trsm":

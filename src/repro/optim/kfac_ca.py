@@ -139,11 +139,12 @@ def factor_banks_from_state(state, *, damping: float = 1e-3,
     width instead of 2 x #layers session solves.
 
     Returns ``(banks, manifest)``: ``banks`` maps dimension d to a
-    FactorBank of all d x d factors, ``manifest`` maps d to the
-    parallel list of ``(param_path, side, unit)`` tags (side "A" =
-    output/Gram side, "B" = input side; unit indexes stacked 3D
-    parameters, None for 2D) — ``manifest[d][i]`` names the factor at
-    bank index i.
+    FactorBank of all d x d factors — serve one with
+    ``repro.api.Solver.from_bank(banks[d])`` (one dispatch per wave
+    across the layer group) — and ``manifest`` maps d to the parallel
+    list of ``(param_path, side, unit)`` tags (side "A" = output/Gram
+    side, "B" = input side; unit indexes stacked 3D parameters, None
+    for 2D) — ``manifest[d][i]`` names the factor at bank index i.
     """
     from repro.core import FactorBank
     from repro.core.grid import make_trsm_mesh

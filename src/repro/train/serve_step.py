@@ -9,9 +9,6 @@ one code path, no cache-format skew between prefill and decode.
 
 from __future__ import annotations
 
-import collections
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -69,195 +66,77 @@ def _sz(mesh, axes):
 
 
 # ------------------- TRSM solve serving (paper workload) -------------------
+#
+# The unified front-end lives in repro.core.solver (SolveServer, one
+# class for any bank width; re-exported as repro.api).  The classes
+# below are DEPRECATED shims kept for source compatibility — each
+# emits one DeprecationWarning and delegates to the Solver/SolveServer
+# path (bit-identical results; see the README migration table).
 
-def _pack_wave(queue: collections.deque, panel_k: int) -> list:
-    """First-fit pack one panel's worth of requests off the queue.
+from repro.core import solver as solverlib
 
-    Walks the whole queue in FIFO order and takes EVERY request that
-    still fits in the remaining panel width (not just a contiguous
-    head-of-line prefix): a wide request at the head no longer strands
-    narrow requests behind it in an underfilled panel.  Skipped
-    requests keep their relative order for the next wave.  Returns the
-    packed [(seq, b), ...]; the queue keeps the rest."""
-    wave: list = []
-    width = 0
-    leftover: collections.deque = collections.deque()
-    while queue:
-        seq, b = queue.popleft()
-        if width + b.shape[1] <= panel_k:
-            wave.append((seq, b))
-            width += b.shape[1]
-        else:
-            leftover.append((seq, b))
-    queue.extend(leftover)
-    return wave
+_pack_wave = solverlib._pack_wave          # compat alias
 
 
-class TrsmRequestServer:
-    """Continuous-batching front-end for a :class:`repro.core.TrsmSession`.
+class TrsmRequestServer(solverlib.SolveServer):
+    """DEPRECATED single-factor request server — a thin shim over
+    :class:`repro.core.solver.SolveServer` at bank width 1.  New code:
 
-    Incoming solve requests (right-hand-side column blocks of varying
-    width) are packed into fixed-width (n, panel_k) panels so every
-    request is served by the SAME compiled program — one executable,
-    zero retraces, zero host transfers in the steady state (the
-    device-resident analogue of fixed-batch token serving above).
-    Panels are packed FIRST-FIT over the queue (a wide head-of-line
-    request cannot strand narrow ones into underfilled panels), and
-    ``drain`` returns solutions in submit order regardless of packing
-    order.  The last panel of a drain is zero-padded; solves of zero
-    columns are zero, so padding never contaminates results.
+        server = repro.api.SolveServer(solver, panel_k)
     """
 
     def __init__(self, session, panel_k: int):
+        solverlib._warn_deprecated("TrsmRequestServer",
+                                   "repro.api.SolveServer")
+        super().__init__(session._solver, panel_k)
         self.session = session
-        self.panel_k = panel_k
-        self._queue: collections.deque = collections.deque()
-        self._seq = 0
-        self.requests_served = 0
-        self.panels_solved = 0
 
     def submit(self, b) -> None:
         """Enqueue one RHS block: (n,) vector or (n, j) columns."""
-        b = jnp.asarray(b, self.session.dtype)
-        if b.ndim == 1:
-            b = b[:, None]
-        if b.ndim != 2 or b.shape[0] != self.session.n:
-            raise ValueError(f"rhs must be ({self.session.n}, j), "
-                             f"got {b.shape}")
-        if b.shape[1] > self.panel_k:
-            raise ValueError(f"request wider than panel: {b.shape[1]} > "
-                             f"{self.panel_k}")
-        self._queue.append((self._seq, b))
-        self._seq += 1
-
-    def pending(self) -> int:
-        return len(self._queue)
-
-    def warmup(self):
-        self.session.warmup(self.panel_k)
-        return self
+        super().submit(b, factor=0)
 
     def drain(self) -> list:
-        """Serve all queued requests; returns solutions in submit order."""
-        results: dict[int, object] = {}
-        while self._queue:
-            wave = _pack_wave(self._queue, self.panel_k)
-            width = sum(b.shape[1] for _, b in wave)
-            panel = jnp.concatenate([b for _, b in wave], axis=1)
-            if width < self.panel_k:
-                panel = jnp.pad(panel,
-                                ((0, 0), (0, self.panel_k - width)))
-            X = self.session.solve(panel)
-            self.panels_solved += 1
-            off = 0
-            for seq, b in wave:
-                results[seq] = X[:, off:off + b.shape[1]]
-                off += b.shape[1]
-            self.requests_served += len(wave)
-        return [results[s] for s in sorted(results)]
+        """Serve all queued requests; returns solutions in submit
+        order."""
+        return super().drain()[0]
 
 
-class BankedTrsmServer:
-    """Continuous-batching front-end for a multi-factor
-    :class:`repro.core.BatchedTrsmSession` (DESIGN.md Sec. 9).
-
-    Per-factor request queues, ONE packed drain: each wave first-fit
-    packs every factor's queue into that factor's (n, panel_k) panel
-    slot of an (M, n, panel_k) stack and solves the whole stack in one
-    dispatch — M factors' traffic, one executable, one launch per wave.
-    Factors with an empty queue ride along as zero panels (a solve of
-    zeros is zeros, so idle factors never contaminate results and the
-    program shape never changes).
-    """
+class BankedTrsmServer(solverlib.SolveServer):
+    """DEPRECATED multi-factor request server — a thin shim over
+    :class:`repro.core.solver.SolveServer` (which serves any bank
+    width with per-factor queues and one dispatch per wave)."""
 
     def __init__(self, session, panel_k: int):
+        solverlib._warn_deprecated("BankedTrsmServer",
+                                   "repro.api.SolveServer")
+        super().__init__(session._solver, panel_k)
         self.session = session
-        self.panel_k = panel_k
-        # lazily keyed by factor index, validated against the bank's
-        # CURRENT width — factors admitted after server construction
-        # are servable immediately (the next wave's program is simply
-        # keyed on the new width)
-        self._queues: dict[int, collections.deque] = {}
-        self._seq = 0
-        self.requests_served = 0
-        self.waves_solved = 0
 
     def submit(self, factor: int, b) -> None:
-        """Enqueue one RHS block for bank factor ``factor``."""
-        if not 0 <= factor < self.session.bank.size:
-            raise ValueError(f"unknown factor {factor}; bank holds "
-                             f"{self.session.bank.size}")
-        b = jnp.asarray(b, self.session.dtype)
-        if b.ndim == 1:
-            b = b[:, None]
-        if b.ndim != 2 or b.shape[0] != self.session.n:
-            raise ValueError(f"rhs must be ({self.session.n}, j), "
-                             f"got {b.shape}")
-        if b.shape[1] > self.panel_k:
-            raise ValueError(f"request wider than panel: {b.shape[1]} > "
-                             f"{self.panel_k}")
-        self._queues.setdefault(factor, collections.deque())
-        self._queues[factor].append((self._seq, b))
-        self._seq += 1
-
-    def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
-
-    def warmup(self):
-        self.session.warmup(self.panel_k)
-        return self
-
-    def drain(self) -> dict:
-        """Serve all queued requests for all factors.  Returns
-        {factor: [X, ...]} for every CURRENT bank factor (empty list if
-        none were queued), each factor's solutions in its own submit
-        order."""
-        n, pk = self.session.n, self.panel_k
-        M = self.session.bank.size
-        results: dict[int, dict] = {f: {} for f in range(M)}
-        while self.pending():
-            waves = {f: _pack_wave(q, pk)
-                     for f, q in self._queues.items() if q}
-            panels = []
-            for f in range(M):
-                wave = waves.get(f, [])
-                if wave:
-                    panel = jnp.concatenate([b for _, b in wave], axis=1)
-                    w = panel.shape[1]
-                    if w < pk:
-                        panel = jnp.pad(panel, ((0, 0), (0, pk - w)))
-                else:
-                    panel = jnp.zeros((n, pk), self.session.dtype)
-                panels.append(panel)
-            X = self.session.solve(jnp.stack(panels))
-            self.waves_solved += 1
-            for f, wave in waves.items():
-                off = 0
-                for seq, b in wave:
-                    results[f][seq] = X[f, :, off:off + b.shape[1]]
-                    off += b.shape[1]
-                self.requests_served += len(wave)
-        return {f: [res[s] for s in sorted(res)]
-                for f, res in results.items()}
+        """Enqueue one RHS block for bank factor ``factor`` (note the
+        legacy (factor, b) argument order)."""
+        super().submit(b, factor=factor)
 
 
 def make_trsm_server(L, *, p1: int = 1, p2: int = 1, panel_k: int = 16,
                      method: str = "inv", n0: int | None = None,
                      lower: bool = True, transpose: bool = False,
                      precision=None):
-    """Build a warmed TrsmRequestServer on a fresh (p1, p1, p2) grid.
+    """DEPRECATED: build a warmed single-factor request server on a
+    fresh (p1, p1, p2) grid.  New code:
 
-    ``precision`` is forwarded to :class:`TrsmSession` — a preset name
-    ("fp32", "bf16", "bf16_refine", "fp64_refine") or a
-    PrecisionPolicy; per-workload, so one process can serve e.g. a
-    bf16_refine panel stream and an fp32 panel stream side by side
-    (distinct compiled programs, same cache)."""
+        solver = repro.api.Solver.from_factor(L, grid, ...)
+        server = repro.api.SolveServer(solver, panel_k).warmup()
+    """
     from repro.core import TrsmSession
     from repro.core.grid import make_trsm_mesh
-    grid = make_trsm_mesh(p1, p2)
-    sess = TrsmSession(L, grid, method=method, n0=n0, lower=lower,
-                       transpose=transpose, precision=precision)
-    return TrsmRequestServer(sess, panel_k).warmup()
+    solverlib._warn_deprecated("make_trsm_server",
+                               "repro.api.SolveServer")
+    with solverlib._shim_quiet():
+        grid = make_trsm_mesh(p1, p2)
+        sess = TrsmSession(L, grid, method=method, n0=n0, lower=lower,
+                           transpose=transpose, precision=precision)
+        return TrsmRequestServer(sess, panel_k).warmup()
 
 
 def make_trsm_bank_server(Ls, *, p1: int = 1, p2: int = 1,
@@ -265,24 +144,28 @@ def make_trsm_bank_server(Ls, *, p1: int = 1, p2: int = 1,
                           n0: int | None = None, lower: bool = True,
                           transpose: bool = False, precision=None,
                           map_mode: str = "vmap"):
-    """Build a warmed BankedTrsmServer over a stack of factors.
+    """DEPRECATED: build a warmed banked request server over an
+    (M, n, n) natural-layout stack.  New code:
 
-    ``Ls`` is an (M, n, n) natural-layout stack (or a list of (n, n)
-    factors); it is distributed into a
-    :class:`repro.core.FactorBank` by ONE stacked gather and served by
-    one batched compiled program per RHS width.  All
-    :func:`make_trsm_server` options apply bank-wide."""
+        solver = repro.api.Solver.from_factors(Ls, grid, ...)
+        server = repro.api.SolveServer(solver, panel_k).warmup()
+    """
     import numpy as np
     from repro.core import BatchedTrsmSession, FactorBank
     from repro.core.grid import make_trsm_mesh
-    Ls = np.asarray(Ls)
-    grid = make_trsm_mesh(p1, p2)
-    bank = FactorBank(grid, Ls.shape[-1], method=method, n0=n0,
-                      lower=lower, transpose=transpose,
-                      dtype=None if precision is not None else Ls.dtype,
-                      precision=precision, map_mode=map_mode)
-    bank.admit_stack(Ls)
-    return BankedTrsmServer(BatchedTrsmSession(bank), panel_k).warmup()
+    solverlib._warn_deprecated("make_trsm_bank_server",
+                               "repro.api.SolveServer")
+    with solverlib._shim_quiet():
+        Ls = np.asarray(Ls)
+        grid = make_trsm_mesh(p1, p2)
+        bank = FactorBank(grid, Ls.shape[-1], method=method, n0=n0,
+                          lower=lower, transpose=transpose,
+                          dtype=None if precision is not None
+                          else Ls.dtype,
+                          precision=precision, map_mode=map_mode)
+        bank.admit_stack(Ls)
+        return BankedTrsmServer(BatchedTrsmSession(bank),
+                                panel_k).warmup()
 
 
 def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int,

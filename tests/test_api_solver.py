@@ -1,0 +1,285 @@
+"""The unified front door (repro.api / repro.core.solver): SolveSpec
+as the sole compiled-program cache key, the Solver steady state at bank
+widths 1 and 16 for every precision preset, spec-driven servers, and
+cache eviction/recompile behavior (DESIGN.md Sec. 10)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import session, tuning
+from repro.core.solver import SolveSpec
+
+PRESET_CASES = [
+    (None, np.float64, 1e-10),          # legacy uniform-dtype policy
+    ("fp32", np.float32, 1e-5),
+    ("bf16", np.float32, 5e-2),
+    ("bf16_refine", np.float32, 1e-5),
+    ("fp64_refine", np.float64, 1e-11),
+]
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return api.make_trsm_mesh(1, 1)
+
+
+def _factors(M, n, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    Ls = np.stack([np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+                   for _ in range(M)])
+    return Ls.astype(dtype), rng
+
+
+def _check(Ls, X, B, tol):
+    X = np.asarray(X, np.float64)
+    for i in range(Ls.shape[0]):
+        rel = (np.linalg.norm(Ls[i].astype(np.float64) @ X[i] - B[i])
+               / np.linalg.norm(B[i]))
+        assert rel < tol, (i, rel)
+
+
+# ------------------------- SolveSpec semantics -------------------------
+
+def test_spec_is_the_sole_cache_key_type(grid):
+    cache = session.CompiledSolverCache()
+    with pytest.raises(TypeError, match="SolveSpec"):
+        cache.get((32, 4, 8), lambda: None)
+    solver = api.Solver.from_factor(np.eye(32, dtype=np.float32), grid,
+                                    n0=8, cache=cache)
+    prog = solver.program_for(4)
+    assert isinstance(prog.key, SolveSpec)
+    assert prog.key == solver.spec_for(4)
+    assert prog.key in cache
+
+
+def test_spec_normalizes_and_validates():
+    g = api.plan_grid(2, 2)
+    pol = api.PRESETS["fp32"]
+    s = SolveSpec(n=64, k=8, grid=g, policy=pol, n0=16,
+                  map_mode="scan")                 # unbanked: map_mode
+    assert s.map_mode is None                      # normalized away
+    assert SolveSpec(n=64, k=8, grid=g, policy=pol, n0=16,
+                     bank_width=4).map_mode == "vmap"
+    with pytest.raises(ValueError, match="method"):
+        SolveSpec(n=64, k=8, grid=g, policy=pol, method="auto")
+    with pytest.raises(ValueError, match="bank width"):
+        SolveSpec(n=64, k=8, grid=g, policy=pol, bank_width=0)
+    with pytest.raises(ValueError, match="map_mode"):
+        SolveSpec(n=64, k=8, grid=g, policy=pol, bank_width=2,
+                  map_mode="pmap")
+    with pytest.raises(ValueError, match="tile"):
+        SolveSpec(n=64, k=8, grid=g, policy=pol, n0=48).validate()
+    with pytest.raises(ValueError, match="cyclic layout"):
+        SolveSpec(n=64, k=8, grid=g, policy=pol, n0=2).validate()
+
+
+def test_spec_auto_consumes_plan_verbatim():
+    n, k, p = 1 << 14, 1 << 9, 256
+    method, plan, _ = tuning.choose_method(n, k, p)
+    spec = SolveSpec.auto(n, k, p=p)
+    assert plan.method == method
+    assert spec.method == method
+    assert (spec.grid.p1, spec.grid.p2) == (plan.p1, plan.p2)
+    if method == "inv":
+        assert spec.n0 == plan.n0                  # verbatim
+    # from_plan: the same plan, frozen directly
+    spec2 = SolveSpec.from_plan(plan)
+    assert (spec2.method, spec2.n0, spec2.grid.p1, spec2.grid.p2) == \
+        (method, plan.n0, plan.p1, plan.p2)
+    with pytest.raises(ValueError, match="does not match"):
+        SolveSpec.from_plan(plan, grid=api.plan_grid(plan.p1 * 2,
+                                                     plan.p2))
+
+
+def test_plan_only_spec_cannot_compile():
+    spec = SolveSpec.auto(64, 8, p=4)
+    assert spec.grid.mesh is None and not spec.is_concrete
+    with pytest.raises(ValueError, match="concrete"):
+        api.solver_for(spec)
+    with pytest.raises(ValueError, match="plan-only"):
+        api.Solver.from_spec(spec, np.eye(64, dtype=np.float32))
+
+
+def test_spec_retarget_plan_at_real_mesh(grid):
+    """The a-priori flow: resolve a plan-only spec, then re-target it
+    at a live mesh and serve through Solver.from_spec."""
+    plan = tuning.tune_for_grid(64, 8, grid)
+    spec = SolveSpec.from_plan(plan, grid=grid, precision="fp32")
+    Ls, rng = _factors(1, 64)
+    solver = api.Solver.from_spec(spec, Ls[0])
+    B = rng.standard_normal((64, 8)).astype(np.float32)
+    X = solver.solve(B)
+    assert X.shape == (64, 8)
+    _check(Ls, np.asarray(X)[None], B[None], 1e-4)
+
+
+# --------------------- the acceptance steady state ---------------------
+
+@pytest.mark.parametrize("width", [1, 16])
+@pytest.mark.parametrize("precision,in_dt,rtol", PRESET_CASES)
+def test_solver_steady_state_widths(grid, width, precision, in_dt, rtol):
+    """Zero transfers / zero retraces at bank widths 1 and 16 for every
+    precision preset — the acceptance bar for the unified Solver."""
+    n, k = 32, 4
+    Ls, rng = _factors(width, n, dtype=in_dt)
+    solver = api.Solver.from_factors(
+        Ls, grid, n0=8, precision=precision,
+        dtype=None if precision else in_dt)
+    assert solver.width == width
+    key = solver.program_for(k).key
+    before = session.TRACE_COUNTS[key]
+    solver.warmup(k)
+    assert session.TRACE_COUNTS[key] == before + 1
+    Bs = [solver.place_rhs(rng.standard_normal((width, n, k)).astype(in_dt))
+          for _ in range(3)]
+    refs = [np.asarray(b) for b in Bs]
+    with jax.transfer_guard("disallow"):
+        outs = [solver.solve(b) for b in Bs]
+    assert session.TRACE_COUNTS[key] == before + 1
+    for b, x in zip(refs, outs):
+        assert x.dtype == solver.dtype
+        _check(Ls, x, b, rtol)
+    assert solver.solves_served == 4 * width
+
+
+def test_width1_solver_serves_2d_rhs_in_kind(grid):
+    L, rng = _factors(1, 64, dtype=np.float64)
+    solver = api.Solver.from_factor(L[0], grid, n0=16).warmup(8)
+    B = rng.standard_normal((64, 8))
+    X = solver.solve(B, donate=False)
+    assert X.shape == (64, 8)
+    np.testing.assert_allclose(L[0] @ np.asarray(X), B, atol=1e-8)
+    # the placed (stack) form round-trips as a stack
+    Bp = solver.place_rhs(rng.standard_normal((64, 8)))
+    assert Bp.shape == (1, 64, 8)
+    assert solver.solve(Bp).shape == (1, 64, 8)
+
+
+def test_solver_rank_validation(grid):
+    Ls, _ = _factors(2, 32, dtype=np.float32)
+    solver = api.Solver.from_factors(Ls, grid, n0=8, dtype=np.float32)
+    with pytest.raises(ValueError, match="rhs stack"):
+        solver.solve(np.zeros((32, 4), np.float32))     # 2D at width 2
+    with pytest.raises(ValueError, match="rhs stack"):
+        solver.solve(np.zeros((3, 32, 4), np.float32))  # width mismatch
+    single = api.Solver.from_factor(Ls[0], grid, n0=8)
+    with pytest.raises(ValueError, match="rhs must be"):
+        single.solve(np.zeros((16, 4), np.float32))
+    with pytest.raises(ValueError, match="factor must be square"):
+        api.Solver.from_factor(np.zeros((8, 4), np.float32), grid)
+    with pytest.raises(ValueError, match="factor stack"):
+        api.Solver.from_factors(np.zeros((8, 4), np.float32), grid)
+
+
+def test_solver_auto_method_resolves_at_construction(grid):
+    L, rng = _factors(1, 64, dtype=np.float32)
+    solver = api.Solver.from_factor(L[0], grid, method="auto", k_hint=8)
+    assert solver.method in ("inv", "rec")
+    B = rng.standard_normal((64, 8)).astype(np.float32)
+    X = solver.solve(B)
+    _check(L, np.asarray(X)[None], B[None], 1e-4)
+
+
+# ------------------------ eviction / recompile ------------------------
+
+def test_evicted_program_recompiles_to_steady_state(grid):
+    """A program evicted from the LRU must rebuild cleanly AND return
+    to the zero-transfer zero-retrace steady state after re-warmup."""
+    cache = session.CompiledSolverCache(maxsize=1)
+    Ls, rng = _factors(1, 32, dtype=np.float64)
+    solver = api.Solver.from_factor(Ls[0], grid, n0=8, cache=cache)
+    solver.warmup(4)
+    key4 = solver.program_for(4).key
+    solver.warmup(2)                    # evicts the k=4 program
+    st = cache.stats()
+    assert st["evictions"] >= 1 and len(cache) == 1
+    assert key4 not in cache
+    traces = session.TRACE_COUNTS[key4]
+    solver.warmup(4)                    # recompile after evict
+    assert session.TRACE_COUNTS[key4] == traces + 1
+    Bs = [solver.place_rhs(rng.standard_normal((32, 4)))
+          for _ in range(2)]
+    refs = [np.asarray(b) for b in Bs]
+    with jax.transfer_guard("disallow"):
+        outs = [solver.solve(b) for b in Bs]
+    assert session.TRACE_COUNTS[key4] == traces + 1
+    for b, x in zip(refs, outs):
+        _check(Ls, x, b, 1e-10)
+
+
+# ----------------------------- SolveServer -----------------------------
+
+def test_solve_server_from_spec_and_mixed_widths(grid):
+    Ls, rng = _factors(3, 64)
+    spec = SolveSpec.auto(64, 4, grid=grid, method="inv",
+                          precision="fp32", bank_width=3)
+    server = api.SolveServer.from_spec(spec, Ls, panel_k=4)
+    subs = {f: [] for f in range(3)}
+    for i in range(8):
+        f = i % 3
+        r = rng.standard_normal(
+            (64, int(rng.integers(1, 5)))).astype(np.float32)
+        subs[f].append(r)
+        server.submit(r, factor=f)
+    outs = server.drain()
+    assert server.pending() == 0
+    for f in range(3):
+        assert [o.shape[1] for o in outs[f]] == \
+            [r.shape[1] for r in subs[f]]
+        for r, x in zip(subs[f], outs[f]):
+            rel = (np.linalg.norm(Ls[f] @ np.asarray(x, np.float64) - r)
+                   / np.linalg.norm(r))
+            assert rel < 1e-4, (f, rel)
+    with pytest.raises(ValueError, match="unknown factor"):
+        server.submit(np.zeros((64, 1), np.float32), factor=3)
+    with pytest.raises(ValueError, match="wider than panel"):
+        server.submit(np.zeros((64, 5), np.float32))
+
+
+def test_solve_server_width1_defaults_to_factor_zero(grid):
+    L, rng = _factors(1, 64)
+    solver = api.Solver.from_factor(L[0], grid, n0=16)
+    server = api.SolveServer(solver, panel_k=4).warmup()
+    reqs = [rng.standard_normal((64, w)).astype(np.float32)
+            for w in (3, 4, 1)]
+    for r in reqs:
+        server.submit(r)
+    outs = server.drain()[0]
+    assert server.panels_solved == 2          # first-fit: [3+1], [4]
+    assert [o.shape[1] for o in outs] == [3, 4, 1]
+    for r, x in zip(reqs, outs):
+        np.testing.assert_allclose(L[0] @ np.asarray(x, np.float64), r,
+                                   atol=1e-3)
+
+
+def test_same_spec_shares_program_across_solvers(grid):
+    """Two solvers with equal specs (different factor VALUES) share one
+    compiled program — the spec is the whole key, factors are runtime
+    operands."""
+    cache = session.CompiledSolverCache()
+    La, rng = _factors(2, 32, seed=1, dtype=np.float64)
+    Lb, _ = _factors(2, 32, seed=2, dtype=np.float64)
+    s1 = api.Solver.from_factors(La, grid, n0=8, cache=cache)
+    s2 = api.Solver.from_factors(Lb, grid, n0=8, cache=cache)
+    assert s1.spec_for(4) == s2.spec_for(4)
+    B = rng.standard_normal((2, 32, 4))
+    Xa = s1.solve(s1.place_rhs(B))
+    Xb = s2.solve(s2.place_rhs(B))
+    assert cache.stats()["misses"] == 1 and cache.stats()["hits"] >= 1
+    _check(La, Xa, B, 1e-10)
+    _check(Lb, Xb, B, 1e-10)
+    assert not np.allclose(np.asarray(Xa), np.asarray(Xb))
+    # replacing any spec field re-keys: a different width is a miss
+    assert dataclasses.replace(s1.spec_for(4), bank_width=1) != \
+        s1.spec_for(4)

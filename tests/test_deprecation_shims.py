@@ -1,0 +1,180 @@
+"""The deprecated serving API (TrsmSession / BatchedTrsmSession /
+TrsmRequestServer / BankedTrsmServer / make_trsm_server /
+make_trsm_bank_server) stays source-compatible as thin shims: each
+constructor emits exactly ONE DeprecationWarning (no cascade from
+nested shims) and produces BIT-IDENTICAL results to the unified
+Solver/SolveServer path, for every precision preset."""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api, core
+from repro.core.bank import BatchedTrsmSession, FactorBank
+from repro.train import serve_step as ss
+
+PRESETS = [None, "fp32", "bf16", "bf16_refine", "fp64_refine"]
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return api.make_trsm_mesh(1, 1)
+
+
+def _mats(n=32, k=4, M=2, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    Ls = np.stack([np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+                   for _ in range(M)]).astype(dtype)
+    B = rng.standard_normal((n, k)).astype(dtype)
+    return Ls, B
+
+
+def _one_deprecation(record) -> None:
+    deps = [w for w in record if issubclass(w.category,
+                                            DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in deps]
+
+
+# --------------------------- warning counts ---------------------------
+
+def test_trsm_session_warns_exactly_once(grid):
+    Ls, _ = _mats()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        core.TrsmSession(Ls[0], grid, n0=8)
+    _one_deprecation(rec)
+
+
+def test_batched_session_warns_exactly_once(grid):
+    Ls, _ = _mats()
+    bank = FactorBank(grid, 32, n0=8, dtype=np.float32)
+    bank.admit_stack(Ls)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        BatchedTrsmSession(bank)
+    _one_deprecation(rec)
+
+
+def test_make_trsm_server_warns_exactly_once():
+    Ls, _ = _mats()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ss.make_trsm_server(Ls[0], panel_k=4, n0=8)
+    _one_deprecation(rec)
+
+
+def test_make_trsm_bank_server_warns_exactly_once():
+    Ls, _ = _mats()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ss.make_trsm_bank_server(Ls, panel_k=4, n0=8)
+    _one_deprecation(rec)
+
+
+def test_request_server_shims_warn_exactly_once(grid):
+    Ls, _ = _mats()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        sess = core.TrsmSession(Ls[0], grid, n0=8)
+        bank = FactorBank(grid, 32, n0=8, dtype=np.float32)
+        bank.admit_stack(Ls)
+        bsess = BatchedTrsmSession(bank)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ss.TrsmRequestServer(sess, panel_k=4)
+    _one_deprecation(rec)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ss.BankedTrsmServer(bsess, panel_k=4)
+    _one_deprecation(rec)
+
+
+# ------------------------ bit-identical results ------------------------
+
+@pytest.mark.parametrize("precision", PRESETS)
+def test_session_shim_bit_identical_to_solver(grid, precision):
+    in_dt = np.float64 if precision in (None, "fp64_refine") \
+        else np.float32
+    Ls, B = _mats(dtype=in_dt)
+    kw = dict(method="inv", n0=8, precision=precision)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sess = core.TrsmSession(Ls[0], grid, **kw)
+    solver = api.Solver.from_factor(Ls[0], grid, **kw)
+    X_shim = np.asarray(sess.solve(B.copy(), donate=False))
+    X_new = np.asarray(solver.solve(B.copy(), donate=False))
+    assert X_shim.dtype == X_new.dtype == solver.dtype
+    np.testing.assert_array_equal(X_shim, X_new)
+
+
+@pytest.mark.parametrize("precision", PRESETS)
+def test_batched_shim_bit_identical_to_solver(grid, precision):
+    in_dt = np.float64 if precision in (None, "fp64_refine") \
+        else np.float32
+    Ls, B = _mats(dtype=in_dt)
+    Bs = np.stack([B, 2 * B])
+    kw = dict(method="inv", n0=8,
+              dtype=None if precision else in_dt, precision=precision)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        bank = FactorBank(grid, 32, **kw)
+        bank.admit_stack(Ls)
+        bsess = BatchedTrsmSession(bank)
+        X_shim = np.asarray(bsess.solve(bsess.place_rhs(Bs),
+                                        donate=False))
+    solver = api.Solver.from_factors(Ls, grid, **kw)
+    X_new = np.asarray(solver.solve(solver.place_rhs(Bs), donate=False))
+    np.testing.assert_array_equal(X_shim, X_new)
+
+
+@pytest.mark.parametrize("precision", PRESETS)
+def test_server_shim_bit_identical_to_solve_server(precision):
+    in_dt = np.float64 if precision in (None, "fp64_refine") \
+        else np.float32
+    Ls, _ = _mats(dtype=in_dt)
+    rng = np.random.default_rng(7)
+    reqs = [rng.standard_normal((32, w)).astype(in_dt)
+            for w in (3, 1, 4, 2)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = ss.make_trsm_server(Ls[0], panel_k=4, n0=8,
+                                  precision=precision)
+    solver = api.Solver.from_factor(
+        Ls[0], api.make_trsm_mesh(1, 1), n0=8,
+        dtype=None if precision else in_dt, precision=precision)
+    new = api.SolveServer(solver, panel_k=4).warmup()
+    for r in reqs:
+        old.submit(r)
+        new.submit(r)
+    outs_old = old.drain()
+    outs_new = new.drain()[0]
+    assert len(outs_old) == len(outs_new) == len(reqs)
+    for a, b in zip(outs_old, outs_new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shim_sessions_expose_legacy_surface(grid):
+    """The attributes PR-1..3 call sites read must survive on the
+    shims (n, dtype, policy, n0, method, solves_served, the resident
+    factor views, program_for keys)."""
+    Ls, B = _mats(dtype=np.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sess = core.TrsmSession(Ls[0], grid, n0=8,
+                                precision="bf16_refine")
+    assert sess.n == 32 and sess.method == "inv" and sess.n0 == 8
+    assert sess.dtype == np.float32 and sess.policy.refines
+    assert sess.factor_cyclic.shape == (32, 32)
+    assert sess.factor_cyclic_residual is not None
+    sess.warmup(4)
+    assert sess.solves_served == 1
+    assert sess.program_for(4).key.bank_width == 1

@@ -98,16 +98,29 @@ def test_trsm_block_citation_resolves():
 
 # --------------------------- the quickstart ---------------------------
 
-def test_readme_quickstart_snippet_executes():
-    """Run the README's TrsmSession example verbatim (it asserts its
-    own residual bound), so the front-door example can never rot."""
+def test_readme_quickstart_snippets_execute():
+    """Run EVERY README ```python block verbatim (each asserts its own
+    correctness bound), so neither the Solver quickstart nor the
+    SolveSpec/SolveServer example can rot."""
     text = _read("README.md")
     blocks = re.findall(r"```python\n(.*?)```", text, re.S)
-    assert blocks, "README.md has no ```python quickstart block"
-    ns: dict = {}
-    exec(compile(blocks[0], "README.md:quickstart", "exec"), ns)
-    # the snippet leaves its session + solution in scope; sanity-check
-    assert ns["X"].shape == (ns["n"], ns["k"])
+    assert len(blocks) >= 2, "README.md lost its quickstart blocks"
+    for i, block in enumerate(blocks):
+        ns: dict = {}
+        exec(compile(block, f"README.md:quickstart[{i}]", "exec"), ns)
+        if i == 0:
+            # the front-door snippet leaves its solution in scope
+            assert ns["X"].shape == (ns["n"], ns["k"])
+
+
+def test_readme_quickstart_uses_new_api():
+    """The executable quickstart must teach repro.api (the unified
+    front door), not the deprecated session spellings."""
+    text = _read("README.md")
+    blocks = re.findall(r"```python\n(.*?)```", text, re.S)
+    joined = "\n".join(blocks)
+    assert "from repro import api" in joined
+    assert "TrsmSession" not in joined
 
 
 def test_tier1_command_documented():

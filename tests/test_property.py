@@ -129,6 +129,35 @@ def test_inv_subgrid_is_feasible(n0, mult, p):
     assert r1 * r1 * r2 <= p, (n, n0, p, r1, r2)
 
 
+@given(n=st.sampled_from([2 ** e for e in range(4, 13)]),
+       k=st.integers(1, 1 << 12), p=st.integers(1, 1024),
+       hoisted=st.booleans())
+@settings(max_examples=120, deadline=None)
+def test_auto_planned_specs_are_feasible(n, k, p, hoisted):
+    """SolveSpec.auto must ALWAYS emit a feasible plan across random
+    (n, k, p): the inversion subgrid fits the machine (r1^2 r2 <= p),
+    n0 tiles the factor (n0 | n), and n0 respects the cyclic layout
+    ((p1*p2) | n0 — every rank owns a contiguous slice of each
+    diagonal block) — whether the plan comes from the fused-solve
+    argmin or the hoisted-serving argmin."""
+    from repro.core.solver import SolveSpec
+    spec = SolveSpec.auto(n, k, p=p, hoisted=hoisted)
+    plan = tuning.tune(n, k, p)
+    assert plan.r1 ** 2 * plan.r2 <= p
+    assert spec.n0 >= 1 and n % spec.n0 == 0
+    g = spec.grid
+    assert g.p1 ** 2 * g.p2 <= p
+    if tuning.feasible_grids(p):
+        # p factors exactly: the plan must use the whole machine
+        assert g.p1 ** 2 * g.p2 == p
+    if spec.method == "inv":
+        assert spec.n0 % (g.p1 * g.p2) == 0
+    spec.validate()                     # must not raise
+    # and the spec is hashable + equal to its reconstruction (it is
+    # the compiled-program cache key)
+    assert hash(spec) == hash(SolveSpec.auto(n, k, p=p, hoisted=hoisted))
+
+
 @given(n=pow2, p=pow2, reverse=st.booleans(), k=st.sampled_from([1, 3, 8]))
 @settings(max_examples=40, deadline=None)
 def test_device_cyclic_rows_matches_numpy(n, p, reverse, k):
