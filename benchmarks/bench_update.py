@@ -1,0 +1,200 @@
+"""Live bank mutation: in-place replace vs rebuild-and-readmit.
+
+Quantifies the live-mutable FactorBank (DESIGN.md Sec. 11).  The
+workload is the churn pattern the paper's hoisting argument targets —
+a KFAC preconditioner that re-factorizes every step, a tenant whose
+model turns over — where ONE factor of a C-wide resident bank changes
+per update.  Two ways to apply the update:
+
+  rebuild  — the append-only world (PRs 3-4): banks cannot mutate, so
+             every update rebuilds the whole pool — a fresh bank,
+             the full (C, n, n) natural stack re-uploaded from host
+             and re-admitted (stacked gather + stacked phase-1
+             inversion for all C factors), even though C-1 of them
+             did not change.
+  replace  — ``bank.replace(slot, L)``: ONE compiled donated program
+             re-runs the single-factor admission pipeline (gather +
+             dtype casts + hoisted phase 1) and scatters the factor's
+             roles into the preallocated resident stacks in place.
+             The a-priori point: admission work is O(1) factors per
+             update, not O(C), and the compiled solve program (keyed
+             on the capacity C, not the occupancy) never changes.
+
+The run ASSERTS the acceptance bar — in-place replace >= 5x faster
+per update than rebuild-and-readmit at n = 256, C = 16 on one device —
+and the churn steady state: an interleaved churn-and-solve schedule
+(solve, replace, solve, evict + re-admit, solve) under
+``jax.transfer_guard("disallow")`` with TRACE_COUNTS pinned, for EVERY
+precision preset at occupancies 1, C/2, and C.  All occupancies share
+ONE compiled solve program and ONE compiled updater per preset.
+
+Each run also appends a trajectory point to the committed
+``benchmarks/BENCH_update.json`` (date, per-update latencies, speedup)
+so the update-path cost is tracked across PRs.  Set
+``BENCH_UPDATE_SMOKE=1`` (the weekly CI job does) for a reduced-rep
+run that skips the trajectory write.
+
+Run standalone or via ``python -m benchmarks.run update``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+C, N, K = 16, 256, 16
+PRESETS = ["fp32", "bf16", "bf16_refine", "fp64_refine"]
+SMOKE = bool(int(os.environ.get("BENCH_UPDATE_SMOKE", "0")))
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "BENCH_update.json")
+
+
+def _factors(rng, count=C, n=N, dtype=np.float32):
+    return np.stack([
+        np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+        for _ in range(count)]).astype(dtype)
+
+
+def _time_updates(fn, updates, ready, passes=3):
+    """Min-of-passes per-update seconds (timeit hygiene: the minimum is
+    the least noise-contaminated estimate on a busy host)."""
+    import jax
+    best = float("inf")
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        for j in range(updates):
+            fn(j)
+        jax.block_until_ready(ready())
+        best = min(best, (time.perf_counter() - t0) / updates)
+    return best
+
+
+def _bench_replace_vs_rebuild(report):
+    import jax
+    from repro import api
+
+    grid = api.make_trsm_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    Ls = _factors(rng)
+    updates, passes = (4, 2) if SMOKE else (10, 3)
+    fresh = _factors(rng, count=updates)
+
+    # the mutable world: capacity bank, one in-place replace per update
+    bank = api.FactorBank(grid, N, capacity=C, dtype=np.float32)
+    bank.admit_stack(Ls)
+    bank.replace(0, fresh[0])                   # compile the updater
+    t_replace = _time_updates(
+        lambda j: bank.replace(j % C, fresh[j % updates]),
+        updates, lambda: bank.factors_cyclic, passes)
+
+    # the append-only world (PRs 3-4, faithfully: no capacity
+    # machinery): every update rebuilds the pool from host — a fresh
+    # append-only bank, the full stack re-admitted in its fastest form
+    # (ONE stacked gather + ONE stacked phase 1)
+    def rebuild(j):
+        Ls[j % C] = fresh[j % updates]
+        b = api.FactorBank(grid, N, dtype=np.float32)
+        b.admit_stack(Ls)
+        rebuild.bank = b
+    rebuild(0)                                  # settle the programs
+    t_rebuild = _time_updates(
+        rebuild, updates, lambda: rebuild.bank.factors_cyclic, passes)
+
+    speedup = t_rebuild / t_replace
+    report(f"n={N} C={C}: rebuild-and-readmit {t_rebuild * 1e3:7.3f} "
+           f"ms/update | in-place replace {t_replace * 1e3:7.3f} "
+           f"ms/update | {speedup:5.1f}x")
+    assert speedup >= 5.0, (
+        f"acceptance: in-place replace must be >= 5x faster per update "
+        f"than rebuild-and-readmit, got {speedup:.1f}x")
+    return dict(n=N, capacity=C, updates=updates,
+                rebuild_ms_per_update=t_rebuild * 1e3,
+                replace_ms_per_update=t_replace * 1e3, speedup=speedup)
+
+
+def _assert_churn_steady_state(report):
+    """Zero transfers / zero retraces across an interleaved
+    churn-and-solve schedule, every preset, occupancies 1, C/2, C."""
+    import jax
+    from repro import api
+    from repro.core import session
+
+    presets = ["fp32"] if SMOKE else PRESETS
+    x64_was = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)   # fp64_refine needs it
+    try:
+        grid = api.make_trsm_mesh(1, 1)
+        rng = np.random.default_rng(1)
+        rows = {}
+        for preset in presets:
+            dt = np.float64 if preset == "fp64_refine" else np.float32
+            keys = set()
+            for occ in (1, C // 2, C):
+                bank = api.FactorBank(grid, N, capacity=C,
+                                      precision=preset)
+                solver = api.Solver.from_bank(bank).warmup(K)
+                for L in _factors(rng, count=occ, dtype=dt):
+                    bank.admit(L)
+                key, uspec = solver.spec_for(K), bank.update_spec()
+                keys.add((key, uspec))
+                traces = (session.TRACE_COUNTS[key],
+                          session.TRACE_COUNTS[uspec])
+                live = bank.live_slots()
+                placed_L = [bank.place_factor(L) for L in
+                            _factors(rng, count=3, dtype=dt)]
+                placed_B = [solver.place_rhs(
+                    rng.standard_normal((C, N, K)).astype(dt))
+                    for _ in range(3)]
+                with jax.transfer_guard("disallow"):
+                    solver.solve(placed_B[0])
+                    solver.replace_factor(int(live[0]), placed_L[0])
+                    solver.solve(placed_B[1])
+                    solver.evict_factor(int(live[-1]))
+                    readmitted = solver.admit_factor(placed_L[1])
+                    assert readmitted == live[-1], (readmitted, live)
+                    solver.solve(placed_B[2])
+                assert (session.TRACE_COUNTS[key],
+                        session.TRACE_COUNTS[uspec]) == traces, \
+                    (preset, occ, "retraced")
+            # capacity keying: every occupancy shared ONE solve program
+            # and ONE updater
+            assert len(keys) == 1, (preset, len(keys))
+            rows[preset] = "ok"
+            report(f"churn steady state [{preset}]: occupancies "
+                   f"(1, {C // 2}, {C}) share 1 program + 1 updater; "
+                   f"0 transfers, 0 retraces across solve/replace/"
+                   f"evict/re-admit")
+        return rows
+    finally:
+        jax.config.update("jax_enable_x64", x64_was)
+
+
+def _record_trajectory(point):
+    """Append a dated point to the committed trajectory file (the
+    cross-PR record of the update path's cost)."""
+    traj = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            traj = json.load(f).get("trajectory", [])
+    date = time.strftime("%Y-%m-%d")
+    traj = [p for p in traj if p.get("date") != date] + \
+        [dict(date=date, **point)]
+    with open(TRAJECTORY, "w") as f:
+        json.dump({"bench": "update", "trajectory": traj}, f, indent=1)
+        f.write("\n")
+
+
+def run(report):
+    latency = _bench_replace_vs_rebuild(report)
+    steady = _assert_churn_steady_state(report)
+    if not SMOKE:
+        _record_trajectory({k: round(v, 3) if isinstance(v, float) else v
+                            for k, v in latency.items()})
+        report(f"trajectory point appended to {TRAJECTORY}")
+    return dict(latency=latency, steady_state=steady)
+
+
+if __name__ == "__main__":
+    run(print)

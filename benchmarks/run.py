@@ -33,6 +33,8 @@ BENCHES = [
      "benchmarks.bench_serve_latency"),
     ("bank", "multi-factor batched serving (FactorBank)",
      "benchmarks.bench_bank"),
+    ("update", "live bank mutation (in-place replace vs rebuild)",
+     "benchmarks.bench_update"),
 ]
 
 

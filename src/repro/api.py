@@ -39,4 +39,5 @@ from repro.core.precision import (  # noqa: F401
 from repro.core.session import (  # noqa: F401
     CompiledSolverCache, default_cache)
 from repro.core.solver import (  # noqa: F401
-    Solver, SolveServer, SolveSpec, plan_grid, resolve_plan, solver_for)
+    Solver, SolveServer, SolveSpec, UpdateSpec, plan_grid, resolve_plan,
+    solver_for, updater_for)

@@ -30,6 +30,18 @@ this module pools M of them:
   unpermute -> re-permute round trip), closing the paper's
   factor-producer -> TRSM-consumer loop on device.
 
+* **Live mutation** (DESIGN.md Sec. 11) — a bank built with
+  ``capacity=C`` allocates its resident stacks at width C up front and
+  becomes mutable in place: ``replace(slot, L)`` /
+  ``replace_cyclic(slot, L_cyc)`` re-run the single-factor admission
+  pipeline (gather + policy casts + hoisted phase 1) and scatter every
+  factor role into the resident stacks through ONE compiled, donated
+  updater program (cached in the :class:`CompiledSolverCache` under an
+  :class:`~repro.core.solver.UpdateSpec`); ``evict(slot)`` frees a
+  slot and ``admit`` re-uses freed slots.  The compiled solve program
+  is keyed on C, not on occupancy, so churn — replace, evict, re-admit
+  — never retraces and never rebuilds the bank.
+
 * :class:`BatchedTrsmSession` — solves op(L_i) X_i = B_i for ALL i in
   one compiled program: the per-factor body (B-permute -> shard_map
   sweep -> X-unpermute -> unrolled refinement) is mapped over the
@@ -50,6 +62,7 @@ runtime operands, never baked-in constants.
 
 from __future__ import annotations
 
+import bisect
 from typing import Callable
 
 import jax
@@ -81,6 +94,17 @@ class FactorBank:
     name or a PrecisionPolicy; default fp32 uniform).  ``map_mode``
     picks how the batched program maps the factor axis ("vmap" |
     "scan"); it is part of the compiled-program cache key.
+
+    ``capacity=C`` allocates the resident stacks at width C up front
+    (zero-filled slots solve to zeros — they never contaminate live
+    lanes) and makes the bank LIVE-MUTABLE: ``admit`` fills the lowest
+    free slot, ``replace``/``replace_cyclic`` refresh a live slot in
+    place through one compiled donated scatter, and ``evict`` returns
+    a slot to the free list.  The bank's *width* (what the compiled
+    solve program is keyed on) is then C regardless of occupancy, so
+    occupancy changes and per-slot churn never retrace (DESIGN.md
+    Sec. 11).  Without ``capacity`` the bank is the classic append-only
+    pool (width == size grows with each admission).
     """
 
     def __init__(self, grid: TrsmGrid, n: int, *, method: str = "inv",
@@ -88,6 +112,7 @@ class FactorBank:
                  lower: bool = True, transpose: bool = False,
                  machine=None, block_inv: Callable | None = None,
                  dtype=None, precision=None, map_mode: str = "vmap",
+                 capacity: int | None = None,
                  cache: CompiledSolverCache | None = None):
         if precision is None and dtype is None:
             dtype = jnp.float32
@@ -128,25 +153,104 @@ class FactorBank:
         else:
             self.n0 = n0
             self._phase1_mode = None
-        # resident cyclic copies, stored as admitted CHUNKS — tuples of
-        # per-role arrays with a leading chunk axis (an admit_stack's
-        # whole (M, ...) gather output stays one chunk, so the common
-        # admit-stack-then-serve path never re-slices or re-stacks it);
-        # the fused (M_total, ...) views are built lazily and cached
-        # until admission changes the pool.
+        # resident cyclic copies: ``_stacks`` is the fused per-role
+        # tuple of (width, ...) device arrays; ``_chunks`` holds
+        # admitted-but-not-yet-fused chunks (tuples of per-role arrays
+        # with a leading chunk axis).  stacks() fuses PENDING chunks
+        # into the cached fused tuple incrementally — it never
+        # re-concatenates the whole history, and a pool admitted as one
+        # admit_stack IS its gather output.  Capacity-allocated banks
+        # have no chunks at all: admission scatters into the
+        # preallocated stacks through the compiled updater.
         self._chunks: list[tuple] = []
         self._size = 0
         self._stacks: tuple | None = None
+        self._slot_ids: dict[int, object] = {}
+        self._updaters: dict[tuple, object] = {}
+        self.capacity = capacity
+        if capacity is not None:
+            if capacity < 1:
+                raise ValueError(f"capacity must be >= 1, got {capacity}")
+            self._live = [False] * capacity
+            self._gens = [0] * capacity            # bumped per evict
+            self._free = list(range(capacity))     # kept sorted, min-first
+            # device-resident slot indices, pinned ONCE so steady-state
+            # churn (replace/evict/admit) uploads nothing per update
+            self._slot_ids = {i: self._place_slot_id(i)
+                              for i in range(capacity)}
+            self._stacks = self._alloc_stacks()
+        else:
+            self._live = None
+            self._free = None
 
     # ------------------------------ admission ------------------------------
 
     @property
     def size(self) -> int:
-        """M — the number of resident factors."""
+        """M — the number of LIVE resident factors (occupancy)."""
         return self._size
+
+    @property
+    def width(self) -> int:
+        """The resident stack width the compiled programs are keyed on:
+        ``capacity`` for a capacity-allocated bank (occupancy changes
+        never re-key), else the live size (append-only growth)."""
+        return self.capacity if self.capacity is not None else self._size
 
     def __len__(self) -> int:
         return self.size
+
+    def is_live(self, slot: int) -> bool:
+        """Whether ``slot`` currently holds an admitted factor."""
+        if self.capacity is None:
+            return 0 <= slot < self._size
+        return 0 <= slot < self.capacity and self._live[slot]
+
+    def live_slots(self) -> tuple:
+        """The live slot indices, ascending."""
+        if self.capacity is None:
+            return tuple(range(self._size))
+        return tuple(i for i, live in enumerate(self._live) if live)
+
+    def slot_generation(self, slot: int) -> int:
+        """How many times ``slot`` has been TURNED OVER (evicted).  A
+        server records this at submit time so a request can never be
+        served against a factor admitted after its slot was evicted —
+        ``replace`` deliberately does NOT bump it (refreshing a live
+        factor in place is the intended serving semantic).  Append-only
+        banks never turn slots over (always 0)."""
+        return 0 if self.capacity is None else self._gens[slot]
+
+    def _place_slot_id(self, slot: int):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.device_put(jnp.asarray(slot, jnp.int32),
+                              NamedSharding(self.grid.mesh,
+                                            PartitionSpec()))
+
+    def _roles(self) -> list:
+        """(global shape, dtype, shard spec) per resident entry role:
+        L_lo[, Dt][, L_hi]."""
+        pol = self.policy
+        roles = [((self.n, self.n), pol.storage_dtype,
+                  self.grid.spec_L())]
+        if self.method == "inv":
+            from repro.core import inv_trsm
+            roles.append((inv_trsm.dt_shape(self.n, self.n0),
+                          pol.storage_dtype, inv_trsm.SPEC_DT))
+        if pol.refines:
+            roles.append(((self.n, self.n), pol.residual_dtype,
+                          self.grid.spec_L()))
+        return roles
+
+    def _alloc_stacks(self) -> tuple:
+        """Preallocate the (C, ...) resident stacks (zero-filled: a
+        zero factor sweeps to a zero solution, so empty slots are
+        inert lanes, never NaN sources for "inv")."""
+        C = self.capacity
+        return tuple(
+            jax.device_put(jnp.zeros((C,) + shape, dt),
+                           NamedSharding(self.grid.mesh, P(None, *spec)))
+            for shape, dt, spec in self._roles())
 
     def _check_square(self, L, ndim: int) -> None:
         if L.ndim != ndim or L.shape[-2:] != (self.n, self.n):
@@ -173,20 +277,52 @@ class FactorBank:
         """Distribute one natural-layout (n, n) factor into the bank
         (the session's fused gather, operator reductions folded in,
         diagonal blocks pre-inverted); returns the factor's bank
-        index."""
+        slot.  A capacity-allocated bank fills its LOWEST free slot
+        (re-using evicted slots) through the compiled in-place
+        updater; an append-only bank grows by one."""
         L = jnp.asarray(L)
         self._check_square(L, 2)
+        if self.capacity is not None:
+            return self._admit_slot(L, "natural")
         preps = sessionlib._factor_preps(self.grid, self.lower,
                                          self.transpose, self.policy)
         self._append(self._entry(tuple(p(L) for p in preps)))
         return self.size - 1
 
-    def admit_stack(self, Ls) -> range:
-        """Distribute a whole natural-layout (M, n, n) stack in ONE
-        stacked gather program per dtype role (plus one stacked
-        phase-1 inversion); returns the admitted index range."""
+    def admit_stack(self, Ls):
+        """Distribute a whole natural-layout (M, n, n) stack; returns
+        the admitted slots (a range for append-only banks; a list for
+        capacity banks, whose free slots may be non-contiguous).  An
+        append-only bank (and an EMPTY capacity bank filled to exactly
+        C) ingests the stack in ONE stacked gather program per dtype
+        role (plus one stacked phase-1 inversion); a partially-filled
+        capacity bank falls back to per-slot admission through the
+        compiled updater."""
         Ls = jnp.asarray(Ls)
         self._check_square(Ls, 3)
+        M = Ls.shape[0]
+        if self.capacity is not None:
+            if M > len(self._free):
+                raise ValueError(
+                    f"bank full: {M} factors for {len(self._free)} free "
+                    f"slot(s) of capacity {self.capacity} (evict first)")
+            if self._size == 0 and M == self.capacity:
+                # full-width fast path: the stacked gather output IS
+                # the resident stack — no per-slot scatters at all
+                preps = sessionlib._factor_preps(
+                    self.grid, self.lower, self.transpose, self.policy,
+                    stacked=True)
+                entry = self._entry(tuple(p(Ls) for p in preps),
+                                    stacked=True)
+                self._stacks = tuple(
+                    jax.device_put(a, NamedSharding(self.grid.mesh,
+                                                    P(None, *spec)))
+                    for a, spec in zip(entry, self._role_specs()))
+                self._live = [True] * M
+                self._free = []
+                self._size = M
+                return list(range(M))
+            return [self.admit(Ls[j]) for j in range(M)]
         preps = sessionlib._factor_preps(self.grid, self.lower,
                                          self.transpose, self.policy,
                                          stacked=True)
@@ -216,6 +352,8 @@ class FactorBank:
                 "factor cannot carry them)")
         L_cyc = jnp.asarray(L_cyc)
         self._check_square(L_cyc, 2)
+        if self.capacity is not None:
+            return self._admit_slot(L_cyc, "cyclic")
         sharding = NamedSharding(self.grid.mesh, self.grid.spec_L())
         dts = (self.policy.storage_dtype,)
         if self.policy.refines:
@@ -232,7 +370,136 @@ class FactorBank:
     def _append_chunk(self, stacks: tuple, count: int) -> None:
         self._chunks.append(stacks)
         self._size += count
-        self._stacks = None
+
+    # ----------------------- live mutation (Sec. 11) -----------------------
+
+    def _alloc_slot(self) -> int:
+        if not self._free:
+            raise ValueError(
+                f"bank full: all {self.capacity} capacity slots are "
+                f"live (evict one before admitting)")
+        return self._free.pop(0)                  # lowest free slot
+
+    def _admit_slot(self, L, ingest: str) -> int:
+        """Capacity admission: fill the lowest free slot through the
+        compiled updater.  The slot is only committed once the scatter
+        succeeds — a failed build/compile (or an interrupt during the
+        updater's first trace) puts it back on the free list instead of
+        leaking it."""
+        slot = self._alloc_slot()
+        try:
+            self._scatter(slot, L, ingest)
+        except BaseException:
+            bisect.insort(self._free, slot)
+            raise
+        self._live[slot] = True
+        self._size += 1
+        return slot
+
+    def _check_live(self, slot: int) -> None:
+        if not 0 <= slot < self.width:
+            raise ValueError(f"slot {slot} out of range for a "
+                             f"width-{self.width} bank")
+        if not self.is_live(slot):
+            raise ValueError(f"slot {slot} is not live (evicted or "
+                             f"never admitted); use admit to fill it")
+
+    def update_spec(self, ingest: str = "natural"):
+        """The frozen :class:`~repro.core.solver.UpdateSpec` keying
+        this bank's compiled in-place updater (== its
+        CompiledSolverCache / TRACE_COUNTS key)."""
+        from repro.core import solver as solverlib
+        if self.width < 1:
+            raise ValueError("empty bank: admit factors before updating")
+        return solverlib.UpdateSpec(
+            n=self.n, grid=self.grid, policy=self.policy,
+            method=self.method, n0=self.n0, mode=self._phase1_mode,
+            lower=self.lower, transpose=self.transpose,
+            block_inv=self.block_inv, bank_width=self.width,
+            ingest=ingest)
+
+    def _slot_id(self, slot: int):
+        sid = self._slot_ids.get(slot)
+        if sid is None:                  # append-only banks: pin lazily
+            sid = self._slot_ids[slot] = self._place_slot_id(slot)
+        return sid
+
+    def _scatter(self, slot: int, L, ingest: str) -> None:
+        """Run the compiled donated updater: single-factor admission
+        pipeline + scatter of every role into the resident stacks.
+        The program is memoized per (ingest, width) on the bank so the
+        per-update host overhead is one dict probe, not an UpdateSpec
+        construction + cache hash (width is in the key only for
+        append-only banks, whose stacks grow; a capacity bank's width
+        never changes)."""
+        from repro.core import solver as solverlib
+        prog = self._updaters.get((ingest, self.width))
+        if prog is None:
+            prog = solverlib.updater_for(self.update_spec(ingest),
+                                         self.cache)
+            self._updaters[(ingest, self.width)] = prog
+        self._stacks = prog.update(self.stacks(), self._slot_id(slot), L)
+
+    def place_factor(self, L):
+        """Pin a natural-layout replacement factor on device
+        (replicated), so a subsequent :meth:`replace`/:meth:`admit`
+        pays the (unavoidable) ingestion upload HERE and the update
+        itself moves no host data — the factor-side analogue of
+        ``Solver.place_rhs``."""
+        return jax.device_put(jnp.asarray(L),
+                              NamedSharding(self.grid.mesh,
+                                            P(None, None)))
+
+    def replace(self, slot: int, L) -> int:
+        """Refresh live ``slot`` IN PLACE with a new natural-layout
+        (n, n) factor: one compiled program re-runs the admission
+        pipeline for this factor alone (fused distribution gather +
+        policy dtype casts + hoisted phase-1 inversion for "inv") and
+        scatters all factor roles into the resident stacks with the
+        stack buffers donated — zero retraces, zero host round trips,
+        no re-stacking, no occupancy change (DESIGN.md Sec. 11).
+        Returns the slot."""
+        L = L if isinstance(L, jax.Array) else jnp.asarray(L)
+        self._check_square(L, 2)
+        self._check_live(slot)
+        self._scatter(slot, L, "natural")
+        return slot
+
+    def replace_cyclic(self, slot: int, L_cyc) -> int:
+        """:meth:`replace` for a factor ALREADY in cyclic storage (a
+        ``cholesky_cyclic``/``lu_cyclic`` producer output): the updater
+        skips the distribution gather and only applies the policy's
+        dtype casts (plus phase 1).  Same restriction as
+        :meth:`admit_cyclic`: lower=True, transpose=False only."""
+        if not self.lower or self.transpose:
+            raise ValueError(
+                "cyclic ingestion requires lower=True, transpose=False "
+                "(the reversal/transpose reductions are folded into the "
+                "natural-layout distribution gather; a pre-permuted "
+                "factor cannot carry them)")
+        L_cyc = L_cyc if isinstance(L_cyc, jax.Array) \
+            else jnp.asarray(L_cyc)
+        self._check_square(L_cyc, 2)
+        self._check_live(slot)
+        self._scatter(slot, L_cyc, "cyclic")
+        return slot
+
+    def evict(self, slot: int) -> None:
+        """Return live ``slot`` to the free list (capacity banks only:
+        an append-only bank has no slot lifecycle).  The slot's stale
+        device data stays resident but inert — it is never solved
+        against (servers zero its panel) and the next ``admit``
+        overwrites it in place."""
+        if self.capacity is None:
+            raise ValueError(
+                "evict requires a capacity-allocated bank "
+                "(FactorBank(..., capacity=C)); append-only banks have "
+                "no free slots")
+        self._check_live(slot)
+        self._live[slot] = False
+        self._gens[slot] += 1
+        bisect.insort(self._free, int(slot))
+        self._size -= 1
 
     # ------------------------------- storage -------------------------------
 
@@ -247,24 +514,33 @@ class FactorBank:
         return specs
 
     def stacks(self) -> tuple:
-        """The resident stacked arrays — one (M, ...) stack per factor
-        role (sweep factor[, inverted diagonal faces][, residual-dtype
-        factor]), each sharded with a leading unmapped factor axis.
-        Built lazily after admission and cached: the steady state
-        reuses the same device buffers, and a pool admitted as one
-        ``admit_stack`` IS its gather output (no re-slice/re-stack —
-        ``jax.device_put`` onto the sharding it already has is free)."""
-        if not self._chunks:
+        """The resident stacked arrays — one (width, ...) stack per
+        factor role (sweep factor[, inverted diagonal faces][,
+        residual-dtype factor]), each sharded with a leading unmapped
+        factor axis.  Capacity banks return the preallocated stacks
+        (admission/replace scattered into them in place — even an
+        empty capacity bank has servable, zero-filled stacks, so a
+        server can warm up BEFORE any factor exists).  Append-only
+        banks fuse lazily and INCREMENTALLY: pending chunks are
+        concatenated onto the cached fused stack — never a re-concat
+        of the whole admission history per admission — and a pool
+        admitted as one ``admit_stack`` IS its gather output
+        (``jax.device_put`` onto the sharding it already has is
+        free)."""
+        if self._stacks is None and not self._chunks:
             raise ValueError("empty bank: admit factors before solving")
-        if self._stacks is None:
-            fused = self._chunks[0] if len(self._chunks) == 1 else tuple(
-                jnp.concatenate([c[r] for c in self._chunks])
-                for r in range(len(self._chunks[0])))
+        if self._chunks:
+            parts = ([self._stacks] if self._stacks is not None else []) \
+                + self._chunks
+            fused = parts[0] if len(parts) == 1 else tuple(
+                jnp.concatenate([c[r] for c in parts])
+                for r in range(len(parts[0])))
             self._stacks = tuple(
                 jax.device_put(a,
                                NamedSharding(self.grid.mesh,
                                              P(None, *spec)))
                 for a, spec in zip(fused, self._role_specs()))
+            self._chunks = []
         return self._stacks
 
     @property
@@ -337,8 +613,9 @@ class BatchedTrsmSession:
 
     def solve(self, B, *, donate: bool = True):
         """Solve op(L_i) X_i = B_i for all M factors in one dispatch
-        (strictly the (M, n, k) stack form, as before)."""
-        M = self.bank.size
+        (strictly the (M, n, k) stack form, as before; M is the bank
+        WIDTH — capacity for a capacity-allocated bank)."""
+        M = self.bank.width
         if B.ndim != 3 or B.shape[0] != M or B.shape[1] != self.n:
             raise ValueError(f"rhs stack must be ({M}, {self.n}, k), "
                              f"got {B.shape}")

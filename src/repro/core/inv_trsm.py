@@ -219,6 +219,14 @@ def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
 SPEC_DT = P(None, "y", "x")
 
 
+def dt_shape(n: int, n0: int) -> tuple:
+    """Global logical shape of the phase-1 output Dt under
+    :data:`SPEC_DT`: one (n0, n0) inverted face per diagonal block.
+    Used by capacity-allocated factor banks to preallocate the
+    resident Dt stack a replace scatters into (DESIGN.md Sec. 11)."""
+    return (n // n0, n0, n0)
+
+
 def it_inv_phase1_sharded(grid: TrsmGrid, n: int, n0: int,
                           block_inv: Callable | None = None,
                           mode: str | None = None, accum_dtype=None):

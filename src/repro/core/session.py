@@ -119,53 +119,80 @@ class CompiledSolverCache:
     ``get`` rejects non-spec keys.
 
     Thread-safe; eviction drops the jitted callables (XLA frees the
-    executables with them).
+    executables with them).  Builds are single-flight per key: when two
+    threads miss the same spec concurrently, exactly one runs
+    ``build()`` (a trace/compile can take minutes) and the other waits
+    for the finished program — one miss per build, a hit for every
+    waiter, so the counters stay meaningful under contention.
     """
 
     def __init__(self, maxsize: int = 32):
         self.maxsize = maxsize
         self._lock = threading.Lock()
         self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._inflight: dict = {}          # key -> Event of the builder
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def get(self, key, build: Callable):
-        from repro.core.solver import SolveSpec
-        if not isinstance(key, SolveSpec):
+        from repro.core.solver import SolveSpec, UpdateSpec
+        if not isinstance(key, (SolveSpec, UpdateSpec)):
             raise TypeError(
-                f"CompiledSolverCache keys are SolveSpec instances, got "
-                f"{type(key).__name__} (positional-tuple keys were "
-                f"removed; build a spec via repro.api.SolveSpec)")
-        with self._lock:
-            if key in self._entries:
-                self._entries.move_to_end(key)
-                self.hits += 1
-                return self._entries[key]
-            self.misses += 1
-        value = build()          # build outside the lock (tracing is slow)
+                f"CompiledSolverCache keys are SolveSpec (or UpdateSpec)"
+                f" instances, got {type(key).__name__} (positional-tuple"
+                f" keys were removed; build a spec via "
+                f"repro.api.SolveSpec)")
+        while True:
+            with self._lock:
+                if key in self._entries:
+                    self._entries.move_to_end(key)
+                    self.hits += 1
+                    return self._entries[key]
+                event = self._inflight.get(key)
+                if event is None:          # we are the builder
+                    event = threading.Event()
+                    self._inflight[key] = event
+                    self.misses += 1
+                    break
+            # another thread is building this key: wait for it, then
+            # re-check (the entry is there on success; on a failed
+            # build the waiter loops around and becomes the builder)
+            event.wait()
+        try:
+            value = build()      # build outside the lock (tracing is slow)
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(key, None)
+            event.set()
+            raise
         with self._lock:
             self._entries[key] = value
             self._entries.move_to_end(key)
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
                 self.evictions += 1
+            self._inflight.pop(key, None)
+        event.set()
         return value
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def stats(self) -> dict:
         """Observability snapshot: size/hits/misses/evictions plus the
         derived hit rate (surfaced by ``launch.serve --cache-stats``
         and recorded by benchmarks/bench_serve_latency.py)."""
-        total = self.hits + self.misses
-        return dict(size=len(self._entries), hits=self.hits,
-                    misses=self.misses, evictions=self.evictions,
-                    hit_rate=self.hits / total if total else 0.0)
+        with self._lock:
+            total = self.hits + self.misses
+            return dict(size=len(self._entries), hits=self.hits,
+                        misses=self.misses, evictions=self.evictions,
+                        hit_rate=self.hits / total if total else 0.0)
 
     def clear(self) -> None:
         with self._lock:
@@ -392,6 +419,73 @@ def _build_solver(spec) -> SolverProgram:
         solve_donating=jax.jit(program, donate_argnums=(1,), **jit_kw),
         rhs_sharding=rhs_sh,
         method=method, mode=resolved_mode, n0=n0, policy=policy)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdaterProgram:
+    """A compiled in-place bank updater for one
+    :class:`repro.core.solver.UpdateSpec` (DESIGN.md Sec. 11).
+
+    ``update(stacks, slot, L) -> stacks`` is ONE jitted program that
+    re-runs the admission pipeline for a single factor — the fused
+    distribution gather (operator reductions + policy dtype casts
+    folded in; skipped for cyclic ingestion) and, for method "inv",
+    the hoisted phase-1 diagonal-block inversion — and scatters every
+    factor role (L_lo[, Dt][, L_hi]) into the resident (C, ...) stacks
+    at ``slot`` via ``lax.dynamic_update_index_in_dim``.  The stacks
+    argument is DONATED: XLA updates the resident buffers in place, so
+    a replace moves one factor's worth of data, never the bank's.
+
+    ``slot`` must be a device-resident int32 scalar (the bank pins one
+    per slot at capacity allocation) so the steady-state churn path
+    performs zero host->device transfers.
+    """
+    key: object                  # the program's UpdateSpec (cache key)
+    update: Callable
+
+
+def _build_updater(uspec) -> UpdaterProgram:
+    """Build the compiled in-place updater for an
+    :class:`repro.core.solver.UpdateSpec` (which is also its cache key
+    and TRACE_COUNTS key)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    grid, key = uspec.grid, uspec
+    policy = uspec.policy
+    prefactored = uspec.method == "inv"
+    if uspec.ingest == "natural":
+        preps = _factor_preps(grid, uspec.lower, uspec.transpose, policy)
+    if prefactored:
+        ph1 = _build_phase1(grid, uspec.n, uspec.n0, uspec.mode,
+                            policy.accumulate_dtype, uspec.block_inv)
+
+    def roles(L):
+        if uspec.ingest == "natural":
+            parts = tuple(p(L) for p in preps)         # (L_lo[, L_hi])
+        else:                                          # cyclic: cast only
+            dts = (policy.storage_dtype,)
+            if policy.refines:
+                dts += (policy.residual_dtype,)
+            parts = tuple(jnp.asarray(L, dt) for dt in dts)
+        if prefactored:
+            parts = (parts[0], ph1(parts[0])) + parts[1:]
+        return parts
+
+    def update(stacks, slot, L):
+        TRACE_COUNTS[key] += 1
+        return tuple(jax.lax.dynamic_update_index_in_dim(s, r, slot, 0)
+                     for s, r in zip(stacks, roles(L)))
+
+    specs = [grid.spec_L()]
+    if prefactored:
+        from repro.core.inv_trsm import SPEC_DT
+        specs.append(SPEC_DT)
+    if policy.refines:
+        specs.append(grid.spec_L())
+    stack_sh = tuple(NamedSharding(grid.mesh, P(None, *s)) for s in specs)
+    return UpdaterProgram(
+        key=key,
+        update=jax.jit(update, donate_argnums=(0,),
+                       out_shardings=stack_sh))
 
 
 def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",

@@ -294,6 +294,58 @@ class SolveSpec:
                    bank_width=bank_width, map_mode=map_mode).validate()
 
 
+@dataclasses.dataclass(frozen=True)
+class UpdateSpec:
+    """A frozen, hashable description of one in-place bank update
+    program — the second :class:`CompiledSolverCache` key type
+    (DESIGN.md Sec. 11).
+
+    Where a :class:`SolveSpec` keys the steady-state *solve* program,
+    an UpdateSpec keys the *mutation* program: the single-factor
+    admission pipeline (distribution gather + policy casts + hoisted
+    phase 1) fused with a donated scatter into the bank's resident
+    (C, ...) stacks.  Everything that changes the compiled artifact is
+    a field: the factor order and plan, the precision policy (which
+    roles exist and their dtypes), the operator variant (folded into
+    the gather), the stack width C the scatter targets, and the
+    ingestion layout (``"natural"`` runs the fused gather;
+    ``"cyclic"`` takes a producer's working-layout factor and only
+    casts).  Two same-shape banks share one compiled updater, and an
+    updater never retraces across slots or occupancy changes.
+    """
+    n: int
+    grid: TrsmGrid
+    policy: PrecisionPolicy
+    method: str
+    n0: int | None
+    mode: str | None
+    lower: bool
+    transpose: bool
+    block_inv: Callable | None
+    bank_width: int              # C — the resident stack width
+    ingest: str = "natural"      # "natural" | "cyclic"
+
+    def __post_init__(self):
+        if self.ingest not in ("natural", "cyclic"):
+            raise ValueError(f"unknown ingest {self.ingest!r}")
+        if self.bank_width < 1:
+            raise ValueError(f"bank width must be >= 1, got "
+                             f"{self.bank_width}")
+
+
+def updater_for(uspec: UpdateSpec, cache=None):
+    """Fetch (or build) the compiled in-place
+    :class:`~repro.core.session.UpdaterProgram` for an update spec —
+    the spec IS the cache key (same LRU as the solve programs)."""
+    from repro.core import session
+    if not isinstance(uspec, UpdateSpec):
+        raise TypeError(f"updater_for takes an UpdateSpec, got "
+                        f"{type(uspec).__name__}")
+    session._check_policy_supported(uspec.policy)
+    cache = cache if cache is not None else session.default_cache()
+    return cache.get(uspec, lambda: session._build_updater(uspec))
+
+
 def solver_for(spec: SolveSpec, cache=None):
     """Fetch (or build) the compiled
     :class:`~repro.core.session.SolverProgram` for a concrete spec —
@@ -387,10 +439,13 @@ class Solver:
                      lower: bool = True, transpose: bool = False,
                      machine=None, block_inv: Callable | None = None,
                      dtype=None, precision=None, map_mode: str = "vmap",
-                     cache=None) -> "Solver":
+                     capacity: int | None = None, cache=None) -> "Solver":
         """A width-M solver over an (M, n, n) natural-layout stack,
         admitted in one stacked gather (the former bank construction +
-        ``BatchedTrsmSession``)."""
+        ``BatchedTrsmSession``).  ``capacity=C`` (>= M) allocates a
+        LIVE-MUTABLE bank at width C: the compiled program is keyed on
+        C, so later ``replace_factor``/``evict_factor``/``admit_factor``
+        churn never retraces (DESIGN.md Sec. 11)."""
         Ls = jnp.asarray(Ls) if dtype is None else jnp.asarray(Ls, dtype)
         if Ls.ndim != 3 or Ls.shape[-1] != Ls.shape[-2]:
             raise ValueError(f"factor stack must be (M, n, n), got "
@@ -401,7 +456,7 @@ class Solver:
                           dtype=None if precision is not None
                           else Ls.dtype,
                           precision=precision, map_mode=map_mode,
-                          cache=cache)
+                          capacity=capacity, cache=cache)
         bank.admit_stack(Ls)
         return cls(bank, cache=cache)
 
@@ -412,24 +467,37 @@ class Solver:
 
     @classmethod
     def from_spec(cls, spec: SolveSpec, factors=None, *,
-                  cache=None) -> "Solver":
+                  capacity: int | None = None, cache=None) -> "Solver":
         """Spec-driven construction: build the admission bank from a
         spec's plan/execution fields and admit ``factors`` (one (n, n)
         factor or an (M, n, n) stack).  The spec's grid must carry a
         real mesh, and when the spec pins a ``bank_width`` the admitted
         factor count must match it — the spec is the cache key, so a
         width mismatch would silently key programs on a different spec
-        than the one declared."""
+        than the one declared.  ``capacity`` (defaulting to the spec's
+        ``bank_width`` when ``factors`` is omitted) allocates a
+        live-mutable bank at the spec's width, to be filled by
+        ``admit_factor``/``replace_factor`` later — the declarative
+        churn-serving entry point."""
         if spec.grid is None or spec.grid.mesh is None:
             raise ValueError("spec has a plan-only grid; re-target it "
                              "at a real mesh (make_trsm_mesh) first")
         spec.validate()
+        if capacity is None and factors is None:
+            capacity = spec.bank_width
+        if capacity is not None and spec.bank_width is not None \
+                and capacity != spec.bank_width:
+            raise ValueError(
+                f"capacity={capacity} contradicts the spec's "
+                f"bank_width={spec.bank_width} (the spec is the cache "
+                f"key; the capacity IS the compiled width)")
         bank = FactorBank(spec.grid, spec.n, method=spec.method,
                           n0=spec.n0, mode=spec.mode, lower=spec.lower,
                           transpose=spec.transpose,
                           block_inv=spec.block_inv,
                           precision=spec.policy,
-                          map_mode=spec.map_mode or "vmap", cache=cache)
+                          map_mode=spec.map_mode or "vmap",
+                          capacity=capacity, cache=cache)
         solver = cls(bank, cache=cache)
         if factors is not None:
             factors = jnp.asarray(factors)
@@ -437,7 +505,7 @@ class Solver:
                 bank.admit_stack(factors)
             else:
                 bank.admit(factors)
-        if spec.bank_width is not None and bank.size != spec.bank_width:
+        if spec.bank_width is not None and bank.width != spec.bank_width:
             raise ValueError(
                 f"spec pins bank_width={spec.bank_width} but "
                 f"{bank.size} factor(s) were admitted; pass a "
@@ -452,8 +520,16 @@ class Solver:
 
     @property
     def width(self) -> int:
-        """M — the number of resident factors (live: admitting to the
-        bank grows the width; the next solve keys on the new width)."""
+        """The bank WIDTH the compiled program is keyed on — the
+        capacity of a capacity-allocated bank (occupancy changes never
+        re-key; free slots ride along as inert zero lanes), else the
+        live factor count (append-only: admitting grows the width and
+        the next solve keys on it)."""
+        return self.bank.width
+
+    @property
+    def occupancy(self) -> int:
+        """The number of LIVE resident factors (<= width)."""
         return self.bank.size
 
     @property
@@ -490,7 +566,7 @@ class Solver:
         return SolveSpec(n=b.n, k=k, grid=b.grid, policy=b.policy,
                          method=b.method, n0=n0, mode=b.mode,
                          lower=b.lower, transpose=b.transpose,
-                         block_inv=b.block_inv, bank_width=b.size,
+                         block_inv=b.block_inv, bank_width=b.width,
                          map_mode=b.map_mode)
 
     def program_for(self, k: int):
@@ -547,7 +623,10 @@ class Solver:
         """Compile (and run once on zeros) the program for RHS width k
         at the current bank width, so the first real request is served
         at steady-state latency.  Also pre-runs the rank adapters
-        (stack/slice) used by width-1 (n, k) serving."""
+        (stack/slice) used by width-1 (n, k) serving.  A
+        capacity-allocated bank can warm up EMPTY: the program is
+        keyed on capacity, so it is already the one every later
+        occupancy serves."""
         B = jnp.zeros((self.width, self.n, k), self.dtype)
         X = self.solve(B, donate=True)
         if self.width == 1:
@@ -555,6 +634,29 @@ class Solver:
                                 (0,))                   # lift path
             jax.lax.squeeze(X, (0,))                    # squeeze path
         return self
+
+    # ------------------------- live bank mutation -------------------------
+
+    def admit_factor(self, L) -> int:
+        """Admit one natural-layout (n, n) factor; returns its slot.
+        On a capacity bank this fills (and re-uses) free slots in
+        place — the compiled program does not change."""
+        return self.bank.admit(L)
+
+    def replace_factor(self, slot: int, L) -> int:
+        """Refresh live ``slot`` in place with a new factor through
+        the bank's compiled donated updater — zero retraces, zero host
+        round trips, no rebuild (DESIGN.md Sec. 11)."""
+        return self.bank.replace(slot, L)
+
+    def evict_factor(self, slot: int) -> None:
+        """Free live ``slot`` (capacity banks); the slot's lane goes
+        inert until the next ``admit_factor`` re-uses it."""
+        self.bank.evict(slot)
+
+    def live_slots(self) -> tuple:
+        """The live bank slots, ascending."""
+        return self.bank.live_slots()
 
 
 # ------------------------------ SolveServer ------------------------------
@@ -612,6 +714,11 @@ class SolveServer:
         # keyed on the new width)
         self._queues: dict[int, collections.deque] = {}
         self._seq = 0
+        # slot generation at submit time, per request: a request must
+        # never be served against a factor admitted after its slot was
+        # evicted (re-admission makes the slot live again, so liveness
+        # alone cannot catch it)
+        self._req_gen: dict[int, int] = {}
         self.requests_served = 0
         self.waves_solved = 0
 
@@ -631,10 +738,17 @@ class SolveServer:
 
     def submit(self, b, factor: int = 0) -> None:
         """Enqueue one RHS block — an (n,) vector or (n, j) columns —
-        for bank factor ``factor``."""
+        for bank factor ``factor``.  Submits to an inactive (evicted /
+        never-admitted) capacity slot are rejected: its lane is an
+        inert zero panel, and solving real traffic against it would
+        silently return garbage."""
         if not 0 <= factor < self.solver.width:
             raise ValueError(f"unknown factor {factor}; bank holds "
                              f"{self.solver.width}")
+        if not self.solver.bank.is_live(factor):
+            raise ValueError(f"inactive slot {factor}: evicted or "
+                             f"never admitted (live slots: "
+                             f"{list(self.solver.live_slots())})")
         b = jnp.asarray(b, self.solver.dtype)
         if b.ndim == 1:
             b = b[:, None]
@@ -645,11 +759,27 @@ class SolveServer:
             raise ValueError(f"request wider than panel: {b.shape[1]} > "
                              f"{self.panel_k}")
         self._queues.setdefault(factor, collections.deque())
+        self._req_gen[self._seq] = \
+            self.solver.bank.slot_generation(factor)
         self._queues[factor].append((self._seq, b))
         self._seq += 1
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def cancel(self, factor: int) -> int:
+        """Drop every queued request for ``factor`` (and its bookkeeping);
+        returns how many were dropped.  The recovery path when a slot
+        was evicted with requests still pending: cancel the stranded
+        slot, then ``drain`` serves the rest normally."""
+        q = self._queues.get(factor)
+        if not q:
+            return 0
+        for seq, _ in q:
+            self._req_gen.pop(seq, None)
+        dropped = len(q)
+        q.clear()
+        return dropped
 
     def warmup(self) -> "SolveServer":
         self.solver.warmup(self.panel_k)
@@ -657,12 +787,31 @@ class SolveServer:
 
     def drain(self) -> dict:
         """Serve all queued requests for all factors.  Returns
-        {factor: [X, ...]} for every CURRENT bank factor (empty list
-        if none were queued), each factor's solutions in its own
-        submit order."""
+        {factor: [X, ...]} for every LIVE bank slot (empty list if
+        none were queued; inactive capacity slots ride along as zero
+        panels and are omitted), each factor's solutions in its own
+        submit order.  Requests stranded on a slot that was evicted
+        AFTER submission are an error — even if the slot was re-admitted
+        since (a per-slot generation counter catches the turnover):
+        their solutions would be garbage against whatever occupies the
+        lane now."""
         n, pk = self.solver.n, self.panel_k
         M = self.solver.width
-        results: dict[int, dict] = {f: {} for f in range(M)}
+        bank = self.solver.bank
+        live = self.solver.live_slots()
+        live_set = set(live)
+        # a request is stale if its slot is gone OR was turned over
+        # (evicted, even if re-admitted since) after it was submitted
+        dead = sorted(f for f, q in self._queues.items() if q and (
+            f not in live_set
+            or any(self._req_gen[seq] != bank.slot_generation(f)
+                   for seq, _ in q)))
+        if dead:
+            raise ValueError(
+                f"pending requests for slot(s) {dead} evicted after "
+                f"submission; drain before evicting a slot, or "
+                f"cancel(factor) to drop the stranded requests")
+        results: dict[int, dict] = {f: {} for f in live}
         while self.pending():
             waves = {f: _pack_wave(q, pk)
                      for f, q in self._queues.items() if q}
@@ -684,6 +833,7 @@ class SolveServer:
                 for seq, b in wave:
                     results[f][seq] = X[f, :, off:off + b.shape[1]]
                     off += b.shape[1]
+                    self._req_gen.pop(seq, None)
                 self.requests_served += len(wave)
         return {f: [res[s] for s in sorted(res)]
                 for f, res in results.items()}

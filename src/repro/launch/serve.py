@@ -18,6 +18,15 @@ TRSM solve serving against a device-resident factor.
     PYTHONPATH=src python -m repro.launch.serve --workload trsm-bank \
         --bank 16 --n 256 --panel-k 16 --requests 256 \
         [--map-mode vmap|scan] [--precision bf16_refine]
+
+    # churn serving: a capacity-allocated LIVE-MUTABLE bank —
+    # factors are replaced / evicted / re-admitted in place between
+    # waves (KFAC-style re-factorization, tenant churn) while the ONE
+    # compiled program keyed on the capacity keeps serving: zero
+    # retraces, zero rebuilds (DESIGN.md Sec. 11)
+    PYTHONPATH=src python -m repro.launch.serve --workload trsm-churn \
+        --bank 16 --n 256 --panel-k 16 --requests 256 --updates 32 \
+        [--precision bf16_refine] [--cache-stats]
 """
 
 from __future__ import annotations
@@ -117,10 +126,89 @@ def serve_trsm_bank(args):
         _print_cache_stats()
 
 
+def serve_trsm_churn(args):
+    """Serve against a capacity-allocated live-mutable bank while the
+    factor population churns: replace / evict / re-admit between
+    waves, one compiled program (keyed on capacity) throughout."""
+    from repro import api
+    from repro.core import session
+    if args.precision == "fp64_refine":
+        jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    n, C = args.n, args.bank
+    dt = np.float64 if args.precision == "fp64_refine" else np.float32
+
+    def fresh():
+        return (np.tril(rng.standard_normal((n, n)))
+                + n * np.eye(n)).astype(dt)
+
+    grid = api.make_trsm_mesh(args.p1, args.p2)
+    bank = api.FactorBank(grid, n, method=args.method, n0=args.n0,
+                          precision=args.precision,
+                          dtype=None if args.precision else dt,
+                          map_mode=args.map_mode, capacity=C)
+    solver = api.Solver.from_bank(bank)
+    server = api.SolveServer(solver, args.panel_k).warmup()  # EMPTY warmup
+    for _ in range(max(C // 2, 1)):          # start at half occupancy
+        bank.admit(fresh())
+
+    key = solver.spec_for(args.panel_k)
+    uspec = bank.update_spec()
+    traces0 = (session.TRACE_COUNTS[key], session.TRACE_COUNTS[uspec])
+
+    widths = rng.integers(1, args.panel_k + 1, args.requests)
+    per_wave = max(args.requests // max(args.updates, 1), 1)
+    replaced = evicted = 0
+    t_update = 0.0
+    t0 = time.time()
+    for i, w in enumerate(widths):
+        live = bank.live_slots()
+        server.submit(rng.standard_normal((n, int(w))).astype(dt),
+                      int(live[i % len(live)]))
+        if (i + 1) % per_wave == 0:
+            outs = server.drain()
+            jax.block_until_ready([x for xs in outs.values() for x in xs])
+            # churn between waves: refresh one slot in place, and
+            # periodically turn a slot over (evict -> re-admit)
+            live = bank.live_slots()
+            tu = time.time()
+            bank.replace(int(live[replaced % len(live)]), fresh())
+            replaced += 1
+            if replaced % 3 == 0:
+                victim = int(live[evicted % len(live)])
+                bank.evict(victim)
+                slot = bank.admit(fresh())
+                if slot != victim:         # lowest-free-slot reuse
+                    raise AssertionError((slot, victim))
+                evicted += 1
+            jax.block_until_ready(bank.factors_cyclic)
+            t_update += time.time() - tu
+    outs = server.drain()
+    jax.block_until_ready([x for xs in outs.values() for x in xs])
+    dt_total = time.time() - t0
+    retraced = (session.TRACE_COUNTS[key] - traces0[0],
+                session.TRACE_COUNTS[uspec] - traces0[1])
+    # one compiled scatter per replace and per re-admit (evict itself
+    # is host-side bookkeeping)
+    updates = replaced + evicted
+    policy = solver.policy
+    print(f"served {server.requests_served} solve requests in "
+          f"{server.waves_solved} waves against a capacity-{C} bank "
+          f"(occupancy {bank.size}) with {updates} in-place updates "
+          f"({replaced} replaces, {evicted} evict+readmit), "
+          f"{dt_total:.3f}s total, "
+          f"{t_update / max(updates, 1) * 1e3:.2f} ms/update; "
+          f"retraces solve={retraced[0]} update={retraced[1]} "
+          f"(steady state: 0/0) on grid p1={args.p1} p2={args.p2} n={n} "
+          f"precision={policy.name}")
+    if args.cache_stats:
+        _print_cache_stats()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm",
-                    choices=["lm", "trsm", "trsm-bank"])
+                    choices=["lm", "trsm", "trsm-bank", "trsm-churn"])
     ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", default="debug",
@@ -138,7 +226,11 @@ def main():
     ap.add_argument("--method", default="inv",
                     choices=["inv", "rec", "auto"])
     ap.add_argument("--bank", type=int, default=16,
-                    help="factor count M for the trsm-bank workload")
+                    help="factor count M for the trsm-bank workload "
+                         "(= capacity C for trsm-churn)")
+    ap.add_argument("--updates", type=int, default=32,
+                    help="in-place bank updates interleaved with the "
+                         "waves (trsm-churn workload)")
     ap.add_argument("--map-mode", default="vmap",
                     choices=["vmap", "scan"],
                     help="how the bank program maps the factor axis")
@@ -155,6 +247,8 @@ def main():
         return serve_trsm(args)
     if args.workload == "trsm-bank":
         return serve_trsm_bank(args)
+    if args.workload == "trsm-churn":
+        return serve_trsm_churn(args)
     if not args.arch:
         ap.error("--arch is required for the lm workload")
 

@@ -122,6 +122,28 @@ def _precondition(G, Aema, Bema, damping, mode="whiten"):
     return P.T if transpose else P
 
 
+def _damped_chol(M, damping: float):
+    """``chol(M + lam I)`` with the preconditioner's trace-scaled
+    damping — the factor the banks serve."""
+    d = M.shape[-1]
+    lam = damping * (jnp.trace(M) / d + 1e-12)
+    return _chol(M + lam * jnp.eye(d, dtype=M.dtype))
+
+
+def _iter_kron_factors(state):
+    """Yield ``(name, side, M)`` for every Kronecker factor EMA in a
+    kfac_ca state — the one traversal order ``factor_banks_from_state``
+    banks in and ``refresh_banks`` refreshes in."""
+    leaves = jax.tree_util.tree_leaves_with_path(
+        state["kron"], is_leaf=lambda t: isinstance(t, tuple))
+    for path, kron in leaves:
+        if not (isinstance(kron, tuple) and len(kron) == 2):
+            continue
+        name = jax.tree_util.keystr(path)
+        for side, M in zip(("A", "B"), kron):
+            yield name, side, M
+
+
 def factor_banks_from_state(state, *, damping: float = 1e-3,
                             grid=None, precision=None,
                             method: str = "inv", n0: int | None = None,
@@ -161,6 +183,9 @@ def factor_banks_from_state(state, *, damping: float = 1e-3,
                                   dtype=None if precision is not None
                                   else L.dtype,
                                   precision=precision, map_mode=map_mode)
+            # record the banking-time damping so refresh_banks cannot
+            # silently diverge from the factors the manifest describes
+            banks[d].kfac_damping = damping
             manifest[d] = []
         if L.ndim == 2:
             banks[d].admit(L)
@@ -168,25 +193,57 @@ def factor_banks_from_state(state, *, damping: float = 1e-3,
             banks[d].admit_stack(L)
         manifest[d].extend(tags)
 
-    def damped_chol(M):
-        d = M.shape[-1]
-        lam = damping * (jnp.trace(M) / d + 1e-12)
-        return _chol(M + lam * jnp.eye(d, dtype=M.dtype))
-
-    leaves = jax.tree_util.tree_leaves_with_path(
-        state["kron"], is_leaf=lambda t: isinstance(t, tuple))
-    for path, kron in leaves:
-        if not (isinstance(kron, tuple) and len(kron) == 2):
-            continue
-        name = jax.tree_util.keystr(path)
-        for side, M in zip(("A", "B"), kron):
-            if M.ndim == 2:
-                admit(M.shape[-1], damped_chol(M), [(name, side, None)])
-            else:                       # stacked units: vmapped chol,
-                cs = jax.vmap(damped_chol)(M)   # one stacked admission
-                admit(M.shape[-1], cs,
-                      [(name, side, u) for u in range(M.shape[0])])
+    for name, side, M in _iter_kron_factors(state):
+        if M.ndim == 2:
+            admit(M.shape[-1], _damped_chol(M, damping),
+                  [(name, side, None)])
+        else:                       # stacked units: vmapped chol,
+            cs = jax.vmap(lambda m: _damped_chol(m, damping))(M)
+            admit(M.shape[-1], cs,  # one stacked admission
+                  [(name, side, u) for u in range(M.shape[0])])
     return banks, manifest
+
+
+def refresh_banks(banks, manifest, state, *, damping: float | None = None):
+    """Per-step IN-PLACE refresh of the banks built by
+    :func:`factor_banks_from_state` (DESIGN.md Sec. 11).
+
+    A KFAC preconditioner re-factorizes every ``update_freq`` steps;
+    re-banking would re-admit every layer and (on the first width
+    change) recompile — exactly the repeated admission cost the
+    paper's hoisting argument says to never pay twice.  Instead, each
+    banked factor's damped Cholesky is recomputed from the CURRENT EMA
+    state and ``bank.replace``d into the slot the manifest assigned it
+    at banking time: one compiled donated scatter per factor, zero
+    retraces, occupancy and slot assignment unchanged — the serving
+    side (``Solver.from_bank`` / ``SolveServer``) never notices the
+    swap.  Stacked 3D parameters factorize in one vmapped Cholesky but
+    scatter per unit (u updater dispatches; a batched multi-slot
+    scatter is a noted follow-up).  ``damping`` defaults to the value
+    RECORDED on each bank at banking time, so the refreshed factors
+    stay exactly the ones the manifest describes; pass it explicitly
+    only to re-damp on purpose.  Returns ``banks``.
+    """
+    index = {d: {tag: i for i, tag in enumerate(tags)}
+             for d, tags in manifest.items()}
+    for name, side, M in _iter_kron_factors(state):
+        d = M.shape[-1]
+        slots = index.get(d, {})
+        if not slots:
+            continue
+        damp = damping if damping is not None else \
+            getattr(banks[d], "kfac_damping", 1e-3)
+        if M.ndim == 2:
+            slot = slots.get((name, side, None))
+            if slot is not None:
+                banks[d].replace(slot, _damped_chol(M, damp))
+        else:
+            cs = jax.vmap(lambda m: _damped_chol(m, damp))(M)
+            for u in range(M.shape[0]):
+                slot = slots.get((name, side, u))
+                if slot is not None:
+                    banks[d].replace(slot, cs[u])
+    return banks
 
 
 def kfac_ca(lr=1e-3, ema=0.95, damping=1e-3, max_dim=8192, min_dim=8,

@@ -1,0 +1,392 @@
+"""Live-mutable FactorBank (DESIGN.md Sec. 11): capacity allocation,
+in-place replace/replace_cyclic, evict/re-admit slot lifecycle, the
+zero-transfer/zero-retrace churn steady state for every precision
+preset at several occupancies, UpdateSpec cache keying, and the
+server-side inactive-slot handling."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import cholesky, grid as gridlib, session
+from repro.core.solver import UpdateSpec
+
+PRESET_CASES = [
+    ("fp32", np.float32, 1e-4),
+    ("bf16", np.float32, 5e-2),
+    ("bf16_refine", np.float32, 1e-4),
+    ("fp64_refine", np.float64, 1e-10),
+]
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return gridlib.make_trsm_mesh(1, 1)
+
+
+def _factors(M, n=32, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    Ls = np.stack([np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+                   for _ in range(M)])
+    return Ls.astype(dtype), rng
+
+
+def _rel(L, x, b):
+    x = np.asarray(x, np.float64)
+    return np.linalg.norm(L.astype(np.float64) @ x - b) \
+        / np.linalg.norm(b)
+
+
+# ------------------------- capacity allocation -------------------------
+
+def test_capacity_bank_width_pinned_and_empty_warmup(grid):
+    """The compiled program is keyed on capacity, not occupancy: an
+    EMPTY capacity bank warms up, and admissions never re-key."""
+    n, C, k = 32, 4, 4
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    solver = api.Solver.from_bank(bank)
+    assert solver.width == C and solver.occupancy == 0
+    assert bank.live_slots() == ()
+    solver.warmup(k)                       # compiles at width C, empty
+    key = solver.spec_for(k)
+    assert key.bank_width == C
+    traces = session.TRACE_COUNTS[key]
+    Ls, rng = _factors(2)
+    assert bank.admit(Ls[0]) == 0 and bank.admit(Ls[1]) == 1
+    assert solver.spec_for(k) == key       # occupancy is not in the key
+    B = np.zeros((C, n, k), np.float32)
+    B[0] = rng.standard_normal((n, k))
+    ref = B.copy()
+    X = solver.solve(solver.place_rhs(B))
+    assert session.TRACE_COUNTS[key] == traces
+    assert _rel(Ls[0], np.asarray(X)[0], ref[0]) < 1e-4
+
+
+def test_capacity_bank_validation(grid):
+    with pytest.raises(ValueError, match="capacity"):
+        api.FactorBank(grid, 32, capacity=0, dtype=np.float32)
+    bank = api.FactorBank(grid, 32, n0=8, capacity=2, dtype=np.float32)
+    Ls, _ = _factors(3)
+    bank.admit(Ls[0])
+    bank.admit(Ls[1])
+    with pytest.raises(ValueError, match="bank full"):
+        bank.admit(Ls[2])
+    with pytest.raises(ValueError, match="bank full"):
+        bank.admit_stack(Ls[:1])
+    with pytest.raises(ValueError, match="out of range"):
+        bank.replace(5, Ls[2])
+    bank.evict(0)
+    with pytest.raises(ValueError, match="not live"):
+        bank.replace(0, Ls[2])             # evicted: admit, not replace
+    with pytest.raises(ValueError, match="not live"):
+        bank.evict(0)                      # double evict
+    legacy = api.FactorBank(grid, 32, n0=8, dtype=np.float32)
+    legacy.admit(Ls[0])
+    with pytest.raises(ValueError, match="capacity-allocated"):
+        legacy.evict(0)
+
+
+def test_failed_admission_returns_the_slot(grid, monkeypatch):
+    """A scatter that fails mid-admission (e.g. the updater's first
+    compile is interrupted) must put the slot back on the free list —
+    not leak it as neither-live-nor-free."""
+    bank = api.FactorBank(grid, 32, n0=8, capacity=2, dtype=np.float32)
+    Ls, _ = _factors(1)
+    monkeypatch.setattr(
+        bank, "_scatter",
+        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("compile")))
+    with pytest.raises(RuntimeError, match="compile"):
+        bank.admit(Ls[0])
+    assert bank._free == [0, 1] and bank.size == 0
+    monkeypatch.undo()
+    assert bank.admit(Ls[0]) == 0          # the slot is usable again
+    assert bank.live_slots() == (0,)
+
+
+def test_capacity_full_width_admit_stack_fast_path(grid):
+    """An empty capacity bank filled to exactly C takes the one-
+    stacked-gather path and ends fully live."""
+    n, C = 32, 3
+    Ls, rng = _factors(C)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    assert bank.admit_stack(Ls) == [0, 1, 2]
+    assert bank.size == C and bank.live_slots() == (0, 1, 2)
+    solver = api.Solver.from_bank(bank)
+    B = rng.standard_normal((C, n, 4)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    for i in range(C):
+        assert _rel(Ls[i], X[i], ref[i]) < 1e-4, i
+
+
+# ----------------------- replace / evict / admit -----------------------
+
+def test_replace_updates_one_slot_in_place(grid):
+    n, C, k = 32, 4, 4
+    Ls, rng = _factors(C, seed=1)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    bank.admit_stack(Ls)
+    solver = api.Solver.from_bank(bank).warmup(k)
+    Lnew, _ = _factors(1, seed=7)
+    assert solver.replace_factor(2, Lnew[0]) == 2
+    B = rng.standard_normal((C, n, k)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    for i in range(C):                     # slot 2 serves the NEW factor,
+        L = Lnew[0] if i == 2 else Ls[i]   # the others are untouched
+        assert _rel(L, X[i], ref[i]) < 1e-4, i
+
+
+def test_replace_cyclic_from_producer(grid):
+    n, C = 32, 2
+    Ls, rng = _factors(C, seed=2)
+    A = (Ls[0] @ Ls[0].T).astype(np.float32)            # SPD
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    bank.admit_stack(Ls)
+    bank.replace_cyclic(1, cholesky.cholesky_cyclic(A, grid))
+    solver = api.Solver.from_bank(bank)
+    B = rng.standard_normal((C, n, 4)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    Lr = np.asarray(cholesky.cholesky(A, grid), np.float64)
+    assert _rel(Ls[0], X[0], ref[0]) < 1e-4
+    assert np.linalg.norm(Lr @ np.asarray(X[1], np.float64) - ref[1]) \
+        / np.linalg.norm(ref[1]) < 1e-4
+    upper = api.FactorBank(grid, n, n0=8, capacity=1, lower=False,
+                           dtype=np.float32)
+    upper.admit(np.triu(Ls[0].T))
+    with pytest.raises(ValueError, match="cyclic ingestion"):
+        upper.replace_cyclic(0, np.eye(n, dtype=np.float32))
+
+
+def test_evict_then_admit_reuses_lowest_free_slot(grid):
+    n, C = 32, 4
+    Ls, _ = _factors(6, seed=3)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    slots = [bank.admit(Ls[i]) for i in range(4)]
+    assert slots == [0, 1, 2, 3]
+    bank.evict(2)
+    bank.evict(0)
+    assert bank.live_slots() == (1, 3) and bank.size == 2
+    assert bank.admit(Ls[4]) == 0          # lowest free slot first
+    assert bank.admit(Ls[5]) == 2
+    assert bank.live_slots() == (0, 1, 2, 3)
+
+
+def test_legacy_bank_replace_in_place(grid):
+    """replace works on append-only banks too (the KFAC refresh path):
+    the fused stacks are scattered into, no chunk rebuild."""
+    n, k = 32, 4
+    Ls, rng = _factors(3, seed=4)
+    bank = api.FactorBank(grid, n, n0=8, dtype=np.float32)
+    bank.admit_stack(Ls)
+    Lnew, _ = _factors(1, seed=8)
+    bank.replace(1, Lnew[0])
+    solver = api.Solver.from_bank(bank)
+    B = rng.standard_normal((3, n, k)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    for i, L in enumerate((Ls[0], Lnew[0], Ls[2])):
+        assert _rel(L, X[i], ref[i]) < 1e-4, i
+
+
+def test_incremental_stack_fuse_across_interleaved_admits(grid):
+    """stacks() fuses pending chunks onto the cached fused stack (not
+    a re-concat of the whole history) and stays correct when admits
+    interleave with solves."""
+    n, k = 32, 4
+    Ls, rng = _factors(4, seed=5)
+    bank = api.FactorBank(grid, n, n0=8, dtype=np.float32)
+    bank.admit(Ls[0])
+    assert bank.stacks()[0].shape[0] == 1
+    assert not bank._chunks                # fused: nothing pending
+    bank.admit(Ls[1])
+    bank.admit_stack(Ls[2:])
+    assert len(bank._chunks) == 2          # pending until next stacks()
+    st = bank.stacks()
+    assert st[0].shape[0] == 4 and not bank._chunks
+    assert bank.stacks() is st             # cached, no rebuild
+    solver = api.Solver.from_bank(bank)
+    B = rng.standard_normal((4, n, k)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    for i in range(4):
+        assert _rel(Ls[i], X[i], ref[i]) < 1e-4, i
+
+
+# ------------------- the churn steady state (acceptance) -------------------
+
+@pytest.mark.parametrize("occupancy", [1, 2, 4])
+@pytest.mark.parametrize("precision,in_dt,rtol", PRESET_CASES)
+def test_churn_steady_state_zero_transfers_zero_retraces(
+        grid, occupancy, precision, in_dt, rtol):
+    """The tentpole invariant: an interleaved churn-and-solve schedule
+    (solve, replace, solve, evict + re-admit, solve) performs zero
+    host<->device transfers and zero retraces — for every precision
+    preset, at occupancies 1, C/2, and C."""
+    n, C, k = 32, 4, 4
+    Ls, rng = _factors(occupancy, dtype=in_dt, seed=occupancy)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, precision=precision)
+    solver = api.Solver.from_bank(bank).warmup(k)
+    for L in Ls:
+        bank.admit(L)
+    key, uspec = solver.spec_for(k), bank.update_spec()
+    assert isinstance(uspec, UpdateSpec)
+    traces = (session.TRACE_COUNTS[key], session.TRACE_COUNTS[uspec])
+
+    live = dict(zip(bank.live_slots(), Ls))
+    fresh, _ = _factors(2, dtype=in_dt, seed=90 + occupancy)
+    placed = [bank.place_factor(L) for L in fresh]
+    Bs = [solver.place_rhs(rng.standard_normal((C, n, k)).astype(in_dt))
+          for _ in range(3)]
+    refs = [np.asarray(b) for b in Bs]
+    outs = []
+    with jax.transfer_guard("disallow"):
+        outs.append((solver.solve(Bs[0]), dict(live)))
+        first = min(live)
+        solver.replace_factor(first, placed[0])     # in-place refresh
+        live[first] = fresh[0]
+        outs.append((solver.solve(Bs[1]), dict(live)))
+        last = max(live)
+        solver.evict_factor(last)                   # turn the slot over
+        assert solver.admit_factor(placed[1]) == last
+        live[last] = fresh[1]
+        outs.append((solver.solve(Bs[2]), dict(live)))
+    assert (session.TRACE_COUNTS[key],
+            session.TRACE_COUNTS[uspec]) == traces
+    for (x, live_then), ref in zip(outs, refs):
+        x = np.asarray(x)
+        for slot, L in live_then.items():
+            assert _rel(L, x[slot], ref[slot]) < rtol, (slot, precision)
+
+
+def test_occupancies_share_one_program_and_updater(grid):
+    """Banks of the same capacity at different occupancies hit the
+    SAME compiled solve program and the SAME updater (the occupancy is
+    not a cache key)."""
+    n, C, k = 32, 4, 4
+    cache = session.CompiledSolverCache()
+    kw = dict(n0=8, capacity=C, dtype=np.float32, cache=cache)
+    keys = set()
+    for occ in (1, 2, 4):
+        Ls, _ = _factors(occ, seed=occ)
+        bank = api.FactorBank(grid, n, **kw)
+        for L in Ls:
+            bank.admit(L)
+        solver = api.Solver.from_bank(bank, cache=cache).warmup(k)
+        keys.add((solver.spec_for(k), bank.update_spec()))
+    assert len(keys) == 1
+    st = cache.stats()
+    assert st["misses"] == 2               # one solve program, one updater
+    assert st["hits"] >= 4
+
+
+# --------------------------- UpdateSpec keying ---------------------------
+
+def test_update_spec_is_a_cache_key(grid):
+    n, C = 32, 2
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    uspec = bank.update_spec()
+    assert uspec.bank_width == C and uspec.ingest == "natural"
+    assert bank.update_spec("cyclic") != uspec     # ingest re-keys
+    assert dataclasses.replace(uspec, bank_width=3) != uspec
+    with pytest.raises(ValueError, match="ingest"):
+        UpdateSpec(n=n, grid=grid, policy=api.PRESETS["fp32"],
+                   method="inv", n0=8, mode=None, lower=True,
+                   transpose=False, block_inv=None, bank_width=C,
+                   ingest="weird")
+    with pytest.raises(TypeError, match="UpdateSpec"):
+        api.updater_for((1, 2))
+
+
+# ------------------------ server slot lifecycle ------------------------
+
+def test_server_rejects_inactive_slots_and_drains_live(grid):
+    n, C, k = 32, 4, 4
+    Ls, rng = _factors(3, seed=6)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    slots = [bank.admit(L) for L in Ls]
+    server = api.SolveServer(api.Solver.from_bank(bank), k).warmup()
+    with pytest.raises(ValueError, match="inactive slot"):
+        server.submit(np.zeros((n, 1), np.float32), factor=3)
+    with pytest.raises(ValueError, match="unknown factor"):
+        server.submit(np.zeros((n, 1), np.float32), factor=C)
+    bank.evict(slots[1])
+    with pytest.raises(ValueError, match="inactive slot"):
+        server.submit(np.zeros((n, 1), np.float32), factor=slots[1])
+    reqs = {f: rng.standard_normal((n, 2)).astype(np.float32)
+            for f in (slots[0], slots[2])}
+    for f, r in reqs.items():
+        server.submit(r, factor=f)
+    outs = server.drain()
+    assert set(outs) == {slots[0], slots[2]}   # live slots only
+    for f, r in reqs.items():
+        assert _rel(Ls[slots.index(f)], outs[f][0], r) < 1e-4
+
+
+def test_server_rejects_drain_of_evicted_pending_requests(grid):
+    n, C = 32, 2
+    Ls, _ = _factors(2, seed=7)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    bank.admit_stack(Ls)
+    server = api.SolveServer(api.Solver.from_bank(bank), 4)
+    server.submit(np.zeros((n, 1), np.float32), factor=1)
+    bank.evict(1)
+    with pytest.raises(ValueError, match="evicted"):
+        server.drain()
+
+
+def test_server_rejects_stale_requests_after_slot_turnover(grid):
+    """Re-admitting an evicted slot makes it live again, but a request
+    submitted BEFORE the turnover must still error at drain (it would
+    be solved against the wrong factor) — the per-slot generation
+    counter catches what liveness alone cannot."""
+    n, C = 32, 2
+    Ls, rng = _factors(3, seed=8)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    bank.admit_stack(Ls[:2])
+    server = api.SolveServer(api.Solver.from_bank(bank), 4)
+    server.submit(np.zeros((n, 1), np.float32), factor=1)
+    bank.evict(1)
+    readmitted = bank.admit(Ls[2])         # slot 1 is live again...
+    assert readmitted == 1 and bank.is_live(1)
+    with pytest.raises(ValueError, match="evicted after submission"):
+        server.drain()                     # ...but the request is stale
+    # cancel is the recovery path: drop the stranded requests, then a
+    # fresh submit against the re-admitted factor serves fine
+    assert server.cancel(1) == 1
+    assert server.cancel(1) == 0 and not server._req_gen
+    r = rng.standard_normal((n, 2)).astype(np.float32)
+    server.submit(r, factor=1)
+    outs = server.drain()
+    assert _rel(Ls[2], outs[1][0], r) < 1e-4
+
+
+def test_from_spec_capacity_churn_entry_point(grid):
+    """The declarative churn entry point: a bank_width spec with no
+    factors allocates an empty capacity bank to fill later."""
+    from repro.core.solver import SolveSpec
+    spec = SolveSpec.auto(32, 4, grid=grid, method="inv", n0=8,
+                          precision="fp32", bank_width=3)
+    solver = api.Solver.from_spec(spec)
+    assert solver.width == 3 and solver.occupancy == 0
+    Ls, rng = _factors(1, seed=9)
+    slot = solver.admit_factor(Ls[0])
+    B = np.zeros((3, 32, 4), np.float32)
+    B[slot] = rng.standard_normal((32, 4))
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    assert _rel(Ls[0], X[slot], ref[slot]) < 1e-4
+    with pytest.raises(ValueError, match="contradicts"):
+        api.Solver.from_spec(spec, capacity=5)

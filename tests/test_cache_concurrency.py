@@ -1,0 +1,127 @@
+"""CompiledSolverCache under concurrency: the read paths
+(__len__/__contains__/stats) hold the lock against concurrent
+mutation, and misses are single-flight — two threads missing the same
+SolveSpec build ONCE (a trace/compile can take minutes), with
+hits/misses/evictions staying accurate."""
+
+import threading
+import time
+
+import pytest
+
+from repro import api
+from repro.core import session
+from repro.core.solver import SolveSpec
+
+
+def _spec(i: int, k: int = 8) -> SolveSpec:
+    """Distinct hashable plan-only specs (get() never inspects the
+    mesh; only solver_for requires concreteness)."""
+    return SolveSpec(n=64 * (i + 1), k=k, grid=api.plan_grid(1, 1),
+                     policy=api.PRESETS["fp32"], n0=16)
+
+
+def test_single_flight_builds_once_across_threads():
+    cache = session.CompiledSolverCache()
+    key = _spec(0)
+    builds = []
+    started = threading.Barrier(8)
+
+    def build():
+        builds.append(threading.get_ident())
+        time.sleep(0.05)               # a slow "compile" both threads hit
+        return object()
+
+    results = [None] * 8
+
+    def worker(i):
+        started.wait()
+        results[i] = cache.get(key, build)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(builds) == 1, "duplicate build of the same spec"
+    assert all(r is results[0] for r in results)
+    st = cache.stats()
+    assert st["misses"] == 1           # ONE miss for the one build
+    assert st["hits"] == 7             # every waiter scored a hit
+    assert st["evictions"] == 0 and st["size"] == 1
+
+
+def test_failed_build_releases_the_key():
+    """A builder that raises must not wedge waiters: the next caller
+    becomes the builder and succeeds."""
+    cache = session.CompiledSolverCache()
+    key = _spec(1)
+    with pytest.raises(RuntimeError, match="boom"):
+        cache.get(key, lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+    sentinel = object()
+    assert cache.get(key, lambda: sentinel) is sentinel
+    assert cache.stats()["misses"] == 2
+
+
+def test_concurrent_readers_and_writers_stress():
+    """Hammer get (distinct keys, LRU evictions) from writer threads
+    while readers spin on len/contains/stats — none of which may race
+    the OrderedDict mutation (the bug: unlocked reads during popitem/
+    move_to_end)."""
+    cache = session.CompiledSolverCache(maxsize=8)
+    keys = [_spec(i) for i in range(32)]
+    stop = threading.Event()
+    errors = []
+
+    def writer(seed):
+        try:
+            for r in range(3):
+                for i, key in enumerate(keys):
+                    if (i + seed) % 2:
+                        cache.get(key, object)
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                len(cache)
+                keys[0] in cache
+                st = cache.stats()
+                assert st["size"] <= 8
+                assert 0.0 <= st["hit_rate"] <= 1.0
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    writers = [threading.Thread(target=writer, args=(s,))
+               for s in range(4)]
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors, errors
+    st = cache.stats()
+    assert st["size"] <= 8
+    assert st["evictions"] >= len(keys) - 8
+    # conservation: every get either hit or missed
+    assert st["hits"] + st["misses"] == 4 * 3 * len(keys) // 2
+
+
+def test_len_contains_stats_consistent_snapshot():
+    cache = session.CompiledSolverCache(maxsize=2)
+    a, b, c = _spec(0), _spec(1), _spec(2)
+    cache.get(a, object)
+    cache.get(b, object)
+    assert len(cache) == 2 and a in cache and b in cache
+    cache.get(c, object)               # evicts a (LRU)
+    assert len(cache) == 2 and a not in cache and c in cache
+    st = cache.stats()
+    assert st == dict(size=2, hits=0, misses=3, evictions=1,
+                      hit_rate=0.0)
+    cache.clear()
+    assert len(cache) == 0 and cache.stats()["misses"] == 0

@@ -272,6 +272,49 @@ def test_kfac_factor_banks_serve_per_layer_solves(grid):
     assert rel < 1e-4, rel
 
 
+def test_kfac_refresh_banks_updates_in_place(grid):
+    """A later optimizer step changes the Kronecker EMAs;
+    refresh_banks re-factorizes every banked factor INTO ITS EXISTING
+    SLOT (no rebank, no width change, no retrace of the serving
+    program) and the served solves track the new state."""
+    import importlib
+    kfac = importlib.import_module("repro.optim.kfac_ca")
+    from repro import api
+    rng = np.random.default_rng(5)
+    params = {"w": jnp.asarray(rng.standard_normal((16, 8)), jnp.float32),
+              "stack": jnp.asarray(rng.standard_normal((2, 16, 8)),
+                                   jnp.float32)}
+    opt = kfac.kfac_ca(min_dim=8)
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)
+    banks, manifest = kfac.factor_banks_from_state(state, grid=grid)
+    solver = api.Solver.from_bank(banks[16]).warmup(4)
+    key = solver.spec_for(4)
+    traces = session.TRACE_COUNTS[key]
+    sizes = {d: b.size for d, b in banks.items()}
+
+    grads = jax.tree.map(lambda p: -0.2 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)   # EMAs move
+    assert kfac.refresh_banks(banks, manifest, state) is banks
+    assert {d: b.size for d, b in banks.items()} == sizes
+    assert session.TRACE_COUNTS[key] == traces       # no retrace
+
+    B = rng.standard_normal((3, 16, 4)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)), np.float64)
+    # every slot now inverts the CURRENT state's damped factor
+    for i, (name, side, unit) in enumerate(manifest[16]):
+        for nm, sd, M in kfac._iter_kron_factors(state):
+            if (nm, sd) == (name, side):
+                Mx = M if unit is None else M[unit]
+                Lc = np.asarray(kfac._damped_chol(Mx, 1e-3), np.float64)
+                rel = np.linalg.norm(Lc @ X[i] - ref[i]) \
+                    / np.linalg.norm(ref[i])
+                assert rel < 1e-4, (i, rel)
+                break
+
+
 def bank_factor_natural(bank, i):
     """Undo the cyclic distribution of bank factor i (test helper)."""
     return gridlib.cyclic_matrix_device(

@@ -198,6 +198,101 @@ def test_device_cyclic_matrix_matches_numpy(n, pr, pc, reverse, transpose):
     np.testing.assert_array_equal(back, Aeff)
 
 
+@given(widths=st.lists(st.integers(1, 8), min_size=1, max_size=24),
+       panel_k=st.integers(8, 12))
+@settings(max_examples=60, deadline=None)
+def test_pack_wave_fifo_width_bound_no_starvation(widths, panel_k):
+    """SolveServer wave packing invariants: every wave respects the
+    panel width bound, takes the queue head (so no request starves
+    across repeated waves), and preserves FIFO order both for the
+    packed wave and for the skipped leftovers."""
+    import collections
+    import numpy as np
+    from repro.core.solver import _pack_wave
+
+    class _Req:    # shape[1] is all _pack_wave reads; no arrays needed
+        def __init__(self, w):
+            self.shape = (1, w)
+
+    queue = collections.deque((seq, _Req(w))
+                              for seq, w in enumerate(widths))
+    served, waves = [], 0
+    while queue:
+        before = [seq for seq, _ in queue]
+        wave = _pack_wave(queue, panel_k)
+        waves += 1
+        assert wave, "a nonempty queue must always yield a wave"
+        assert sum(b.shape[1] for _, b in wave) <= panel_k
+        assert wave[0][0] == before[0], "head of line must be served"
+        seqs = [seq for seq, _ in wave]
+        assert seqs == sorted(seqs), "packed wave must keep FIFO order"
+        leftover = [seq for seq, _ in queue]
+        assert leftover == [s for s in before if s not in set(seqs)], \
+            "skipped requests must keep their relative order"
+        served.extend(seqs)
+    assert sorted(served) == list(range(len(widths)))   # no starvation
+    assert waves <= len(widths)
+    # lower bound: a wave carries at most panel_k columns
+    assert waves >= int(np.ceil(sum(widths) / panel_k))
+
+
+@pytest.fixture(scope="module")
+def _lifecycle_bank():
+    """One capacity bank + solver shared by every hypothesis example
+    (the compiled programs depend only on (n, C), so examples reuse
+    them; each example rebuilds the occupancy it needs)."""
+    from repro import api
+    grid = api.make_trsm_mesh(1, 1)
+    n, C = 16, 3
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    solver = api.Solver.from_bank(bank).warmup(4)
+    return bank, solver
+
+
+@given(ops=st.lists(st.sampled_from(["admit", "evict", "replace"]),
+                    max_size=10),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_bank_slot_lifecycle(_lifecycle_bank, ops, seed):
+    """Slot lifecycle invariants under random admit/evict/replace
+    churn: admit fills the LOWEST free slot (evict -> admit reuses
+    it), live bookkeeping stays exact, and a batched solve returns
+    each live slot's OWN solution (factors c*I solve to B/c, so every
+    lane is attributable)."""
+    from repro import api
+    bank, solver = _lifecycle_bank
+    n, C = bank.n, bank.capacity
+    rng = np.random.default_rng(seed)
+    for slot in bank.live_slots():         # reset occupancy
+        bank.evict(slot)
+    live = {}
+    scale = 2.0
+    for op in ops:
+        if op == "admit" and bank.size < C:
+            expect = min(set(range(C)) - set(live))
+            slot = bank.admit(scale * np.eye(n, dtype=np.float32))
+            assert slot == expect, "admit must fill the lowest free slot"
+            live[slot] = scale
+            scale += 1.0
+        elif op == "evict" and live:
+            slot = rng.choice(sorted(live))
+            bank.evict(int(slot))
+            del live[slot]
+            assert not bank.is_live(int(slot))
+        elif op == "replace" and live:
+            slot = int(rng.choice(sorted(live)))
+            bank.replace(slot, scale * np.eye(n, dtype=np.float32))
+            live[slot] = scale
+            scale += 1.0
+        assert bank.live_slots() == tuple(sorted(live))
+        assert bank.size == len(live) and bank.width == C
+    B = rng.standard_normal((C, n, 4)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    for slot, c in live.items():           # results keyed correctly:
+        np.testing.assert_allclose(X[slot], ref[slot] / c, atol=1e-5)
+
+
 def test_cost_model_monotonicity():
     """More processors never increases per-processor flop cost; latency
     of It-Inv never beats log^2 p."""
