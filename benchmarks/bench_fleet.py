@@ -1,0 +1,175 @@
+"""Mixed-order serving: SolverFleet buckets vs one bank per order.
+
+Quantifies the fleet tier (DESIGN.md Sec. 12).  The workload is the
+paper's consumer pattern at fleet scale — a tenant model emits a
+SPECTRUM of factor orders (the KFAC Kronecker spectrum of
+``optim.kfac_ca``), and every serving wave carries one solve per
+order.  Two ways to serve it:
+
+  per-order — the PR-5 world: one width-1 capacity bank + SolveServer
+              per distinct order, so a mixed-order wave pays one
+              program dispatch PER ORDER, however small the factors.
+  fleet     — ``plan_fleet`` buckets the manifest a priori (pure cost
+              model arithmetic: orders merge into a shared bucket via
+              zero-padding exactly when the modeled padding overhead
+              is bought back by the saved dispatch), and the fleet
+              server packs the whole mixed-order wave into one panel
+              per BUCKET.
+
+The run ASSERTS the acceptance bar — the fleet serves the mixed-order
+wave in >= 3x fewer program dispatches than per-order banks at
+matched residual quality (both sides meet the same relres bar; the
+padded lanes' leading blocks are bit-identical to unpadded solves) —
+and reports the measured per-wave wall time of both sides.
+
+Each run also appends a trajectory point to the committed
+``benchmarks/BENCH_fleet.json``.  Set ``BENCH_FLEET_SMOKE=1`` (the
+weekly CI job does) for a reduced-rep run that skips the trajectory
+write.
+
+Run standalone or via ``python -m benchmarks.run fleet``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+# six distinct orders, every one small enough that sharing one padded
+# bucket is modeled cheaper than its own dispatch — the regime the
+# planner's merge rule targets (large orders split; see
+# launch.dryrun --fleet for that side)
+ORDERS = [192, 160, 128, 96, 64, 32]
+K = 8
+RELRES_BAR = 1e-4
+SMOKE = bool(int(os.environ.get("BENCH_FLEET_SMOKE", "0")))
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
+
+
+def _tri(d, rng):
+    return (np.tril(rng.standard_normal((d, d)))
+            + d * np.eye(d)).astype(np.float32)
+
+
+def _relres(L, x, b):
+    x = np.asarray(x, np.float64)
+    return float(np.linalg.norm(L.astype(np.float64) @ x - b)
+                 / np.linalg.norm(b))
+
+
+def _time_waves(serve_wave, ready, waves, passes):
+    import jax
+    best = float("inf")
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        for _ in range(waves):
+            out = serve_wave()
+        jax.block_until_ready(ready(out))
+        best = min(best, (time.perf_counter() - t0) / waves)
+    return best
+
+
+def run(report):
+    from repro import api
+
+    grid = api.make_trsm_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    factors = {d: _tri(d, rng) for d in ORDERS}
+    waves, passes = (3, 2) if SMOKE else (10, 3)
+
+    # --- fleet: planner-chosen buckets, one dispatch per bucket ---
+    plan = api.plan_fleet({d: 1 for d in ORDERS}, grid, k=K)
+    fleet = api.SolverFleet(grid, plan)
+    for d, L in factors.items():
+        fleet.admit(L, tenant="m", tag=d)
+    fserver = api.SolveServer(fleet, panel_k=K).warmup()
+    reqs = {d: rng.standard_normal((d, 1)).astype(np.float32)
+            for d in ORDERS}
+
+    def fleet_wave():
+        for d, b in reqs.items():
+            fserver.submit(b, tenant="m", tag=d)
+        return fserver.drain()
+
+    fleet_out = fleet_wave()                       # settle the programs
+    fleet_waves_before = fserver.waves_solved
+    fleet_wave()
+    fleet_dispatches = fserver.waves_solved - fleet_waves_before
+    t_fleet = _time_waves(
+        fleet_wave, lambda out: out[("m", ORDERS[0])][0], waves, passes)
+
+    # --- per-order: one width-1 bank + server per distinct order ---
+    servers = {}
+    for d, L in factors.items():
+        bank = api.FactorBank(grid, d, capacity=1, dtype=np.float32)
+        bank.admit(L)
+        servers[d] = api.SolveServer(
+            api.Solver.from_bank(bank), panel_k=K).warmup()
+
+    def split_wave():
+        for d, b in reqs.items():
+            servers[d].submit(b)
+        return {d: s.drain()[0][0] for d, s in servers.items()}
+
+    split_out = split_wave()
+    split_before = sum(s.waves_solved for s in servers.values())
+    split_wave()
+    split_dispatches = sum(s.waves_solved
+                           for s in servers.values()) - split_before
+    t_split = _time_waves(
+        split_wave, lambda out: out[ORDERS[0]], waves, passes)
+
+    # --- matched residual quality on the SAME requests ---
+    worst_fleet, worst_split = 0.0, 0.0
+    for d in ORDERS:
+        b = np.asarray(reqs[d], np.float64)
+        worst_fleet = max(worst_fleet,
+                          _relres(factors[d], fleet_out[("m", d)][0], b))
+        worst_split = max(worst_split,
+                          _relres(factors[d], split_out[d], b))
+    assert worst_fleet < RELRES_BAR and worst_split < RELRES_BAR, \
+        (worst_fleet, worst_split)
+
+    ratio = split_dispatches / fleet_dispatches
+    report(f"{len(ORDERS)} orders {ORDERS}: fleet "
+           f"{len(plan.buckets)} bucket(s), {fleet_dispatches} "
+           f"dispatch(es)/wave vs per-order {split_dispatches} "
+           f"({ratio:.1f}x fewer); wave {t_fleet * 1e3:7.3f} ms vs "
+           f"{t_split * 1e3:7.3f} ms ({t_split / t_fleet:4.1f}x)")
+    report(f"matched relres: fleet {worst_fleet:.2e} | per-order "
+           f"{worst_split:.2e} (bar {RELRES_BAR:.0e})")
+    assert ratio >= 3.0, (
+        f"acceptance: the fleet must serve the mixed-order wave in "
+        f">= 3x fewer dispatches than per-order banks, got {ratio:.1f}x")
+
+    point = dict(orders=ORDERS, buckets=len(plan.buckets),
+                 fleet_dispatches=fleet_dispatches,
+                 split_dispatches=split_dispatches,
+                 dispatch_ratio=round(ratio, 2),
+                 fleet_ms_per_wave=round(t_fleet * 1e3, 3),
+                 split_ms_per_wave=round(t_split * 1e3, 3),
+                 relres_fleet=worst_fleet, relres_split=worst_split)
+    if not SMOKE:
+        _record_trajectory(point)
+        report(f"trajectory point appended to {TRAJECTORY}")
+    return point
+
+
+def _record_trajectory(point):
+    traj = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            traj = json.load(f).get("trajectory", [])
+    date = time.strftime("%Y-%m-%d")
+    traj = [p for p in traj if p.get("date") != date] + \
+        [dict(date=date, **point)]
+    with open(TRAJECTORY, "w") as f:
+        json.dump({"bench": "fleet", "trajectory": traj}, f, indent=1)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(print)

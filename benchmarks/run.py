@@ -35,6 +35,8 @@ BENCHES = [
      "benchmarks.bench_bank"),
     ("update", "live bank mutation (in-place replace vs rebuild)",
      "benchmarks.bench_update"),
+    ("fleet", "mixed-order serving (fleet buckets vs per-order banks)",
+     "benchmarks.bench_fleet"),
 ]
 
 

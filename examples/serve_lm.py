@@ -11,7 +11,13 @@ Also demos the paper's serving workload (--serve-solves N): a
 repro.api.Solver holds a triangular factor resident in cyclic device
 storage and a SolveServer serves batched solve requests through the
 same continuous-batching pattern — the steady state is pure device
-work (zero host transfers, zero retraces)."""
+work (zero host transfers, zero retraces).
+
+--serve-fleet takes that one step further (DESIGN.md Sec. 12): the
+model's per-layer factor SPECTRUM (mixed orders) is bucketed by the
+fleet's cost-model planner, and one SolveServer over the SolverFleet
+serves requests addressed by (tenant, order) — one dispatch per
+BUCKET per wave instead of one per order."""
 
 import argparse
 import os
@@ -45,6 +51,10 @@ def main():
                     choices=["fp32", "bf16", "bf16_refine"],
                     help="precision policy for the solve workload "
                          "(bf16_refine: MXU-native sweep, fp32 answers)")
+    ap.add_argument("--serve-fleet", type=int, default=2,
+                    help="serve this many mixed-order solve waves "
+                         "through a planner-bucketed SolverFleet "
+                         "(0 = off)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -93,6 +103,8 @@ def main():
 
     if args.serve_solves:
         serve_solves(args)
+    if args.serve_fleet:
+        serve_fleet(args)
 
 
 def serve_solves(args):
@@ -119,6 +131,45 @@ def serve_solves(args):
           f"(n={n}, precision={policy.name}) in "
           f"{server.panels_solved} panels, {dt:.3f}s — "
           f"factor resident on device, steady state transfer-free")
+
+
+def serve_fleet(args):
+    """The mixed-order tier: a model's whole factor spectrum served
+    through planner-chosen buckets, addressed by (tenant, order)."""
+    from repro import api
+
+    n = args.solve_n
+    orders = [n, n // 2, n // 4]
+    grid = api.make_trsm_mesh(1, 1)
+    plan = api.plan_fleet({d: 1 for d in orders}, grid, k=8)
+    print(f"fleet plan: {len(orders)} orders -> "
+          f"{len(plan.buckets)} bucket(s)")
+    print(plan.table())
+    fleet = api.SolverFleet(grid, plan)
+    rng = np.random.default_rng(2)
+    Ls = {}
+    for d in orders:
+        Ls[d] = (np.tril(rng.standard_normal((d, d)))
+                 + d * np.eye(d)).astype(np.float32)
+        fleet.admit(Ls[d], tenant="lm", tag=d)
+    server = api.SolveServer(fleet, panel_k=8).warmup()
+    t0 = time.time()
+    for _ in range(args.serve_fleet):
+        for d in orders:
+            server.submit(rng.standard_normal((d,)).astype(np.float32),
+                          tenant="lm", tag=d)
+        outs = server.drain()
+    for d in orders:
+        X = outs[("lm", d)][-1]
+        assert X.shape == (d, 1), X.shape
+    jax.block_until_ready(X)
+    dt = time.time() - t0
+    st = fleet.stats()
+    print(f"served {server.requests_served} mixed-order requests "
+          f"({orders}) in {server.waves_solved} bucket dispatches, "
+          f"{dt:.3f}s — per-order serving would have paid "
+          f"{args.serve_fleet * len(orders)}; fleet hit_rate="
+          f"{st['hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,12 @@ One import surface for everything a serving client needs:
 * :class:`FactorBank` — the admission layer (stacked cyclic storage,
   hoisted phase 1, cyclic ingestion from the on-grid factor
   producers).
+* :class:`SolverFleet` / :func:`plan_fleet` — the mixed-order,
+  multi-tenant tier (DESIGN.md Sec. 12): a cost-model-driven capacity
+  planner buckets factor orders (zero-padding small orders into shared
+  banks where the modeled padding overhead is bought back by the saved
+  dispatch), and the fleet routes admits/solves by ``(tenant, order)``
+  with cross-tenant LRU slot reclamation.
 * :func:`trsm` — one-shot solves through the same compiled-program
   cache; :func:`solver_for` — the spec -> compiled-program mapping.
 
@@ -33,6 +39,8 @@ stable spelling for scripts and downstream users.
 
 from repro.core import trsm  # noqa: F401
 from repro.core.bank import FactorBank  # noqa: F401
+from repro.core.fleet import (  # noqa: F401
+    BucketPlan, FleetHandle, FleetPlan, SolverFleet, plan_fleet)
 from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
 from repro.core.precision import (  # noqa: F401
     PRESETS, PrecisionPolicy)

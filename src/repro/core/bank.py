@@ -167,6 +167,7 @@ class FactorBank:
         self._stacks: tuple | None = None
         self._slot_ids: dict[int, object] = {}
         self._updaters: dict[tuple, object] = {}
+        self.updates_dispatched = 0    # compiled scatter dispatches
         self.capacity = capacity
         if capacity is not None:
             if capacity < 1:
@@ -252,11 +253,34 @@ class FactorBank:
                            NamedSharding(self.grid.mesh, P(None, *spec)))
             for shape, dt, spec in self._roles())
 
-    def _check_square(self, L, ndim: int) -> None:
-        if L.ndim != ndim or L.shape[-2:] != (self.n, self.n):
+    def _check_square(self, L, ndim: int, order: int | None = None) -> None:
+        d = self.n if order is None else order
+        if L.ndim != ndim or L.shape[-2:] != (d, d):
             lead = "(M, " if ndim == 3 else "("
-            raise ValueError(f"factor must be {lead}{self.n}, {self.n}), "
+            raise ValueError(f"factor must be {lead}{d}, {d}), "
                              f"got {L.shape}")
+
+    def _resolve_pad(self, L, pad_to: int | None) -> int | None:
+        """Normalize a padded-admission request: ``pad_to`` must name
+        THIS bank's order (the bucket order the caller was routed to),
+        the incoming factor a smaller (d, d).  Returns the UpdateSpec
+        ``pad_from`` (None when d == n, i.e. no padding needed)."""
+        if pad_to is None:
+            return None
+        if pad_to != self.n:
+            raise ValueError(f"pad_to={pad_to} must equal the bank's "
+                             f"order n={self.n} (route to the right "
+                             f"bucket first)")
+        if self.capacity is None:
+            raise ValueError(
+                "padded admission requires a capacity-allocated bank "
+                "(FactorBank(..., capacity=C)): padding runs inside the "
+                "compiled updater")
+        d = int(L.shape[-1])
+        if L.shape[-2:] != (d, d) or not 1 <= d <= self.n:
+            raise ValueError(f"padded factor must be (d, d) with "
+                             f"1 <= d <= {self.n}, got {L.shape}")
+        return None if d == self.n else d
 
     def _phase1(self, L_lo, stacked: bool = False):
         """Admission-time phase 1: invert the factor's diagonal blocks
@@ -273,17 +297,25 @@ class FactorBank:
             return parts
         return (parts[0], self._phase1(parts[0], stacked)) + parts[1:]
 
-    def admit(self, L) -> int:
+    def admit(self, L, *, pad_to: int | None = None) -> int:
         """Distribute one natural-layout (n, n) factor into the bank
         (the session's fused gather, operator reductions folded in,
         diagonal blocks pre-inverted); returns the factor's bank
         slot.  A capacity-allocated bank fills its LOWEST free slot
         (re-using evicted slots) through the compiled in-place
-        updater; an append-only bank grows by one."""
+        updater; an append-only bank grows by one.
+
+        ``pad_to=n`` admits a SMALLER (d, d) factor into this bank's
+        (n, n) bucket order: the compiled updater embeds it as
+        ``blockdiag(L, I)`` so the inert tail solves to exact zeros and
+        the leading d x k solution block is bit-identical to an
+        unpadded order-d solve at the same n0 (DESIGN.md Sec. 12).
+        Capacity banks only."""
         L = jnp.asarray(L)
-        self._check_square(L, 2)
+        pad_from = self._resolve_pad(L, pad_to)
+        self._check_square(L, 2, order=pad_from)
         if self.capacity is not None:
-            return self._admit_slot(L, "natural")
+            return self._admit_slot(L, "natural", pad_from=pad_from)
         preps = sessionlib._factor_preps(self.grid, self.lower,
                                          self.transpose, self.policy)
         self._append(self._entry(tuple(p(L) for p in preps)))
@@ -380,7 +412,7 @@ class FactorBank:
                 f"live (evict one before admitting)")
         return self._free.pop(0)                  # lowest free slot
 
-    def _admit_slot(self, L, ingest: str) -> int:
+    def _admit_slot(self, L, ingest: str, pad_from: int | None = None) -> int:
         """Capacity admission: fill the lowest free slot through the
         compiled updater.  The slot is only committed once the scatter
         succeeds — a failed build/compile (or an interrupt during the
@@ -388,7 +420,7 @@ class FactorBank:
         leaking it."""
         slot = self._alloc_slot()
         try:
-            self._scatter(slot, L, ingest)
+            self._scatter(slot, L, ingest, pad_from=pad_from)
         except BaseException:
             bisect.insort(self._free, slot)
             raise
@@ -404,7 +436,8 @@ class FactorBank:
             raise ValueError(f"slot {slot} is not live (evicted or "
                              f"never admitted); use admit to fill it")
 
-    def update_spec(self, ingest: str = "natural"):
+    def update_spec(self, ingest: str = "natural", *, chunk: int = 1,
+                    pad_from: int | None = None):
         """The frozen :class:`~repro.core.solver.UpdateSpec` keying
         this bank's compiled in-place updater (== its
         CompiledSolverCache / TRACE_COUNTS key)."""
@@ -416,7 +449,7 @@ class FactorBank:
             method=self.method, n0=self.n0, mode=self._phase1_mode,
             lower=self.lower, transpose=self.transpose,
             block_inv=self.block_inv, bank_width=self.width,
-            ingest=ingest)
+            ingest=ingest, chunk=chunk, pad_from=pad_from)
 
     def _slot_id(self, slot: int):
         sid = self._slot_ids.get(slot)
@@ -424,21 +457,25 @@ class FactorBank:
             sid = self._slot_ids[slot] = self._place_slot_id(slot)
         return sid
 
-    def _scatter(self, slot: int, L, ingest: str) -> None:
+    def _scatter(self, slot: int, L, ingest: str, *, chunk: int = 1,
+                 pad_from: int | None = None) -> None:
         """Run the compiled donated updater: single-factor admission
         pipeline + scatter of every role into the resident stacks.
-        The program is memoized per (ingest, width) on the bank so the
-        per-update host overhead is one dict probe, not an UpdateSpec
-        construction + cache hash (width is in the key only for
-        append-only banks, whose stacks grow; a capacity bank's width
-        never changes)."""
+        The program is memoized per (ingest, width, chunk, pad_from) on
+        the bank so the per-update host overhead is one dict probe, not
+        an UpdateSpec construction + cache hash (width is in the key
+        only for append-only banks, whose stacks grow; a capacity
+        bank's width never changes)."""
         from repro.core import solver as solverlib
-        prog = self._updaters.get((ingest, self.width))
+        memo = (ingest, self.width, chunk, pad_from)
+        prog = self._updaters.get(memo)
         if prog is None:
-            prog = solverlib.updater_for(self.update_spec(ingest),
-                                         self.cache)
-            self._updaters[(ingest, self.width)] = prog
+            prog = solverlib.updater_for(
+                self.update_spec(ingest, chunk=chunk, pad_from=pad_from),
+                self.cache)
+            self._updaters[memo] = prog
         self._stacks = prog.update(self.stacks(), self._slot_id(slot), L)
+        self.updates_dispatched += 1
 
     def place_factor(self, L):
         """Pin a natural-layout replacement factor on device
@@ -450,7 +487,7 @@ class FactorBank:
                               NamedSharding(self.grid.mesh,
                                             P(None, None)))
 
-    def replace(self, slot: int, L) -> int:
+    def replace(self, slot: int, L, *, pad_to: int | None = None) -> int:
         """Refresh live ``slot`` IN PLACE with a new natural-layout
         (n, n) factor: one compiled program re-runs the admission
         pipeline for this factor alone (fused distribution gather +
@@ -458,12 +495,46 @@ class FactorBank:
         scatters all factor roles into the resident stacks with the
         stack buffers donated — zero retraces, zero host round trips,
         no re-stacking, no occupancy change (DESIGN.md Sec. 11).
-        Returns the slot."""
+        ``pad_to=n`` refreshes with a smaller (d, d) factor embedded as
+        ``blockdiag(L, I)``, exactly as :meth:`admit`.  Returns the
+        slot."""
         L = L if isinstance(L, jax.Array) else jnp.asarray(L)
-        self._check_square(L, 2)
+        pad_from = self._resolve_pad(L, pad_to)
+        self._check_square(L, 2, order=pad_from)
         self._check_live(slot)
-        self._scatter(slot, L, "natural")
+        self._scatter(slot, L, "natural", pad_from=pad_from)
         return slot
+
+    def replace_run(self, start: int, Ls, *, pad_to: int | None = None
+                    ) -> range:
+        """Refresh a CONTIGUOUS RUN of live slots
+        ``start .. start + u - 1`` with a stacked (u, d, d) factor
+        batch in ONE compiled dispatch (``UpdateSpec.chunk = u``):
+        stacked gather + stacked phase 1 + a single
+        ``dynamic_update_slice`` into the donated resident stacks —
+        where a per-slot loop would pay u dispatches
+        (the ``refresh_banks`` stacked-parameter path, DESIGN.md
+        Sec. 11).  Capacity banks only.  Returns the refreshed slot
+        range."""
+        if self.capacity is None:
+            raise ValueError(
+                "replace_run requires a capacity-allocated bank "
+                "(FactorBank(..., capacity=C))")
+        Ls = Ls if isinstance(Ls, jax.Array) else jnp.asarray(Ls)
+        pad_from = self._resolve_pad(Ls, pad_to)
+        self._check_square(Ls, 3, order=pad_from)
+        u = int(Ls.shape[0])
+        if u < 1:
+            raise ValueError("replace_run needs at least one factor")
+        for slot in range(start, start + u):
+            self._check_live(slot)
+        if u == 1:
+            self._scatter(start, jax.lax.squeeze(Ls, (0,)), "natural",
+                          pad_from=pad_from)
+        else:
+            self._scatter(start, Ls, "natural", chunk=u,
+                          pad_from=pad_from)
+        return range(start, start + u)
 
     def replace_cyclic(self, slot: int, L_cyc) -> int:
         """:meth:`replace` for a factor ALREADY in cyclic storage (a

@@ -162,18 +162,38 @@ def w_mm_optimal(n: float, k: float, p: float) -> float:
 
 # --------------------- Recursive TRSM (Sec. IV) ---------------------
 
-def rec_trsm_cost(n: float, k: float, p: float) -> Cost:
+def rec_trsm_cost(n: float, k: float, p: float,
+                  model: str = "paper") -> Cost:
     """Closed-form leading-order cost of Rec-TRSM with the paper's
-    parameter choices, by regime."""
+    parameter choices, by regime.
+
+    ``model="tang2024"`` applies the bandwidth-cost correction of
+    Tang, "A Reexamination of the Communication Bandwidth Cost
+    Analysis of A Parallel Recursive Algorithm for Solving Triangular
+    Systems of Linear Equations" (arXiv:2407.00871): in the recursive
+    regimes the triangular operand is re-communicated across the
+    lg(n/k)-deep recursion over n, so the paper's W under-counts by an
+    n^2-order term — Θ(n^2/sqrt(p)) in the two-large-dimensions regime
+    and the matching (n^2 k / p)^{2/3}-per-level term in the
+    three-large-dimensions regime.  The 1D regime (no recursion over
+    n) is unchanged.  Planner comparisons use the corrected figure so
+    recursion is not over-credited against It-Inv serving
+    (DESIGN.md Sec. 12)."""
+    if model not in ("paper", "tang2024"):
+        raise ValueError(f"unknown rec cost model {model!r}")
+    corrected = model == "tang2024"
     if n < 4 * k / p:      # one large dimension
         return Cost(s=lg(p), w=n * n, f=n * n * k / p)
     if n > 4 * k * math.sqrt(p):   # two large dimensions
-        return Cost(s=math.sqrt(p),
-                    w=n * k * lg(p) / math.sqrt(p),
-                    f=n * n * k / p)
+        w = n * k * lg(p) / math.sqrt(p)
+        if corrected:
+            w += n * n / math.sqrt(p)
+        return Cost(s=math.sqrt(p), w=w, f=n * n * k / p)
     # three large dimensions
-    return Cost(s=(n * p / k) ** (2.0 / 3.0) * lg(p),
-                w=(n * n * k / p) ** (2.0 / 3.0),
+    w = (n * n * k / p) ** (2.0 / 3.0)
+    if corrected:
+        w *= max(lg(n / k), 1.0)   # one optimal-size term per level
+    return Cost(s=(n * p / k) ** (2.0 / 3.0) * lg(p), w=w,
                 f=n * n * k / p)
 
 

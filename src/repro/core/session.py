@@ -452,13 +452,28 @@ def _build_updater(uspec) -> UpdaterProgram:
     grid, key = uspec.grid, uspec
     policy = uspec.policy
     prefactored = uspec.method == "inv"
+    chunked = uspec.chunk > 1
     if uspec.ingest == "natural":
-        preps = _factor_preps(grid, uspec.lower, uspec.transpose, policy)
+        preps = _factor_preps(grid, uspec.lower, uspec.transpose, policy,
+                              stacked=chunked)
     if prefactored:
         ph1 = _build_phase1(grid, uspec.n, uspec.n0, uspec.mode,
-                            policy.accumulate_dtype, uspec.block_inv)
+                            policy.accumulate_dtype, uspec.block_inv,
+                            stacked=chunked)
+
+    def _pad(L):
+        # blockdiag(L, I) at the bucket order: the padded tail rows are
+        # e_i rows, so they solve to the (zero) padded RHS rows exactly,
+        # and the zero coupling blocks keep the leading d x k solution
+        # bit-identical to the unpadded order-d sweep (same n0).
+        d, n = uspec.pad_from, uspec.n
+        tail = jnp.arange(d, n)
+        full = jnp.zeros((n, n), L.dtype).at[:d, :d].set(L)
+        return full.at[tail, tail].set(jnp.ones((), L.dtype))
 
     def roles(L):
+        if uspec.pad_from is not None:
+            L = jax.vmap(_pad)(L) if chunked else _pad(L)
         if uspec.ingest == "natural":
             parts = tuple(p(L) for p in preps)         # (L_lo[, L_hi])
         else:                                          # cyclic: cast only
@@ -472,6 +487,10 @@ def _build_updater(uspec) -> UpdaterProgram:
 
     def update(stacks, slot, L):
         TRACE_COUNTS[key] += 1
+        if chunked:                       # contiguous run of slots
+            return tuple(
+                jax.lax.dynamic_update_slice_in_dim(s, r, slot, axis=0)
+                for s, r in zip(stacks, roles(L)))
         return tuple(jax.lax.dynamic_update_index_in_dim(s, r, slot, 0)
                      for s, r in zip(stacks, roles(L)))
 

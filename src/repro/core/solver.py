@@ -312,6 +312,19 @@ class UpdateSpec:
     ``"cyclic"`` takes a producer's working-layout factor and only
     casts).  Two same-shape banks share one compiled updater, and an
     updater never retraces across slots or occupancy changes.
+
+    ``chunk`` widens the scatter to a CONTIGUOUS RUN of slots: the
+    program takes a (chunk, n, n) stacked factor and writes slots
+    ``start .. start + chunk - 1`` in one
+    ``lax.dynamic_update_slice_in_dim`` — one dispatch where a per-slot
+    loop would pay ``chunk`` (the ``refresh_banks`` stacked-parameter
+    path).  ``pad_from`` declares the incoming factor is a smaller
+    (d, d) order embedded into this bank's (n, n) bucket order: the
+    program zero-pads rows/columns ``d..n-1`` and puts 1 on the padded
+    diagonal (``blockdiag(L, I)`` in natural layout), so the padded
+    tail solves to exact zeros against zero RHS rows and the leading
+    d x k solution block is bit-identical to an unpadded order-d solve
+    at the same n0 (DESIGN.md Sec. 12).
     """
     n: int
     grid: TrsmGrid
@@ -324,6 +337,8 @@ class UpdateSpec:
     block_inv: Callable | None
     bank_width: int              # C — the resident stack width
     ingest: str = "natural"      # "natural" | "cyclic"
+    chunk: int = 1               # contiguous slots written per dispatch
+    pad_from: int | None = None  # incoming factor order d (< n) or None
 
     def __post_init__(self):
         if self.ingest not in ("natural", "cyclic"):
@@ -331,6 +346,18 @@ class UpdateSpec:
         if self.bank_width < 1:
             raise ValueError(f"bank width must be >= 1, got "
                              f"{self.bank_width}")
+        if not 1 <= self.chunk <= self.bank_width:
+            raise ValueError(f"chunk must be in [1, bank_width="
+                             f"{self.bank_width}], got {self.chunk}")
+        if self.pad_from is not None:
+            if not 1 <= self.pad_from < self.n:
+                raise ValueError(f"pad_from must be in [1, n={self.n}), "
+                                 f"got {self.pad_from}")
+            if self.ingest == "cyclic":
+                raise ValueError(
+                    "pad_from requires natural ingestion (a cyclic "
+                    "factor is already in the bucket-order storage "
+                    "layout; zero-pad before distribution instead)")
 
 
 def updater_for(uspec: UpdateSpec, cache=None):
@@ -703,11 +730,29 @@ class SolveServer:
         server.warmup()
         server.submit(b, factor=2)
         outs = server.drain()          # {factor: [X, ...]}
+
+    Constructed over a :class:`~repro.core.fleet.SolverFleet` instead
+    of a Solver, the server routes submits by ``(tenant, order)``
+    through the fleet's planner-chosen buckets (DESIGN.md Sec. 12):
+    one lazy inner per-bucket server, the RHS zero-padded to the
+    bucket order at submit, the solution sliced back to the request's
+    true (d, j) at drain:
+
+        server = SolveServer(fleet, panel_k=16)
+        server.submit(b, tenant="modelA", tag="layer0")
+        outs = server.drain()          # {(tenant, tag): [X, ...]}
     """
 
-    def __init__(self, solver: Solver, panel_k: int):
-        self.solver = solver
+    def __init__(self, solver, panel_k: int):
+        from repro.core.fleet import SolverFleet
+        self.fleet = solver if isinstance(solver, SolverFleet) else None
+        self.solver = None if self.fleet is not None else solver
         self.panel_k = panel_k
+        if self.fleet is not None:
+            # bucket key -> lazy inner server; (bucket key, slot) ->
+            # FIFO of (tenant, tag, order) for slicing drained panels
+            self._servers: dict = {}
+            self._routes: dict = {}
         # lazily keyed by factor index, validated against the solver's
         # CURRENT width — factors admitted after server construction
         # are servable immediately (the next wave's program is simply
@@ -719,6 +764,7 @@ class SolveServer:
         # evicted (re-admission makes the slot live again, so liveness
         # alone cannot catch it)
         self._req_gen: dict[int, int] = {}
+        self._fillers: dict = {}     # dtype -> cached (n, panel_k) zeros
         self.requests_served = 0
         self.waves_solved = 0
 
@@ -736,12 +782,47 @@ class SolveServer:
         """Alias of ``waves_solved`` (a width-1 wave is one panel)."""
         return self.waves_solved
 
-    def submit(self, b, factor: int = 0) -> None:
+    def _server_for(self, key) -> "SolveServer":
+        srv = self._servers.get(key)
+        if srv is None:
+            srv = self._servers[key] = SolveServer(
+                self.fleet.solver(key), self.panel_k)
+        return srv
+
+    def submit(self, b, factor: int = 0, *, tenant: str | None = None,
+               tag: object = None) -> None:
         """Enqueue one RHS block — an (n,) vector or (n, j) columns —
         for bank factor ``factor``.  Submits to an inactive (evicted /
         never-admitted) capacity slot are rejected: its lane is an
         inert zero panel, and solving real traffic against it would
-        silently return garbage."""
+        silently return garbage.
+
+        In fleet mode the request is addressed by ``(tenant, order)``
+        (+ ``tag`` when the tenant holds several factors of one
+        order): the RHS row count IS the order, the fleet routes it to
+        the planned bucket, and the panel is zero-padded to the bucket
+        order (the padded factor's identity tail maps the zero rows to
+        exact-zero solution rows)."""
+        if self.fleet is not None:
+            b = jnp.asarray(b)
+            if b.ndim == 1:
+                b = b[:, None]
+            if b.ndim != 2:
+                raise ValueError(f"rhs must be (d, j), got {b.shape}")
+            h = self.fleet.lookup(tenant if tenant is not None
+                                  else "default",
+                                  order=int(b.shape[0]), tag=tag)
+            n_b = h.bucket[0]
+            if b.shape[0] < n_b:
+                b = jnp.pad(b, ((0, n_b - b.shape[0]), (0, 0)))
+            self._server_for(h.bucket).submit(b, factor=h.slot)
+            self._routes.setdefault((h.bucket, h.slot),
+                                    collections.deque()) \
+                .append((h.tenant, h.tag, h.order))
+            return
+        if tenant is not None or tag is not None:
+            raise ValueError("tenant=/tag= addressing needs a fleet "
+                             "server (SolveServer(SolverFleet, ...))")
         if not 0 <= factor < self.solver.width:
             raise ValueError(f"unknown factor {factor}; bank holds "
                              f"{self.solver.width}")
@@ -765,6 +846,8 @@ class SolveServer:
         self._seq += 1
 
     def pending(self) -> int:
+        if self.fleet is not None:
+            return sum(s.pending() for s in self._servers.values())
         return sum(len(q) for q in self._queues.values())
 
     def cancel(self, factor: int) -> int:
@@ -772,6 +855,11 @@ class SolveServer:
         returns how many were dropped.  The recovery path when a slot
         was evicted with requests still pending: cancel the stranded
         slot, then ``drain`` serves the rest normally."""
+        if self.fleet is not None:
+            raise ValueError(
+                "cancel is slot-addressed; a fleet server has no flat "
+                "slot space (drain, or cancel on the bucket's own "
+                "server)")
         q = self._queues.get(factor)
         if not q:
             return 0
@@ -779,9 +867,24 @@ class SolveServer:
             self._req_gen.pop(seq, None)
         dropped = len(q)
         q.clear()
+        # drop the dead key too, so pending()/drain stop iterating it
+        self._queues.pop(factor, None)
         return dropped
 
+    def _filler(self, dtype):
+        """The all-zero (n, panel_k) panel idle factors ride along as —
+        built ONCE per dtype and reused every wave, instead of
+        reallocating per inactive slot per wave."""
+        panel = self._fillers.get(dtype)
+        if panel is None:
+            panel = self._fillers[dtype] = \
+                jnp.zeros((self.solver.n, self.panel_k), dtype)
+        return panel
+
     def warmup(self) -> "SolveServer":
+        if self.fleet is not None:
+            self.fleet.warmup(self.panel_k)
+            return self
         self.solver.warmup(self.panel_k)
         return self
 
@@ -794,7 +897,26 @@ class SolveServer:
         AFTER submission are an error — even if the slot was re-admitted
         since (a per-slot generation counter catches the turnover):
         their solutions would be garbage against whatever occupies the
-        lane now."""
+        lane now.
+
+        In fleet mode: drains every bucket's inner server and returns
+        ``{(tenant, tag): [X, ...]}``, each solution sliced back to its
+        request's true (d, j) — the padded tail rows are exact zeros
+        and are dropped here."""
+        if self.fleet is not None:
+            results: dict[tuple, list] = {}
+            for key, srv in self._servers.items():
+                for slot, xs in srv.drain().items():
+                    route = self._routes.get((key, slot))
+                    for X in xs:
+                        tenant, tag, d = route.popleft()
+                        results.setdefault((tenant, tag), []).append(
+                            X[:d, :] if d < X.shape[0] else X)
+            self.requests_served = sum(s.requests_served
+                                       for s in self._servers.values())
+            self.waves_solved = sum(s.waves_solved
+                                    for s in self._servers.values())
+            return results
         n, pk = self.solver.n, self.panel_k
         M = self.solver.width
         bank = self.solver.bank
@@ -824,7 +946,7 @@ class SolveServer:
                     if w < pk:
                         panel = jnp.pad(panel, ((0, 0), (0, pk - w)))
                 else:
-                    panel = jnp.zeros((n, pk), self.solver.dtype)
+                    panel = self._filler(self.solver.dtype)
                 panels.append(panel)
             X = self.solver.solve(jnp.stack(panels))
             self.waves_solved += 1

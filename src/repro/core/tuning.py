@@ -271,7 +271,8 @@ def choose_method(n: int, k: int, p: int,
 
 def choose_serving_method(n: int, k: int, grid,
                           machine: cm.Machine | None = None,
-                          n0: int | None = None):
+                          n0: int | None = None,
+                          rec_model: str = "paper"):
     """Auto-dispatch for the HOISTED steady state (a resident factor:
     phase 1 — the Diagonal-Inverter — runs once at admission).
 
@@ -282,11 +283,14 @@ def choose_serving_method(n: int, k: int, grid,
     This variant compares Rec-TRSM against the sweep-only steady cost
     at the serving block size, on the pinned grid.  Returns
     ``(method, n0, modeled_times)`` — n0 is the serving argmin (or the
-    caller's, passed through)."""
+    caller's, passed through).  ``rec_model="tang2024"`` prices the
+    recursive side with the corrected bandwidth term
+    (:func:`repro.core.cost_model.rec_trsm_cost`) — the fleet planner's
+    setting, so recursion is not over-credited."""
     machine = machine or cm.tpu_v5e()
     n0 = n0 if n0 is not None else serving_n0(n, grid)
     t_inv = cm.it_inv_trsm_steady_cost(n, k, n0, grid.p1,
                                        grid.p2).time(machine)
-    t_rec = cm.rec_trsm_cost(n, k, grid.p).time(machine)
+    t_rec = cm.rec_trsm_cost(n, k, grid.p, model=rec_model).time(machine)
     method = "inv" if t_inv <= t_rec else "rec"
     return method, n0, {"inv": t_inv, "rec": t_rec}

@@ -180,6 +180,34 @@ def run_spec_smoke(triples) -> int:
     return 0
 
 
+# a mixed-order manifest spanning planner behaviors: the small orders
+# merge into shared buckets (padding overhead < the saved dispatch),
+# the large ones split out (the modeled n^2-order sweep delta at
+# k=16 dwarfs one dispatch)
+FLEET_MANIFEST = {16384: 2, 8192: 4, 1024: 8, 512: 16, 256: 32, 128: 32}
+
+
+def run_fleet_smoke(p1: int = 2, p2: int = 2, k: int = 16) -> int:
+    """Print the fleet capacity planner's bucket table for a
+    mixed-order manifest — pure cost-model arithmetic on a mesh-less
+    grid, no devices touched (DESIGN.md Sec. 12).  The recursive
+    alternative inside each bucket's method pick is priced with the
+    Tang 2024 bandwidth correction (arXiv:2407.00871)."""
+    from repro.core import fleet as fleetlib
+    from repro.core.solver import plan_grid
+    grid = plan_grid(p1, p2)
+    plan = fleetlib.plan_fleet(FLEET_MANIFEST, grid, k=k)
+    print(f"[fleet] manifest={FLEET_MANIFEST} on p1={p1} p2={p2} "
+          f"(p={grid.p}) k={k} dispatch_s={plan.dispatch_s:.1e}")
+    print(plan.table())
+    orders = sum(len(b.orders) for b in plan.buckets)
+    print(f"[fleet] {orders} orders -> {len(plan.buckets)} bucket(s); "
+          f"per-wave dispatches {orders} -> {len(plan.buckets)}")
+    assert orders == len(FLEET_MANIFEST), (orders, FLEET_MANIFEST)
+    assert len(plan.buckets) < orders, "planner merged nothing"
+    return 0
+
+
 # ------------------------------ runner ------------------------------
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
@@ -266,12 +294,18 @@ def main():
                     help="print the auto-resolved SolveSpec plan for "
                          "each n,k,p triple (default: one per paper "
                          "regime) and exit")
+    ap.add_argument("--fleet", action="store_true",
+                    help="print the fleet capacity planner's bucket "
+                         "table for a mixed-order manifest (pure cost "
+                         "model, no devices) and exit")
     args = ap.parse_args()
 
     if args.spec is not None:
         triples = [tuple(int(x) for x in s.split(","))
                    for s in args.spec] or SPEC_REGIMES
         return run_spec_smoke(triples)
+    if args.fleet:
+        return run_fleet_smoke()
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
     shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")

@@ -27,6 +27,15 @@ TRSM solve serving against a device-resident factor.
     PYTHONPATH=src python -m repro.launch.serve --workload trsm-churn \
         --bank 16 --n 256 --panel-k 16 --requests 256 --updates 32 \
         [--precision bf16_refine] [--cache-stats]
+
+    # mixed-order multi-tenant fleet: the capacity planner buckets a
+    # spectrum of factor orders (zero-padding small orders into shared
+    # banks where the modeled overhead is bought back by the saved
+    # dispatch), requests route by (tenant, order), full buckets
+    # reclaim their coldest slot across tenants (DESIGN.md Sec. 12)
+    PYTHONPATH=src python -m repro.launch.serve --workload trsm-fleet \
+        --n 256 --panel-k 16 --requests 256 --updates 16 \
+        [--precision bf16_refine] [--fleet-stats] [--cache-stats]
 """
 
 from __future__ import annotations
@@ -205,10 +214,102 @@ def serve_trsm_churn(args):
         _print_cache_stats()
 
 
+def serve_trsm_fleet(args):
+    """Mixed-order multi-tenant serving through the fleet tier: the
+    planner buckets the order spectrum, two tenants' factors land in
+    planner-chosen buckets, requests route by (tenant, order), churn
+    refreshes factors in place, and over-subscribed buckets reclaim
+    their coldest slot across tenants (DESIGN.md Sec. 12)."""
+    from repro import api
+    from repro.core import session
+    if args.precision == "fp64_refine":
+        jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    n = args.n
+    dt = np.float64 if args.precision == "fp64_refine" else np.float32
+    orders = [n, n // 2, n // 4]        # the tenants' order spectrum
+
+    def fresh(d):
+        return (np.tril(rng.standard_normal((d, d)))
+                + d * np.eye(d)).astype(dt)
+
+    grid = api.make_trsm_mesh(args.p1, args.p2)
+    # two tenants, two factors per order each
+    manifest = {d: 4 for d in orders}
+    plan = api.plan_fleet(manifest, grid, k=args.panel_k,
+                          precision=args.precision, dtype=None
+                          if args.precision else dt)
+    print(plan.table())
+    fleet = api.SolverFleet(grid, plan)
+    handles = {}
+    for tenant in ("tenant-a", "tenant-b"):
+        for d in orders:
+            for j in range(2):
+                tag = f"layer{orders.index(d)}-{j}"
+                handles[(tenant, tag)] = fleet.admit(
+                    fresh(d), tenant=tenant, tag=tag)
+    server = api.SolveServer(fleet, args.panel_k).warmup()
+
+    solve_keys = [fleet.solver(key).spec_for(args.panel_k)
+                  for key in fleet.buckets]
+    traces0 = sum(session.TRACE_COUNTS[k] for k in solve_keys)
+
+    widths = rng.integers(1, args.panel_k + 1, args.requests)
+    per_wave = max(args.requests // max(args.updates, 1), 1)
+    keys = list(handles)
+    replaced = reclaimed = 0
+    t0 = time.time()
+    for i, w in enumerate(widths):
+        tenant, tag = keys[i % len(keys)]
+        h = handles[(tenant, tag)]
+        server.submit(rng.standard_normal((h.order, int(w))).astype(dt),
+                      tenant=tenant, tag=tag)
+        if (i + 1) % per_wave == 0:
+            outs = server.drain()
+            jax.block_until_ready([x for xs in outs.values()
+                                   for x in xs])
+            # churn between waves: refresh one factor in place; every
+            # third update over-subscribes a bucket so the fleet
+            # reclaims its coldest slot cross-tenant
+            tenant, tag = keys[replaced % len(keys)]
+            h = handles[(tenant, tag)]
+            fleet.replace(h, fresh(h.order))
+            replaced += 1
+            if replaced % 3 == 0:
+                d = orders[reclaimed % len(orders)]
+                hot = fleet.admit(fresh(d), tenant="tenant-c",
+                                  tag=f"burst{reclaimed}")
+                reclaimed += 1
+                # drop stale handles the reclaim displaced
+                handles = {kt: hh for kt, hh in handles.items()
+                           if hh is not hot and any(
+                               hh is cur for cur in fleet.handles())}
+                handles[("tenant-c", hot.tag)] = hot
+                keys = list(handles)
+    outs = server.drain()
+    jax.block_until_ready([x for xs in outs.values() for x in xs])
+    dt_total = time.time() - t0
+    retraced = sum(session.TRACE_COUNTS[k]
+                   for k in solve_keys) - traces0
+    st = fleet.stats()
+    print(f"served {server.requests_served} mixed-order requests "
+          f"({len(orders)} orders, {len(fleet.buckets)} planned "
+          f"bucket(s)) in {server.waves_solved} bucket-waves, "
+          f"{dt_total:.3f}s; {replaced} in-place refreshes, "
+          f"{st['reclaims']} cross-tenant reclaims; "
+          f"retraces solve={retraced} (steady state: 0) on grid "
+          f"p1={args.p1} p2={args.p2}")
+    if args.fleet_stats:
+        print(fleet.format_stats())
+    if args.cache_stats:
+        _print_cache_stats()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm",
-                    choices=["lm", "trsm", "trsm-bank", "trsm-churn"])
+                    choices=["lm", "trsm", "trsm-bank", "trsm-churn",
+                             "trsm-fleet"])
     ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", default="debug",
@@ -241,6 +342,10 @@ def main():
     ap.add_argument("--cache-stats", action="store_true",
                     help="print compiled-solver cache stats (hits/misses"
                          "/evictions/hit rate) after the drain")
+    ap.add_argument("--fleet-stats", action="store_true",
+                    help="print fleet-wide serving stats (per-bucket "
+                         "occupancy, hit rate, reclaim count) after the "
+                         "drain (trsm-fleet workload)")
     args = ap.parse_args()
 
     if args.workload == "trsm":
@@ -249,6 +354,8 @@ def main():
         return serve_trsm_bank(args)
     if args.workload == "trsm-churn":
         return serve_trsm_churn(args)
+    if args.workload == "trsm-fleet":
+        return serve_trsm_fleet(args)
     if not args.arch:
         ap.error("--arch is required for the lm workload")
 

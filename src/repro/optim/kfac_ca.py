@@ -144,10 +144,39 @@ def _iter_kron_factors(state):
             yield name, side, M
 
 
+def _kron_order_counts(state) -> dict:
+    """{order d: number of Kronecker factors of that order} — the
+    mixed-order manifest the fleet planner prices."""
+    counts: dict[int, int] = {}
+    for _, _, M in _iter_kron_factors(state):
+        d = int(M.shape[-1])
+        counts[d] = counts.get(d, 0) + \
+            (1 if M.ndim == 2 else int(M.shape[0]))
+    return counts
+
+
+def fleet_plan_from_state(state, grid=None, *, k: int = 16,
+                          precision=None, machine=None,
+                          dispatch_s=None, headroom: int = 0):
+    """Price a kfac_ca state's mixed-order factor manifest through the
+    fleet capacity planner (:func:`repro.core.fleet.plan_fleet`) — pure
+    cost-model arithmetic, no devices; a mesh-less
+    ``api.plan_grid(p1, p2)`` works."""
+    from repro.core import fleet as fleetlib
+    from repro.core.grid import make_trsm_mesh
+    grid = grid if grid is not None else make_trsm_mesh(1, 1)
+    kw = {} if dispatch_s is None else {"dispatch_s": dispatch_s}
+    return fleetlib.plan_fleet(_kron_order_counts(state), grid, k=k,
+                               precision=precision, machine=machine,
+                               headroom=headroom, **kw)
+
+
 def factor_banks_from_state(state, *, damping: float = 1e-3,
                             grid=None, precision=None,
                             method: str = "inv", n0: int | None = None,
-                            map_mode: str = "vmap"):
+                            map_mode: str = "vmap",
+                            capacity="auto", fleet=None,
+                            tenant: str = "kfac"):
     """Pool a kfac_ca optimizer state's per-layer Cholesky factors into
     :class:`repro.core.FactorBank`s for batched serving (DESIGN.md
     Sec. 9).
@@ -167,11 +196,65 @@ def factor_banks_from_state(state, *, damping: float = 1e-3,
     list of ``(param_path, side, unit)`` tags (side "A" = output/Gram
     side, "B" = input side; unit indexes stacked 3D parameters, None
     for 2D) — ``manifest[d][i]`` names the factor at bank index i.
+
+    ``capacity`` controls the banks' mutability (DESIGN.md Sec. 11):
+    the default ``"auto"`` allocates each bank at exactly its factor
+    count, so every KFAC bank is live-mutable (replace / evict /
+    re-admit, fleet-reclaimable) with the SAME width — and therefore
+    the same compiled programs — the old append-only banking produced.
+    An int (uniform) or ``{d: C}`` mapping over-allocates churn
+    headroom; ``capacity=None`` restores width-frozen append-only
+    banks.
+
+    ``fleet`` re-targets the banking at the mixed-order tier instead
+    (DESIGN.md Sec. 12): pass a :class:`repro.core.fleet.SolverFleet`
+    (or ``True`` to build one from :func:`fleet_plan_from_state`'s
+    planner output) and every factor is admitted into its
+    planner-chosen bucket under ``tenant`` with its manifest tag.
+    Returns ``(fleet, manifest)`` where ``manifest`` maps each
+    ``(param_path, side, unit)`` tag to its
+    :class:`~repro.core.fleet.FleetHandle`; per-order ``banks[d]``
+    dict consumers are unaffected (the default path is unchanged).
     """
     from repro.core import FactorBank
     from repro.core.grid import make_trsm_mesh
 
     grid = grid if grid is not None else make_trsm_mesh(1, 1)
+
+    if fleet is not None and fleet is not False:
+        from repro.core.fleet import SolverFleet
+        if fleet is True:
+            plan = fleet_plan_from_state(state, grid,
+                                         precision=precision)
+            fleet = SolverFleet(grid, plan)
+        elif not isinstance(fleet, SolverFleet):
+            raise TypeError(f"fleet must be a SolverFleet or True, got "
+                            f"{type(fleet).__name__}")
+        fleet.kfac_damping = damping
+        handles: dict = {}
+        for name, side, M in _iter_kron_factors(state):
+            if M.ndim == 2:
+                handles[(name, side, None)] = fleet.admit(
+                    _damped_chol(M, damping), tenant=tenant,
+                    tag=(name, side, None))
+            else:
+                cs = jax.vmap(lambda m: _damped_chol(m, damping))(M)
+                for u in range(M.shape[0]):
+                    handles[(name, side, u)] = fleet.admit(
+                        cs[u], tenant=tenant, tag=(name, side, u))
+        return fleet, handles
+
+    counts = _kron_order_counts(state)
+
+    def _cap(d):
+        if capacity is None:
+            return None
+        if capacity == "auto":
+            return counts[d]
+        if isinstance(capacity, int):
+            return capacity
+        return capacity[d]
+
     banks: dict[int, FactorBank] = {}
     manifest: dict[int, list] = {}
 
@@ -182,7 +265,8 @@ def factor_banks_from_state(state, *, damping: float = 1e-3,
             banks[d] = FactorBank(grid, d, method=method, n0=n0,
                                   dtype=None if precision is not None
                                   else L.dtype,
-                                  precision=precision, map_mode=map_mode)
+                                  precision=precision, map_mode=map_mode,
+                                  capacity=_cap(d))
             # record the banking-time damping so refresh_banks cannot
             # silently diverge from the factors the manifest describes
             banks[d].kfac_damping = damping
@@ -217,13 +301,40 @@ def refresh_banks(banks, manifest, state, *, damping: float | None = None):
     at banking time: one compiled donated scatter per factor, zero
     retraces, occupancy and slot assignment unchanged — the serving
     side (``Solver.from_bank`` / ``SolveServer``) never notices the
-    swap.  Stacked 3D parameters factorize in one vmapped Cholesky but
-    scatter per unit (u updater dispatches; a batched multi-slot
-    scatter is a noted follow-up).  ``damping`` defaults to the value
-    RECORDED on each bank at banking time, so the refreshed factors
-    stay exactly the ones the manifest describes; pass it explicitly
-    only to re-damp on purpose.  Returns ``banks``.
+    swap.  Stacked 3D parameters factorize in one vmapped Cholesky and
+    — when their manifest slots form a contiguous run in a capacity
+    bank (the banking-time layout) — scatter in ONE chunked dispatch
+    through ``bank.replace_run`` instead of u single-slot dispatches
+    (``UpdateSpec.chunk``, DESIGN.md Sec. 11); non-contiguous or
+    append-only layouts fall back to per-unit replaces.  ``damping``
+    defaults to the value RECORDED on each bank at banking time, so
+    the refreshed factors stay exactly the ones the manifest
+    describes; pass it explicitly only to re-damp on purpose.  Returns
+    ``banks``.
+
+    ``banks`` may also be the :class:`~repro.core.fleet.SolverFleet`
+    returned by ``factor_banks_from_state(..., fleet=...)`` (with its
+    tag -> handle manifest): each factor is then refreshed through its
+    bucket's compiled updater via ``fleet.replace`` — same zero-retrace
+    churn path, planner-chosen buckets.
     """
+    from repro.core.fleet import SolverFleet
+    if isinstance(banks, SolverFleet):
+        damp = damping if damping is not None else \
+            getattr(banks, "kfac_damping", 1e-3)
+        for name, side, M in _iter_kron_factors(state):
+            if M.ndim == 2:
+                h = manifest.get((name, side, None))
+                if h is not None:
+                    banks.replace(h, _damped_chol(M, damp))
+            else:
+                cs = jax.vmap(lambda m: _damped_chol(m, damp))(M)
+                for u in range(M.shape[0]):
+                    h = manifest.get((name, side, u))
+                    if h is not None:
+                        banks.replace(h, cs[u])
+        return banks
+
     index = {d: {tag: i for i, tag in enumerate(tags)}
              for d, tags in manifest.items()}
     for name, side, M in _iter_kron_factors(state):
@@ -239,10 +350,17 @@ def refresh_banks(banks, manifest, state, *, damping: float | None = None):
                 banks[d].replace(slot, _damped_chol(M, damp))
         else:
             cs = jax.vmap(lambda m: _damped_chol(m, damp))(M)
-            for u in range(M.shape[0]):
-                slot = slots.get((name, side, u))
-                if slot is not None:
-                    banks[d].replace(slot, cs[u])
+            run = [slots.get((name, side, u))
+                   for u in range(M.shape[0])]
+            if None not in run and \
+                    getattr(banks[d], "capacity", None) is not None \
+                    and run == list(range(run[0], run[0] + len(run))):
+                # contiguous banking-time layout: ONE chunked dispatch
+                banks[d].replace_run(run[0], cs)
+            else:
+                for u, slot in enumerate(run):
+                    if slot is not None:
+                        banks[d].replace(slot, cs[u])
     return banks
 
 

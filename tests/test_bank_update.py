@@ -310,6 +310,137 @@ def test_update_spec_is_a_cache_key(grid):
         api.updater_for((1, 2))
 
 
+# ----------------------- chunked scatter (Sec. 11) -----------------------
+
+def test_replace_run_refreshes_contiguous_slots_in_one_dispatch(grid):
+    """The chunk-width updater: replace_run scatters a stacked
+    (u, n, n) batch into u contiguous live slots as ONE compiled
+    dispatch (UpdateSpec.chunk = u), where a per-slot loop pays u."""
+    n, C, k = 32, 4, 4
+    Ls, rng = _factors(C, seed=11)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    for L in Ls:
+        bank.admit(L)
+    solver = api.Solver.from_bank(bank).warmup(k)
+    key = solver.spec_for(k)
+    traces = session.TRACE_COUNTS[key]
+
+    fresh, _ = _factors(3, seed=12)
+    before = bank.updates_dispatched
+    assert bank.replace_run(1, fresh) == range(1, 4)
+    assert bank.updates_dispatched == before + 1       # ONE dispatch
+    assert session.TRACE_COUNTS[key] == traces         # no solve retrace
+    uspec = bank.update_spec(chunk=3)
+    assert uspec.chunk == 3 and uspec != bank.update_spec()
+
+    B = rng.standard_normal((C, n, k)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    for i, L in enumerate((Ls[0], fresh[0], fresh[1], fresh[2])):
+        assert _rel(L, X[i], ref[i]) < 1e-4, i
+
+    # the second run re-uses the chunk-3 program: dispatch + no retrace
+    utraces = session.TRACE_COUNTS[uspec]
+    fresh2, _ = _factors(3, seed=13)
+    bank.replace_run(1, fresh2)
+    assert bank.updates_dispatched == before + 2
+    assert session.TRACE_COUNTS[uspec] == utraces
+
+    # a width-1 run degenerates to the plain single-slot updater
+    one, _ = _factors(1, seed=14)
+    bank.replace_run(0, one)
+    X = np.asarray(solver.solve(solver.place_rhs(B)))
+    assert _rel(one[0], X[0], ref[0]) < 1e-4
+
+
+def test_replace_run_validation(grid):
+    n, C = 32, 4
+    Ls, _ = _factors(4, seed=15)
+    bank = api.FactorBank(grid, n, n0=8, capacity=C, dtype=np.float32)
+    for L in Ls:
+        bank.admit(L)
+    with pytest.raises(ValueError, match="out of range"):
+        bank.replace_run(2, Ls[:3])        # run overflows the bank
+    bank.evict(2)
+    with pytest.raises(ValueError, match="not live"):
+        bank.replace_run(1, Ls[:3])        # slot 2 evicted mid-run
+    legacy = api.FactorBank(grid, n, n0=8, dtype=np.float32)
+    legacy.admit_stack(Ls)
+    with pytest.raises(ValueError, match="capacity-allocated"):
+        legacy.replace_run(0, Ls)
+    with pytest.raises(ValueError, match="chunk"):
+        bank.update_spec(chunk=0)
+    with pytest.raises(ValueError, match="chunk"):
+        bank.update_spec(chunk=C + 1)
+
+
+def test_kfac_refresh_stacked_param_single_dispatch(grid):
+    """refresh_banks refreshes a stacked (u, d, d) parameter's u bank
+    slots in ONE chunked dispatch (they are admitted contiguously), so
+    a bank holding {w: 1 slot, stack: u slots} refreshes in 2 dispatches
+    instead of 1 + u."""
+    import importlib
+    kfac = importlib.import_module("repro.optim.kfac_ca")
+    rng = np.random.default_rng(16)
+    params = {"w": jnp.asarray(rng.standard_normal((16, 8)), jnp.float32),
+              "stack": jnp.asarray(rng.standard_normal((3, 16, 8)),
+                                   jnp.float32)}
+    opt = kfac.kfac_ca(min_dim=8)
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)
+    banks, manifest = kfac.factor_banks_from_state(state, grid=grid)
+    # satellite: KFAC banks are live-mutable by default now
+    assert all(b.capacity == b.size for b in banks.values())
+    before = {d: b.updates_dispatched for d, b in banks.items()}
+
+    grads = jax.tree.map(lambda p: -0.2 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)
+    kfac.refresh_banks(banks, manifest, state)
+    # per bank: one dispatch for w's slot + ONE for stack's 3-slot run
+    for d, b in banks.items():
+        assert b.updates_dispatched - before[d] == 2, d
+        assert b.size == 4
+
+    # the refreshed bank serves the current state (spot-check d=16)
+    solver = api.Solver.from_bank(banks[16])
+    B = rng.standard_normal((4, 16, 4)).astype(np.float32)
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)), np.float64)
+    for i, (name, side, unit) in enumerate(manifest[16]):
+        for nm, sd, M in kfac._iter_kron_factors(state):
+            if (nm, sd) == (name, side):
+                Mx = M if unit is None else M[unit]
+                Lc = np.asarray(kfac._damped_chol(Mx, 1e-3), np.float64)
+                assert np.linalg.norm(Lc @ X[i] - ref[i]) \
+                    / np.linalg.norm(ref[i]) < 1e-4, (i, name)
+                break
+
+
+def test_kfac_banks_capacity_modes(grid):
+    """factor_banks_from_state capacity=: "auto" (default) sizes each
+    bank to its order's factor count, an int is a uniform override,
+    None restores append-only width-frozen banks."""
+    import importlib
+    kfac = importlib.import_module("repro.optim.kfac_ca")
+    rng = np.random.default_rng(17)
+    params = {"w": jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)}
+    opt = kfac.kfac_ca(min_dim=8)
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)
+    auto, _ = kfac.factor_banks_from_state(state, grid=grid)
+    assert {d: b.capacity for d, b in auto.items()} == {16: 1, 8: 1}
+    auto[16].evict(0)                      # live-mutable by default
+    wide, _ = kfac.factor_banks_from_state(state, grid=grid, capacity=4)
+    assert {d: b.capacity for d, b in wide.items()} == {16: 4, 8: 4}
+    legacy, _ = kfac.factor_banks_from_state(state, grid=grid,
+                                             capacity=None)
+    assert all(b.capacity is None for b in legacy.values())
+    with pytest.raises(ValueError, match="capacity-allocated"):
+        legacy[16].evict(0)
+
+
 # ------------------------ server slot lifecycle ------------------------
 
 def test_server_rejects_inactive_slots_and_drains_live(grid):

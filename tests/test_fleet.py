@@ -1,0 +1,433 @@
+"""The mixed-order multi-tenant serving tier (DESIGN.md Sec. 12):
+the cost-model-driven capacity planner, padded admission bit-identity,
+fleet routing / lookup / cross-tenant LRU reclamation, the
+zero-transfer/zero-retrace steady state for every precision preset at
+several occupancies, the mixed-order SolveServer front end, and the
+KFAC fleet hookup."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import cost_model as cm
+from repro.core import fleet as fleetlib
+from repro.core import session, tuning
+
+PRESET_CASES = [
+    ("fp32", np.float32, 1e-4),
+    ("bf16", np.float32, 5e-2),
+    ("bf16_refine", np.float32, 1e-4),
+    ("fp64_refine", np.float64, 1e-10),
+]
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return api.make_trsm_mesh(1, 1)
+
+
+def _tri(d, seed=0, dtype=np.float32, lower=True):
+    rng = np.random.default_rng(seed)
+    T = np.tril(rng.standard_normal((d, d))) + d * np.eye(d)
+    return (T if lower else T.T).astype(dtype)
+
+
+def _rel(T, x, b):
+    x = np.asarray(x, np.float64)
+    return np.linalg.norm(T.astype(np.float64) @ x - b) \
+        / np.linalg.norm(b)
+
+
+# ------------------------- the capacity planner -------------------------
+
+def test_plan_fleet_structure_and_routing():
+    """Pure cost-model arithmetic on a mesh-less grid: every manifest
+    order lands in exactly one bucket, the bucket order is its largest
+    member, capacity counts every member factor plus headroom, and the
+    routing map resolves planned AND unplanned orders."""
+    g = api.plan_grid(2, 2)
+    manifest = {16384: 2, 8192: 4, 1024: 8, 512: 16, 256: 32, 128: 32}
+    plan = api.plan_fleet(manifest, g, k=16, headroom=1)
+    covered = {}
+    for b in plan.buckets:
+        assert b.n == max(b.orders)
+        assert b.capacity == sum(b.counts) + 1
+        assert b.method in ("inv", "rec")
+        assert (b.n0 is None) == (b.method == "rec")
+        for d, c in zip(b.orders, b.counts):
+            covered[d] = c
+    assert covered == manifest
+    # the driver of the tentpole: small orders share, so the fleet
+    # serves the manifest in fewer buckets than orders
+    assert 1 < len(plan.buckets) < len(manifest)
+    assert plan.bucket_for(256) is plan.bucket_for(128)
+    # an unplanned order routes to the smallest bucket that fits
+    assert plan.bucket_for(100).n == plan.bucket_for(128).n
+    with pytest.raises(ValueError, match="exceeds every bucket"):
+        plan.bucket_for(1 << 20)
+    assert "bucket n" in plan.table() and "16384" in plan.table()
+
+
+def test_plan_fleet_dispatch_budget_is_the_merge_knob():
+    """dispatch_s is the planner's only merge knob: a zero budget
+    forbids every merge (one bucket per order), a huge budget merges
+    everything into the largest order's bucket."""
+    g = api.plan_grid(1, 1)
+    orders = [512, 256, 128, 64]
+    split = api.plan_fleet(orders, g, k=8, dispatch_s=0.0)
+    assert len(split.buckets) == len(orders)
+    merged = api.plan_fleet(orders, g, k=8, dispatch_s=1e9)
+    assert len(merged.buckets) == 1 and merged.buckets[0].n == 512
+    assert merged.buckets[0].orders == (512, 256, 128, 64)
+    assert merged.buckets[0].capacity == 4
+    # an iterable manifest counts duplicates
+    dup = api.plan_fleet([64, 64, 64], g, k=8)
+    assert dup.buckets[0].counts == (3,)
+
+
+def test_plan_fleet_validation():
+    g = api.plan_grid(1, 1)
+    with pytest.raises(ValueError, match="empty"):
+        api.plan_fleet({}, g)
+    with pytest.raises(ValueError, match=">= 1"):
+        api.plan_fleet({64: 0}, g)
+    with pytest.raises(ValueError, match=">= 1"):
+        api.plan_fleet({0: 3}, g)
+
+
+def test_tang2024_rec_correction():
+    """The planner prices the recursive alternative with the Tang 2024
+    bandwidth correction (arXiv:2407.00871): never cheaper than the
+    paper's count, strictly costlier in the 2D and 3D regimes, and
+    unknown model names are rejected."""
+    p = 64
+    for n, k in [(1 << 14, 1 << 4), (1 << 14, 1 << 10), (1 << 10, 1)]:
+        base = cm.rec_trsm_cost(n, k, p)
+        tang = cm.rec_trsm_cost(n, k, p, model="tang2024")
+        assert tang.w >= base.w and tang.s == base.s and tang.f == base.f
+    # two-large-dimensions regime (n > 4k sqrt(p)): + n^2/sqrt(p) words
+    n, k = 1 << 14, 1 << 4
+    assert cm.rec_trsm_cost(n, k, p, model="tang2024").w \
+        == pytest.approx(cm.rec_trsm_cost(n, k, p).w + n * n / 8.0)
+    # three-large-dimensions regime (4k/p <= n <= 4k sqrt(p)): one
+    # optimal-size bandwidth term per recursion level, lg(n/k) of them
+    n, k = 1 << 14, 1 << 10
+    assert cm.rec_trsm_cost(n, k, p, model="tang2024").w \
+        == pytest.approx(cm.rec_trsm_cost(n, k, p).w * 4.0)
+    with pytest.raises(ValueError, match="model"):
+        cm.rec_trsm_cost(64, 4, 4, model="tang2023")
+    # and the tuner threads the model through
+    g = api.plan_grid(2, 2)
+    m, n0, _ = tuning.choose_serving_method(1 << 12, 16, g,
+                                            rec_model="tang2024")
+    assert m in ("inv", "rec")
+
+
+# --------------------- padded admission bit-identity ---------------------
+
+@pytest.mark.parametrize("lower,transpose", [
+    (True, False), (True, True), (False, False), (False, True)])
+def test_padded_admission_bit_identical_leading_block(grid, lower,
+                                                      transpose):
+    """The satellite-4 contract: admitting an order-d factor into an
+    order-n bucket with pad_to=n (blockdiag(T, I) inside the compiled
+    updater) solves the leading d x k block BIT-IDENTICALLY to an
+    unpadded width-1 bank at the same n0, and the inert tail is exact
+    zeros — for all four lower/upper x transpose variants."""
+    d, n, k, n0 = 16, 32, 4, 8
+    T = _tri(d, seed=d + 2 * lower + transpose, lower=lower)
+    B = np.random.default_rng(3).standard_normal((d, k)) \
+        .astype(np.float32)
+
+    ref_bank = api.FactorBank(grid, d, n0=n0, capacity=1, lower=lower,
+                              transpose=transpose, dtype=np.float32)
+    ref_bank.admit(T)
+    ref_solver = api.Solver.from_bank(ref_bank)
+    Xr = np.asarray(ref_solver.solve(ref_solver.place_rhs(B[None])))[0]
+
+    bucket = api.FactorBank(grid, n, n0=n0, capacity=1, lower=lower,
+                            transpose=transpose, dtype=np.float32)
+    assert bucket.admit(T, pad_to=n) == 0
+    solver = api.Solver.from_bank(bucket)
+    Bp = np.zeros((1, n, k), np.float32)
+    Bp[0, :d] = B
+    Xp = np.asarray(solver.solve(solver.place_rhs(Bp)))[0]
+
+    assert np.array_equal(Xp[:d], Xr), (lower, transpose)
+    assert np.array_equal(Xp[d:], np.zeros((n - d, k), np.float32))
+    # and the padded replace path refreshes through the same program
+    T2 = _tri(d, seed=77, lower=lower)
+    bucket.replace(0, T2, pad_to=n)
+    ref_bank.replace(0, T2)
+    Xr2 = np.asarray(ref_solver.solve(ref_solver.place_rhs(B[None])))[0]
+    Xp2 = np.asarray(solver.solve(solver.place_rhs(Bp)))[0]
+    assert np.array_equal(Xp2[:d], Xr2)
+
+
+def test_padded_admission_validation(grid):
+    bank = api.FactorBank(grid, 32, n0=8, capacity=2, dtype=np.float32)
+    with pytest.raises(ValueError, match="pad_to=16 must equal"):
+        bank.admit(_tri(8), pad_to=16)
+    with pytest.raises(ValueError, match="1 <= d <= 32"):
+        bank.admit(np.zeros((40, 40), np.float32), pad_to=32)
+    legacy = api.FactorBank(grid, 32, n0=8, dtype=np.float32)
+    with pytest.raises(ValueError, match="capacity-allocated"):
+        legacy.admit(_tri(16), pad_to=32)
+    # pad_to == n with a full-order factor is a plain admission
+    assert bank.admit(_tri(32), pad_to=32) == 0
+    assert bank.update_spec(pad_from=16) != bank.update_spec()
+
+
+# ----------------------- routing, LRU, staleness -----------------------
+
+def _mini_fleet(grid, precision="fp32", k=4):
+    plan = api.plan_fleet({32: 2, 16: 2}, grid, k=k,
+                          precision=precision)
+    assert len(plan.buckets) == 1      # tiny orders always merge
+    assert plan.buckets[0].capacity == 4
+    return api.SolverFleet(grid, plan)
+
+
+def test_fleet_admit_lookup_and_stats(grid):
+    fleet = _mini_fleet(grid)
+    dt = np.float32
+    ha = fleet.admit(_tri(16, seed=1, dtype=dt), tenant="a", tag="l0")
+    hb = fleet.admit(_tri(32, seed=2, dtype=dt), tenant="b", tag="l0")
+    ha2 = fleet.admit(_tri(16, seed=3, dtype=dt), tenant="a", tag="l1")
+    assert (ha.slot, hb.slot, ha2.slot) == (0, 1, 2)
+    assert ha.bucket == hb.bucket == (32, fleet.plan.buckets[0].policy)
+    assert (ha.order, hb.order) == (16, 32)
+    assert fleet.lookup("a", order=16, tag="l0") is ha
+    assert fleet.lookup("b", order=32) is hb
+    with pytest.raises(ValueError, match="ambiguous"):
+        fleet.lookup("a", order=16)    # two live order-16 handles
+    with pytest.raises(KeyError, match="no live factor"):
+        fleet.lookup("a", order=8)
+    assert fleet.handles("a") == (ha, ha2)
+    assert len(fleet.handles()) == 3
+    st = fleet.stats()
+    assert st["admits"] == 3 and st["reclaims"] == 0
+    assert st["lookup_hits"] == 2 and st["lookup_misses"] == 1
+    bkey = fleet.buckets[0]
+    assert st["buckets"][bkey]["occupancy"] == 3
+    assert st["buckets"][bkey]["capacity"] == 4
+    assert "hit_rate" in st and "fleet:" in fleet.format_stats()
+
+
+def test_fleet_cross_tenant_lru_reclaim_and_stale_handles(grid):
+    """A full bucket reclaims the least-recently-used live slot ACROSS
+    tenants; the victim's handle goes stale (generation bumped) and
+    every fleet operation through it raises instead of serving the new
+    occupant."""
+    fleet = _mini_fleet(grid)
+    hs = [fleet.admit(_tri(16, seed=i, dtype=np.float32),
+                      tenant=t, tag=i)
+          for i, t in enumerate(["a", "a", "b", "b"])]
+    # touch everything but hs[1] -> hs[1] is the coldest
+    fleet.lookup("a", tag=0)
+    fleet.lookup("b", tag=2)
+    fleet.lookup("b", tag=3)
+    h_new = fleet.admit(_tri(16, seed=9, dtype=np.float32),
+                        tenant="c", tag="hot")
+    assert h_new.slot == hs[1].slot == 1   # the victim's slot, re-used
+    assert h_new.generation == hs[1].generation + 1
+    assert fleet.reclaims == 1
+    assert hs[1] not in fleet.handles()
+    with pytest.raises(KeyError, match="stale handle"):
+        fleet.replace(hs[1], _tri(16, dtype=np.float32))
+    with pytest.raises(KeyError, match="stale handle"):
+        fleet.evict(hs[1])
+    with pytest.raises(KeyError, match="no live factor"):
+        fleet.lookup("a", tag=1)           # victim gone from the index
+    # explicit evict frees the slot without a reclaim
+    fleet.evict(hs[0])
+    assert fleet.bucket(hs[0].bucket).bank.size == 3
+    h_back = fleet.admit(_tri(16, seed=10, dtype=np.float32),
+                         tenant="a", tag=0)
+    assert h_back.slot == hs[0].slot and fleet.reclaims == 1
+
+
+def test_fleet_replace_rejects_order_change(grid):
+    fleet = _mini_fleet(grid)
+    h = fleet.admit(_tri(16, dtype=np.float32), tenant="a")
+    with pytest.raises(ValueError, match="order 32 != admitted"):
+        fleet.replace(h, _tri(32, dtype=np.float32))
+
+
+# ------------------- the steady state (acceptance bar) -------------------
+
+@pytest.mark.parametrize("occupancy", [1, 2, 4])
+@pytest.mark.parametrize("precision,in_dt,rtol", PRESET_CASES)
+def test_fleet_steady_state_zero_transfers_zero_retraces(
+        grid, occupancy, precision, in_dt, rtol):
+    """The tentpole invariant: mixed-order routing, in-place refresh,
+    and cross-tenant LRU reclamation perform zero host<->device
+    transfers and zero retraces — for every precision preset, at
+    occupancies 1, C/2, and C."""
+    k, n_b = 4, 32
+    fleet = _mini_fleet(grid, precision=precision, k=k).warmup(k)
+    bkey = fleet.buckets[0]
+    bank, solver = fleet.bucket(bkey).bank, fleet.solver(bkey)
+    C = bank.capacity
+
+    orders = [16, 32, 16, 32][:occupancy]
+    tenants = ["a", "b", "a", "b"][:occupancy]
+    Ls = [_tri(d, seed=10 + i, dtype=in_dt)
+          for i, d in enumerate(orders)]
+    hs = [fleet.admit(L, tenant=t, tag=i)
+          for i, (L, t) in enumerate(zip(Ls, tenants))]
+    live = {h.slot: (L, h.order) for h, L in zip(hs, Ls)}
+
+    # everything the steady state consumes is placed BEFORE the guard
+    fresh = [_tri(orders[0], seed=50, dtype=in_dt),
+             _tri(orders[-1], seed=51, dtype=in_dt)]
+    placed = [fleet.place_factor(L) for L in fresh]
+    rng = np.random.default_rng(occupancy)
+    Bs = [solver.place_rhs(
+        rng.standard_normal((C, n_b, k)).astype(in_dt))
+        for _ in range(3)]
+    refs = [np.asarray(b) for b in Bs]
+
+    skey = solver.spec_for(k)
+    uspecs = [bank.update_spec(pad_from=16 if d < n_b else None)
+              for d in sorted(set(orders))]
+    traces = [session.TRACE_COUNTS[s] for s in (skey, *uspecs)]
+
+    outs = []
+    with jax.transfer_guard("disallow"):
+        outs.append((solver.solve(Bs[0]), dict(live)))      # routing
+        fleet.replace(hs[0], placed[0])                     # refresh
+        live[hs[0].slot] = (fresh[0], hs[0].order)
+        outs.append((solver.solve(Bs[1]), dict(live)))
+        h_new = fleet.admit(placed[1], tenant="c")          # turnover
+        if occupancy == C:                                  # ...reclaims
+            victim = hs[1]          # coldest: admitted 2nd, never touched
+            assert h_new.slot == victim.slot
+            assert fleet.reclaims == 1
+        else:
+            assert fleet.reclaims == 0
+        live[h_new.slot] = (fresh[1], h_new.order)
+        outs.append((solver.solve(Bs[2]), dict(live)))
+    assert [session.TRACE_COUNTS[s] for s in (skey, *uspecs)] == traces
+
+    if occupancy == C:
+        with pytest.raises(KeyError, match="stale handle"):
+            fleet.replace(hs[1], placed[1])
+    # every live lane solves ITS factor: the leading d x k block of a
+    # padded lane is the order-d solution of the leading d rows
+    for (X, live_then), ref in zip(outs, refs):
+        X = np.asarray(X)
+        for slot, (L, d) in live_then.items():
+            assert _rel(np.asarray(L), X[slot][:d], ref[slot][:d]) \
+                < rtol, (slot, precision, occupancy)
+
+
+# ----------------------- mixed-order serving front -----------------------
+
+def test_solve_server_fleet_mode_routes_by_tenant_and_order(grid):
+    """SolveServer over a SolverFleet: requests route by
+    (tenant, order[, tag]), mixed orders in one submission stream drain
+    as one wave per BUCKET (not per order), and results come back
+    keyed by (tenant, tag) at the request's TRUE order."""
+    fleet = _mini_fleet(grid)
+    dt = np.float32
+    La = _tri(16, seed=1, dtype=dt)
+    Lb = _tri(32, seed=2, dtype=dt)
+    Lc = _tri(16, seed=3, dtype=dt)
+    fleet.admit(La, tenant="a", tag="l0")
+    fleet.admit(Lb, tenant="b", tag="l0")
+    fleet.admit(Lc, tenant="c", tag="l0")
+    server = api.SolveServer(fleet, panel_k=8).warmup()
+
+    rng = np.random.default_rng(4)
+    ba = rng.standard_normal((16, 2)).astype(dt)
+    bb = rng.standard_normal((32, 3)).astype(dt)
+    bc = rng.standard_normal((16,)).astype(dt)      # 1-D lifts to (d, 1)
+    server.submit(ba, tenant="a", tag="l0")
+    server.submit(bb, tenant="b", tag="l0")
+    server.submit(bc, tenant="c", tag="l0")
+    assert server.pending() == 3
+    outs = server.drain()
+    assert server.pending() == 0
+    assert set(outs) == {("a", "l0"), ("b", "l0"), ("c", "l0")}
+    assert outs[("a", "l0")][0].shape == (16, 2)
+    assert outs[("b", "l0")][0].shape == (32, 3)
+    assert outs[("c", "l0")][0].shape == (16, 1)
+    assert _rel(La, outs[("a", "l0")][0], ba) < 1e-4
+    assert _rel(Lb, outs[("b", "l0")][0], bb) < 1e-4
+    assert _rel(Lc, outs[("c", "l0")][0], bc[:, None]) < 1e-4
+    # one bucket -> the three mixed-order requests drained in ONE wave
+    assert server.waves_solved == 1 and server.requests_served == 3
+
+    with pytest.raises(KeyError, match="no live factor"):
+        server.submit(ba, tenant="zz")
+    with pytest.raises(ValueError, match="fleet"):
+        server.cancel(0)
+    plain = api.SolveServer(
+        api.Solver.from_bank(fleet.bucket(fleet.buckets[0]).bank), 8)
+    with pytest.raises(ValueError, match="fleet"):
+        plain.submit(np.zeros((32, 1), dt), tenant="a")
+
+
+# ----------------------------- KFAC hookup -----------------------------
+
+def test_kfac_fleet_retarget_and_refresh(grid):
+    """factor_banks_from_state(fleet=True) banks the whole mixed-order
+    Kronecker spectrum in the fleet's planned buckets; refresh_banks
+    retargets the in-place churn path at the fleet handles."""
+    import importlib
+    kfac = importlib.import_module("repro.optim.kfac_ca")
+    rng = np.random.default_rng(7)
+    params = {"w": jnp.asarray(rng.standard_normal((16, 8)), jnp.float32),
+              "stack": jnp.asarray(rng.standard_normal((2, 16, 8)),
+                                   jnp.float32)}
+    opt = kfac.kfac_ca(min_dim=8)
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)
+
+    plan = kfac.fleet_plan_from_state(state, grid, k=4)
+    assert {d for b in plan.buckets for d in b.orders} == {16, 8}
+    fleet, handles = kfac.factor_banks_from_state(state, grid=grid,
+                                                  fleet=True)
+    assert isinstance(fleet, api.SolverFleet)
+    # one handle per (param, side, unit): w is 2D (unit None), stack
+    # contributes 2 units per side
+    assert len(handles) == 6
+    assert {(side, unit) for _, side, unit in handles} \
+        == {("A", None), ("B", None), ("A", 0), ("A", 1),
+            ("B", 0), ("B", 1)}
+    assert {h.order for h in handles.values()} == {16, 8}
+
+    grads = jax.tree.map(lambda p: -0.2 * jnp.ones_like(p), params)
+    _, state, _ = opt.update(grads, state, params)
+    assert kfac.refresh_banks(fleet, handles, state) is fleet
+
+    # each handle now serves the CURRENT state's damped factor
+    # (spot-check the 2D param's A side — the only 2D/A entry)
+    nm_w, _, M_w = next((nm, sd, M) for nm, sd, M
+                        in kfac._iter_kron_factors(state)
+                        if M.ndim == 2 and sd == "A")
+    h = handles[(nm_w, "A", None)]
+    solver = fleet.solver(h.bucket)
+    C, n_b = solver.width, h.bucket[0]
+    B = np.zeros((C, n_b, 4), np.float32)
+    B[h.slot, :h.order] = rng.standard_normal((h.order, 4))
+    ref = B.copy()
+    X = np.asarray(solver.solve(solver.place_rhs(B)), np.float64)
+    Lc = np.asarray(kfac._damped_chol(M_w, 1e-3), np.float64)
+    rel = np.linalg.norm(
+        Lc @ X[h.slot][:h.order] - ref[h.slot][:h.order]) \
+        / np.linalg.norm(ref[h.slot][:h.order])
+    assert rel < 1e-4, rel
+    with pytest.raises(TypeError, match="fleet"):
+        kfac.factor_banks_from_state(state, grid=grid, fleet="yes")

@@ -293,6 +293,67 @@ def test_bank_slot_lifecycle(_lifecycle_bank, ops, seed):
         np.testing.assert_allclose(X[slot], ref[slot] / c, atol=1e-5)
 
 
+@pytest.fixture(scope="module")
+def _pad_banks():
+    """Width-1 capacity banks shared by every hypothesis example,
+    keyed by (order, lower, transpose) and built lazily — each
+    example replaces the resident factor through the compiled updater
+    instead of recompiling (n=16 is the bucket order, n0=4 divides
+    every sampled d, so padded and unpadded runs share a blocking)."""
+    from repro import api
+    grid = api.make_trsm_mesh(1, 1)
+    banks = {}
+
+    def get(d, lower, transpose):
+        key = (d, lower, transpose)
+        bank = banks.get(key)
+        if bank is None:
+            bank = banks[key] = api.FactorBank(
+                grid, d, n0=4, capacity=1, lower=lower,
+                transpose=transpose, dtype=np.float32)
+        return bank
+
+    return get
+
+
+@given(d=st.sampled_from([4, 8, 12]), lower=st.booleans(),
+       transpose=st.booleans(), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=24, deadline=None)
+def test_padded_bucket_solve_bit_identical(_pad_banks, d, lower,
+                                           transpose, seed):
+    """DESIGN.md Sec. 12 padding contract, property-tested: admitting
+    an order-d factor into an order-n bucket with pad_to=n solves the
+    leading d x k block BIT-IDENTICALLY to an unpadded width-1 order-d
+    bank at the same n0, with an exact-zero tail — across orders,
+    lower/upper, transpose, and random factors."""
+    from repro import api
+    n, k = 16, 3
+    rng = np.random.default_rng(seed)
+    T = np.tril(rng.standard_normal((d, d))) + d * np.eye(d)
+    T = (T if lower else T.T).astype(np.float32)
+    B = rng.standard_normal((d, k)).astype(np.float32)
+
+    ref_bank = _pad_banks(d, lower, transpose)
+    bucket = _pad_banks(n, lower, transpose)
+    if ref_bank.size:
+        ref_bank.replace(0, T)
+    else:
+        ref_bank.admit(T)
+    if bucket.size:
+        bucket.replace(0, T, pad_to=n)
+    else:
+        bucket.admit(T, pad_to=n)
+
+    ref_solver = api.Solver.from_bank(ref_bank)
+    Xr = np.asarray(ref_solver.solve(ref_solver.place_rhs(B[None])))[0]
+    solver = api.Solver.from_bank(bucket)
+    Bp = np.zeros((1, n, k), np.float32)
+    Bp[0, :d] = B
+    Xp = np.asarray(solver.solve(solver.place_rhs(Bp)))[0]
+    np.testing.assert_array_equal(Xp[:d], Xr)
+    np.testing.assert_array_equal(Xp[d:], np.zeros((n - d, k)))
+
+
 def test_cost_model_monotonicity():
     """More processors never increases per-processor flop cost; latency
     of It-Inv never beats log^2 p."""
