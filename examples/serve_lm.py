@@ -17,7 +17,13 @@ work (zero host transfers, zero retraces).
 model's per-layer factor SPECTRUM (mixed orders) is bucketed by the
 fleet's cost-model planner, and one SolveServer over the SolverFleet
 serves requests addressed by (tenant, order) — one dispatch per
-BUCKET per wave instead of one per order."""
+BUCKET per wave instead of one per order.
+
+--serve-traffic N closes the loop on production serving (DESIGN.md
+Sec. 13): N requests submitted OPEN-loop to an AsyncSolveServer's
+background drain loop — callers get SolveFuture handles back
+immediately and block only on their own result, while waves pack and
+dispatch on the serving thread."""
 
 import argparse
 import os
@@ -51,6 +57,10 @@ def main():
                     choices=["fp32", "bf16", "bf16_refine"],
                     help="precision policy for the solve workload "
                          "(bf16_refine: MXU-native sweep, fp32 answers)")
+    ap.add_argument("--serve-traffic", type=int, default=12,
+                    help="open-loop async solve requests to serve "
+                         "through AsyncSolveServer's background drain "
+                         "loop (0 disables)")
     ap.add_argument("--serve-fleet", type=int, default=2,
                     help="serve this many mixed-order solve waves "
                          "through a planner-bucketed SolverFleet "
@@ -105,6 +115,8 @@ def main():
         serve_solves(args)
     if args.serve_fleet:
         serve_fleet(args)
+    if args.serve_traffic:
+        serve_traffic(args)
 
 
 def serve_solves(args):
@@ -131,6 +143,39 @@ def serve_solves(args):
           f"(n={n}, precision={policy.name}) in "
           f"{server.panels_solved} panels, {dt:.3f}s — "
           f"factor resident on device, steady state transfer-free")
+
+
+def serve_traffic(args):
+    """Async open-loop serving: submit returns a SolveFuture at once;
+    the background drain loop packs fair waves and resolves futures
+    as each wave finalizes (DESIGN.md Sec. 13)."""
+    from repro import api
+
+    n = args.solve_n
+    rng = np.random.default_rng(3)
+    L = (np.tril(rng.standard_normal((n, n)))
+         + n * np.eye(n)).astype(np.float32)
+    solver = api.Solver.from_factor(L, api.make_trsm_mesh(1, 1),
+                                    method="inv",
+                                    precision=args.solve_precision)
+    server = api.AsyncSolveServer(solver, panel_k=8, queue_depth=64,
+                                  slo_ms=100.0).warmup()
+    t0 = time.time()
+    with server:                          # background drain loop
+        futs = [server.submit(
+            jnp.asarray(rng.standard_normal((n,))
+                        .astype(np.float32)),
+            tenant=f"user{i % 3}")        # fair-shared panel
+            for i in range(args.serve_traffic)]
+        outs = [f.result(timeout=60) for f in futs]
+    dt = time.time() - t0
+    st = server.stats()
+    assert all(x.shape == (n, 1) for x in outs)
+    print(f"async-served {st['served']} open-loop requests from "
+          f"{min(args.serve_traffic, 3)} tenants in {st['waves']} "
+          f"waves, {dt:.3f}s — p50 {st['p50_ms']:.2f} ms, p99 "
+          f"{st['p99_ms']:.2f} ms, shed {st['shed']}, "
+          f"{st['slo_violations']} SLO violations")
 
 
 def serve_fleet(args):

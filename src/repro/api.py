@@ -30,6 +30,12 @@ One import surface for everything a serving client needs:
   banks where the modeled padding overhead is bought back by the saved
   dispatch), and the fleet routes admits/solves by ``(tenant, order)``
   with cross-tenant LRU slot reclamation.
+* :class:`AsyncSolveServer` — the open-loop traffic tier (DESIGN.md
+  Sec. 13): a background drain loop over the same wave machinery with
+  bounded per-slot queues, typed :class:`Overloaded` shedding,
+  weighted fair per-tenant packing, and :class:`SolveFuture`
+  completion handles; evict-under-flight surfaces as
+  :class:`StrandedRequestError` through the future.
 * :func:`trsm` — one-shot solves through the same compiled-program
   cache; :func:`solver_for` — the spec -> compiled-program mapping.
 
@@ -46,6 +52,8 @@ from repro.core.precision import (  # noqa: F401
     PRESETS, PrecisionPolicy)
 from repro.core.session import (  # noqa: F401
     CompiledSolverCache, default_cache)
+from repro.core.serving import (  # noqa: F401
+    AsyncSolveServer, Overloaded, SolveFuture)
 from repro.core.solver import (  # noqa: F401
-    Solver, SolveServer, SolveSpec, UpdateSpec, plan_grid, resolve_plan,
-    solver_for, updater_for)
+    Solver, SolveServer, SolveSpec, StrandedRequestError, UpdateSpec,
+    plan_grid, resolve_plan, solver_for, updater_for)

@@ -48,6 +48,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import functools
 import threading
 import warnings
 from typing import Callable
@@ -688,6 +689,36 @@ class Solver:
 
 # ------------------------------ SolveServer ------------------------------
 
+class StrandedRequestError(ValueError):
+    """Queued requests reference a bank slot that was TURNED OVER
+    (evicted — even if re-admitted since) after they were submitted:
+    serving them would silently solve against whatever factor occupies
+    the lane now.  The per-slot generation counter recorded at submit
+    time catches what liveness alone cannot.  A ``ValueError`` subclass
+    so pre-existing callers catching ValueError keep working; the async
+    tier (:mod:`repro.core.serving`) fails the affected
+    :class:`~repro.core.serving.SolveFuture` s with this instead of
+    raising into the drain loop."""
+
+
+@functools.lru_cache(maxsize=4096)
+def static_slice(start: tuple, limit: tuple, squeeze: tuple = ()):
+    """A jitted static slice (+ optional squeeze), cached per bounds.
+
+    Op-by-op ``jax.lax.slice`` (and the ``X[f, :, a:b]`` getitem it
+    underlies) ships its bounds as an int32 operand — one host->device
+    upload per call, which breaks the zero-transfer steady state the
+    serving tier asserts under ``jax.transfer_guard("disallow")``.
+    Baking the bounds into a tiny jitted program moves that cost to a
+    one-time compile; every subsequent call is a transfer-free
+    dispatch.  Wave assembly/extraction cycles through a handful of
+    layouts in steady state, so the cache stays tiny."""
+    def run(A):
+        out = jax.lax.slice(A, start, limit)
+        return jax.lax.squeeze(out, squeeze) if squeeze else out
+    return jax.jit(run)
+
+
 def _pack_wave(queue: collections.deque, panel_k: int) -> list:
     """First-fit pack one panel's worth of requests off the queue.
 
@@ -881,6 +912,50 @@ class SolveServer:
                 jnp.zeros((self.solver.n, self.panel_k), dtype)
         return panel
 
+    def _solve_wave(self, waves: dict) -> dict:
+        """Assemble and dispatch ONE wave: ``{slot: [(seq, b), ...]}``
+        -> ``{slot: [(seq, X), ...]}``, packed order preserved, X the
+        request's (n, j) column block.  Slots absent from ``waves``
+        ride along as cached zero panels; underfilled panels are
+        completed from the same cached filler (a slice of an existing
+        device array, so the steady state stays transfer-free — a
+        fresh ``jnp.pad``/getitem here would upload constants/indices
+        on every wave).  Shared by :meth:`drain` (the synchronous
+        caller-driven path) and the background drain loop of
+        :class:`repro.core.serving.AsyncSolveServer`, which packs its
+        own waves."""
+        n, pk = self.solver.n, self.panel_k
+        panels = []
+        for f in range(self.solver.width):
+            wave = waves.get(f, ())
+            if wave:
+                parts = [b for _, b in wave]
+                w = sum(b.shape[1] for b in parts)
+                if w < pk:
+                    parts.append(static_slice((0, 0), (n, pk - w))(
+                        self._filler(self.solver.dtype)))
+                panel = parts[0] if len(parts) == 1 \
+                    else jnp.concatenate(parts, axis=1)
+            else:
+                panel = self._filler(self.solver.dtype)
+            panels.append(panel)
+        X = self.solver.solve(jnp.stack(panels))
+        self.waves_solved += 1
+        out: dict = {}
+        for f, wave in waves.items():
+            off, xs = 0, []
+            for seq, b in wave:
+                j = b.shape[1]
+                # jitted static slice, not X[f, :, off:...]: both the
+                # getitem spelling and op-by-op lax.slice upload their
+                # bounds as an int32 operand per wave
+                xs.append((seq, static_slice(
+                    (f, 0, off), (f + 1, n, off + j), (0,))(X)))
+                off += j
+            out[f] = xs
+            self.requests_served += len(wave)
+        return out
+
     def warmup(self) -> "SolveServer":
         if self.fleet is not None:
             self.fleet.warmup(self.panel_k)
@@ -917,8 +992,7 @@ class SolveServer:
             self.waves_solved = sum(s.waves_solved
                                     for s in self._servers.values())
             return results
-        n, pk = self.solver.n, self.panel_k
-        M = self.solver.width
+        pk = self.panel_k
         bank = self.solver.bank
         live = self.solver.live_slots()
         live_set = set(live)
@@ -929,7 +1003,7 @@ class SolveServer:
             or any(self._req_gen[seq] != bank.slot_generation(f)
                    for seq, _ in q)))
         if dead:
-            raise ValueError(
+            raise StrandedRequestError(
                 f"pending requests for slot(s) {dead} evicted after "
                 f"submission; drain before evicting a slot, or "
                 f"cancel(factor) to drop the stranded requests")
@@ -937,25 +1011,9 @@ class SolveServer:
         while self.pending():
             waves = {f: _pack_wave(q, pk)
                      for f, q in self._queues.items() if q}
-            panels = []
-            for f in range(M):
-                wave = waves.get(f, [])
-                if wave:
-                    panel = jnp.concatenate([b for _, b in wave], axis=1)
-                    w = panel.shape[1]
-                    if w < pk:
-                        panel = jnp.pad(panel, ((0, 0), (0, pk - w)))
-                else:
-                    panel = self._filler(self.solver.dtype)
-                panels.append(panel)
-            X = self.solver.solve(jnp.stack(panels))
-            self.waves_solved += 1
-            for f, wave in waves.items():
-                off = 0
-                for seq, b in wave:
-                    results[f][seq] = X[f, :, off:off + b.shape[1]]
-                    off += b.shape[1]
+            for f, xs in self._solve_wave(waves).items():
+                for seq, x in xs:
+                    results[f][seq] = x
                     self._req_gen.pop(seq, None)
-                self.requests_served += len(wave)
         return {f: [res[s] for s in sorted(res)]
                 for f, res in results.items()}

@@ -36,6 +36,14 @@ TRSM solve serving against a device-resident factor.
     PYTHONPATH=src python -m repro.launch.serve --workload trsm-fleet \
         --n 256 --panel-k 16 --requests 256 --updates 16 \
         [--precision bf16_refine] [--fleet-stats] [--cache-stats]
+
+    # open-loop async traffic: Poisson arrivals at --rate req/s against
+    # the background drain loop (AsyncSolveServer) — bounded queues,
+    # typed shedding, SolveFuture handles, p50/p99 + goodput against
+    # the --slo-ms latency objective (DESIGN.md Sec. 13)
+    PYTHONPATH=src python -m repro.launch.serve --workload trsm-traffic \
+        --n 256 --panel-k 16 --requests 512 --rate 500 --slo-ms 50 \
+        [--queue-depth 128] [--precision bf16_refine] [--cache-stats]
 """
 
 from __future__ import annotations
@@ -305,11 +313,78 @@ def serve_trsm_fleet(args):
         _print_cache_stats()
 
 
+def serve_trsm_traffic(args):
+    """Open-loop async serving: Poisson arrivals against the
+    background drain loop, futures resolved as waves finalize, tail
+    latency reported against the --slo-ms objective."""
+    from repro import api
+    if args.precision == "fp64_refine":
+        jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    n, M = args.n, min(args.bank, 4)
+    dt = np.float64 if args.precision == "fp64_refine" else np.float32
+    Ls = np.stack([np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+                   for _ in range(M)]).astype(dt)
+    grid = api.make_trsm_mesh(args.p1, args.p2)
+    solver = api.Solver.from_factors(Ls, grid, method=args.method,
+                                     n0=args.n0,
+                                     precision=args.precision)
+    server = api.AsyncSolveServer(
+        solver, args.panel_k, queue_depth=args.queue_depth,
+        slo_ms=args.slo_ms).warmup()
+    width = max(args.panel_k // 4, 1)
+    pool = [jnp.asarray(rng.standard_normal((n, width)).astype(dt))
+            for _ in range(32)]
+    jax.block_until_ready(pool)
+    # prime every wave composition before the clock starts: lazy
+    # first compiles belong to startup, not to the measured traffic
+    per_wave = M * max(args.panel_k // width, 1)
+    for count in range(1, per_wave + 1):
+        for i in range(count):
+            server.submit(pool[i % len(pool)], factor=i % M)
+        while server.pending() or server._inflight:
+            server.step()
+    gaps = rng.exponential(1.0 / args.rate, size=args.requests)
+    shed = 0
+    futs = []
+    t0 = time.monotonic()
+    sched = t0 + np.cumsum(gaps)
+    with server:                       # background drain loop
+        for i, t_i in enumerate(sched):
+            delay = t_i - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            try:
+                futs.append((t_i, server.submit(pool[i % len(pool)],
+                                                factor=i % M)))
+            except api.Overloaded:
+                shed += 1
+        for _, f in futs:
+            f.result(timeout=120)
+    elapsed = time.monotonic() - t0
+    lat = np.asarray([f.completed for _, f in futs]) \
+        - np.asarray([t for t, _ in futs])
+    violations = int((lat * 1e3 > args.slo_ms).sum())
+    policy = solver.policy
+    print(f"served {len(futs)}/{args.requests} open-loop requests "
+          f"(offered {args.rate:.0f} rps, goodput "
+          f"{len(futs) / elapsed:.0f} rps) against {M} factors in "
+          f"{server.stats()['waves']} waves; p50 "
+          f"{np.percentile(lat, 50) * 1e3:.2f} ms p99 "
+          f"{np.percentile(lat, 99) * 1e3:.2f} ms vs SLO "
+          f"{args.slo_ms:.0f} ms ({violations} violations); "
+          f"shed {shed} (queue depth {args.queue_depth}) on grid "
+          f"p1={args.p1} p2={args.p2} n={n} "
+          f"precision={policy.name}")
+    if args.cache_stats:
+        _print_cache_stats()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm",
                     choices=["lm", "trsm", "trsm-bank", "trsm-churn",
-                             "trsm-fleet"])
+                             "trsm-fleet", "trsm-traffic"])
     ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", default="debug",
@@ -332,6 +407,15 @@ def main():
     ap.add_argument("--updates", type=int, default=32,
                     help="in-place bank updates interleaved with the "
                          "waves (trsm-churn workload)")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="offered Poisson arrival rate in req/s "
+                         "(trsm-traffic workload)")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="latency objective: completions slower than "
+                         "this count as SLO violations (trsm-traffic)")
+    ap.add_argument("--queue-depth", type=int, default=128,
+                    help="per-slot bounded queue depth; submits beyond "
+                         "it are shed with Overloaded (trsm-traffic)")
     ap.add_argument("--map-mode", default="vmap",
                     choices=["vmap", "scan"],
                     help="how the bank program maps the factor axis")
@@ -356,6 +440,8 @@ def main():
         return serve_trsm_churn(args)
     if args.workload == "trsm-fleet":
         return serve_trsm_fleet(args)
+    if args.workload == "trsm-traffic":
+        return serve_trsm_traffic(args)
     if not args.arch:
         ap.error("--arch is required for the lm workload")
 

@@ -1,0 +1,85 @@
+"""Shared fixtures: the deterministic serving-loop harness.
+
+Async-serving tests must be reproducible: no background thread, no
+``sleep``, no wall-clock.  The pieces:
+
+* :class:`FakeClock` — a manual clock matching the duck type
+  :class:`repro.core.serving.SystemClock` injects (``monotonic()`` +
+  ``sleep()``); time moves only when the test calls ``advance``.
+* :class:`DrainDriver` — drives an :class:`AsyncSolveServer` whose
+  :meth:`start` was never called: ``step(advance=..)`` runs exactly
+  one wave, ``run_until_idle`` steps until queues and the in-flight
+  pipeline are empty — raising instead of hanging when the server
+  never quiesces.
+
+Tests that DO want the real background thread (lifecycle, stress)
+call ``server.start()``/``with server:`` themselves and are the only
+async tests allowed to block on wall-clock timeouts.
+"""
+
+import pytest
+
+
+class FakeClock:
+    """Manual monotonic clock for deterministic serving tests."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def monotonic(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot rewind a monotonic clock ({dt})")
+        self._t += dt
+        return self._t
+
+    def sleep(self, dt: float) -> None:
+        # a *deterministic* sleep: just advances the fake time
+        self.advance(dt)
+
+
+class DrainDriver:
+    """Single-step driver for an AsyncSolveServer with no thread."""
+
+    def __init__(self, server, clock=None):
+        self.server = server
+        self.clock = clock
+
+    def step(self, advance: float = 0.0) -> int:
+        """One wave (pack + dispatch + pipeline finalize); optionally
+        advance the fake clock first.  Returns requests dispatched."""
+        if advance and self.clock is not None:
+            self.clock.advance(advance)
+        return self.server.step()
+
+    def run_until_idle(self, max_waves: int = 1000,
+                       advance: float = 0.0) -> int:
+        """Step until no queued work and nothing in flight.  Raises
+        AssertionError after ``max_waves`` instead of hanging — a
+        bounded stand-in for 'the loop would have drained this'."""
+        total = 0
+        for _ in range(max_waves):
+            total += self.step(advance)
+            if not self.server.pending() \
+                    and not self.server._inflight:
+                return total
+        raise AssertionError(
+            f"server not idle after {max_waves} waves "
+            f"(pending={self.server.pending()}, "
+            f"inflight={len(self.server._inflight)})")
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()
+
+
+@pytest.fixture
+def drain_driver(fake_clock):
+    """Factory: ``drain_driver(server)`` -> DrainDriver sharing the
+    test's fake clock (pass ``clock=fake_clock`` to the server)."""
+    def make(server):
+        return DrainDriver(server, fake_clock)
+    return make
