@@ -37,6 +37,8 @@ BENCHES = [
      "benchmarks.bench_update"),
     ("fleet", "mixed-order serving (fleet buckets vs per-order banks)",
      "benchmarks.bench_fleet"),
+    ("structure", "structured factors (banded vs dense sweep)",
+     "benchmarks.bench_structure"),
 ]
 
 

@@ -36,6 +36,10 @@ One import surface for everything a serving client needs:
   weighted fair per-tenant packing, and :class:`SolveFuture`
   completion handles; evict-under-flight surfaces as
   :class:`StrandedRequestError` through the future.
+* :class:`FactorStructure` — the block-structure layer (DESIGN.md
+  Sec. 14): a frozen ``dense`` / ``banded`` / ``block_sparse``
+  promise analyzed once at admission; the level-scheduled sweep skips
+  zero blocks and the cost model prices exactly what runs.
 * :func:`trsm` — one-shot solves through the same compiled-program
   cache; :func:`solver_for` — the spec -> compiled-program mapping.
 
@@ -57,3 +61,4 @@ from repro.core.serving import (  # noqa: F401
 from repro.core.solver import (  # noqa: F401
     Solver, SolveServer, SolveSpec, StrandedRequestError, UpdateSpec,
     plan_grid, resolve_plan, solver_for, updater_for)
+from repro.core.structure import FactorStructure  # noqa: F401

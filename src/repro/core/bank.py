@@ -112,7 +112,7 @@ class FactorBank:
                  lower: bool = True, transpose: bool = False,
                  machine=None, block_inv: Callable | None = None,
                  dtype=None, precision=None, map_mode: str = "vmap",
-                 capacity: int | None = None,
+                 capacity: int | None = None, structure=None,
                  cache: CompiledSolverCache | None = None):
         if precision is None and dtype is None:
             dtype = jnp.float32
@@ -124,6 +124,12 @@ class FactorBank:
             raise ValueError(f"bank method must be 'inv' or 'rec', got "
                              f"{method!r} (auto-dispatch is k-dependent; "
                              f"a bank's plan is fixed at admission)")
+        # dense IS the unstructured bank (one cache key, one program)
+        if structure is not None and structure.is_dense:
+            structure = None
+        if structure is not None:
+            structure.validate_for(n, lower=lower, transpose=transpose)
+        self.structure = structure
         self.grid = grid
         self.n = n
         self.method = method
@@ -141,9 +147,12 @@ class FactorBank:
             # agree on the block size) — default: the hoisted-serving
             # argmin, which is LARGER than the session default because
             # the inversion cost leaves the steady state (DESIGN.md
-            # Sec. 9 / tuning.serving_n0).
+            # Sec. 9 / tuning.serving_n0), and which prices the
+            # structure's skipped blocks when one is declared
+            # (Sec. 14).
             from repro.core import tuning
-            self.n0 = n0 if n0 is not None else tuning.serving_n0(n, grid)
+            self.n0 = n0 if n0 is not None else \
+                tuning.serving_n0(n, grid, structure=structure)
             if n % self.n0 or self.n0 % (grid.p1 * grid.p2):
                 raise ValueError(f"n0={self.n0} infeasible for n={n} on "
                                  f"p1={grid.p1}, p2={grid.p2}")
@@ -317,7 +326,9 @@ class FactorBank:
         if self.capacity is not None:
             return self._admit_slot(L, "natural", pad_from=pad_from)
         preps = sessionlib._factor_preps(self.grid, self.lower,
-                                         self.transpose, self.policy)
+                                         self.transpose, self.policy,
+                                         structure=self.structure,
+                                         n0=self.n0)
         self._append(self._entry(tuple(p(L) for p in preps)))
         return self.size - 1
 
@@ -343,7 +354,7 @@ class FactorBank:
                 # the resident stack — no per-slot scatters at all
                 preps = sessionlib._factor_preps(
                     self.grid, self.lower, self.transpose, self.policy,
-                    stacked=True)
+                    stacked=True, structure=self.structure, n0=self.n0)
                 entry = self._entry(tuple(p(Ls) for p in preps),
                                     stacked=True)
                 self._stacks = tuple(
@@ -357,7 +368,9 @@ class FactorBank:
             return [self.admit(Ls[j]) for j in range(M)]
         preps = sessionlib._factor_preps(self.grid, self.lower,
                                          self.transpose, self.policy,
-                                         stacked=True)
+                                         stacked=True,
+                                         structure=self.structure,
+                                         n0=self.n0)
         stacks = self._entry(tuple(p(Ls) for p in preps), stacked=True)
         first = self.size
         self._append_chunk(stacks, Ls.shape[0])
@@ -382,6 +395,12 @@ class FactorBank:
                 "(the reversal/transpose reductions are folded into the "
                 "natural-layout distribution gather; a pre-permuted "
                 "factor cannot carry them)")
+        if self.structure is not None:
+            raise ValueError(
+                "cyclic ingestion into a structured bank is not "
+                "supported: the admission-time block mask is applied "
+                "in natural layout, before distribution (mask the "
+                "factor yourself and use natural admission)")
         L_cyc = jnp.asarray(L_cyc)
         self._check_square(L_cyc, 2)
         if self.capacity is not None:
@@ -449,7 +468,8 @@ class FactorBank:
             method=self.method, n0=self.n0, mode=self._phase1_mode,
             lower=self.lower, transpose=self.transpose,
             block_inv=self.block_inv, bank_width=self.width,
-            ingest=ingest, chunk=chunk, pad_from=pad_from)
+            ingest=ingest, chunk=chunk, pad_from=pad_from,
+            structure=self.structure)
 
     def _slot_id(self, slot: int):
         sid = self._slot_ids.get(slot)

@@ -163,7 +163,7 @@ def w_mm_optimal(n: float, k: float, p: float) -> float:
 # --------------------- Recursive TRSM (Sec. IV) ---------------------
 
 def rec_trsm_cost(n: float, k: float, p: float,
-                  model: str = "paper") -> Cost:
+                  model: str = "paper", structure=None) -> Cost:
     """Closed-form leading-order cost of Rec-TRSM with the paper's
     parameter choices, by regime.
 
@@ -178,7 +178,13 @@ def rec_trsm_cost(n: float, k: float, p: float,
     three-large-dimensions regime.  The 1D regime (no recursion over
     n) is unchanged.  Planner comparisons use the corrected figure so
     recursion is not over-credited against It-Inv serving
-    (DESIGN.md Sec. 12)."""
+    (DESIGN.md Sec. 12).
+
+    ``structure`` is accepted for signature parity with the It-Inv
+    side but priced DENSE: Rec-TRSM has no structure-aware schedule,
+    so crediting it with skipped blocks it cannot skip would bias the
+    planner's dispatch (DESIGN.md Sec. 14)."""
+    del structure  # priced dense — see docstring
     if model not in ("paper", "tang2024"):
         raise ValueError(f"unknown rec cost model {model!r}")
     corrected = model == "tang2024"
@@ -236,14 +242,31 @@ def solve_phase_cost(n: float, k: float, n0: float,
 
 
 def update_phase_cost(n: float, k: float, n0: float,
-                      p1: float, p2: float) -> Cost:
-    """Trailing updates: bcast of the L~ panel + GEMM + allreduce (VII-C)."""
+                      p1: float, p2: float,
+                      structure=None) -> Cost:
+    """Trailing updates: bcast of the L~ panel + GEMM + allreduce (VII-C).
+
+    With a non-dense ``structure`` (a ``FactorStructure``), the sweep
+    skips zero blocks: bandwidth and flops scale by the off-diagonal
+    block fill (nnz_offdiag / (m(m-1)/2), the dense count), and the
+    latency term counts only the columns that have at least one
+    dependent block row — a column with no off-diagonal nonzero skips
+    the update AND both collectives (DESIGN.md Sec. 14)."""
     m = n / n0
     p = p1 * p1 * p2
     w = (m - 1) * (4 * (n * n0 - n) / (p1 * p1) * ind(p2)
                    + 4 * n0 * k / (p1 * p2) * ind(p1))
-    return Cost(s=(m - 1) * lg(p), w=w,
-                f=(m - 1) * k * n * n0 / (p1 * p1 * p2))
+    s = (m - 1) * lg(p)
+    f = (m - 1) * k * n * n0 / (p1 * p1 * p2)
+    if structure is not None and not structure.is_dense:
+        from repro.core.structure import analyze
+        info = analyze(structure, int(n), int(n0))
+        mi = info.m
+        dense_off = mi * (mi - 1) / 2.0
+        fill = info.nnz_offdiag / dense_off if dense_off else 0.0
+        cols = info.update_cols / (mi - 1.0) if mi > 1 else 0.0
+        w, f, s = w * fill, f * fill, s * cols
+    return Cost(s=s, w=w, f=f)
 
 
 def it_inv_trsm_cost(n: float, k: float, n0: float, p1: float, p2: float,
@@ -255,13 +278,16 @@ def it_inv_trsm_cost(n: float, k: float, n0: float, p1: float, p2: float,
 
 
 def it_inv_trsm_steady_cost(n: float, k: float, n0: float,
-                            p1: float, p2: float) -> Cost:
+                            p1: float, p2: float,
+                            structure=None) -> Cost:
     """Per-solve It-Inv cost in the HOISTED steady state (DESIGN.md
     Secs. 9-10): the Diagonal-Inverter ran once at factor admission, so
     a resident-factor solve pays only the sweep (solve + update
-    phases)."""
+    phases).  ``structure`` prices the level-scheduled sweep: the solve
+    phase is unchanged (every diagonal block is on its own block row's
+    critical path), the update phase pays only for nonzero blocks."""
     return (solve_phase_cost(n, k, n0, p1, p2)
-            + update_phase_cost(n, k, n0, p1, p2))
+            + update_phase_cost(n, k, n0, p1, p2, structure=structure))
 
 
 # --------------------- Sec. IX comparison table ---------------------

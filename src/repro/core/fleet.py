@@ -74,6 +74,7 @@ class BucketPlan:
     n0: int | None
     merged_s: float              # modeled s/wave serving members here
     split_s: float               # modeled s/wave with per-order banks
+    structure: object | None = None   # FactorStructure (None = dense)
 
     @property
     def key(self) -> tuple:
@@ -117,18 +118,20 @@ class FleetPlan:
 
 
 def _steady_s(n: int, k: int, grid: TrsmGrid, machine,
-              n0: int | None = None) -> float:
+              n0: int | None = None, structure=None) -> float:
     """Modeled steady-state seconds for one order-n, width-k solve on
-    the grid (hoisted It-Inv sweep — the serving configuration)."""
-    n0 = n0 if n0 is not None else tuning.serving_n0(n, grid)
-    return cm.it_inv_trsm_steady_cost(n, k, n0, grid.p1,
-                                      grid.p2).time(machine)
+    the grid (hoisted It-Inv sweep — the serving configuration).
+    ``structure`` prices the level-scheduled sweep's skipped blocks."""
+    n0 = n0 if n0 is not None else tuning.serving_n0(n, grid,
+                                                    structure=structure)
+    return cm.it_inv_trsm_steady_cost(
+        n, k, n0, grid.p1, grid.p2, structure=structure).time(machine)
 
 
 def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
                dtype=None, machine: cm.Machine | None = None,
                dispatch_s: float = DEFAULT_DISPATCH_S,
-               headroom: int = 0) -> FleetPlan:
+               headroom: int = 0, structure=None) -> FleetPlan:
     """Decide the fleet's buckets a priori — pure cost-model
     arithmetic, no compilation, no devices (a mesh-less
     ``plan_grid(p1, p2)`` works).
@@ -145,6 +148,14 @@ def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
     bucket.  Every bucket's method is the Tang-2024-corrected
     rec-vs-inv steady comparison at the bucket order.  ``headroom``
     adds spare capacity slots per bucket (reclaim-free churn room).
+    ``structure`` (a :class:`~repro.core.structure.FactorStructure`)
+    declares the block structure every member factor honors; it prices
+    the It-Inv side of each bucket's method choice (the recursive side
+    stays dense — it cannot skip blocks), picks each bucket's n0 from
+    the structured argmin, and is stamped on the plan so
+    :class:`SolverFleet` builds structured banks.  Padding into a
+    bucket preserves the promise: the pad is a blockdiag(L, I) whose
+    identity tail lives on diagonal blocks, which every mask keeps.
     """
     if hasattr(orders, "items"):
         manifest = {int(d): int(c) for d, c in orders.items()}
@@ -160,15 +171,18 @@ def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
         precision is not None or dtype is not None) \
         else preclib.PRESETS["fp32"]
     machine = machine or cm.tpu_v5e()
+    if structure is not None and structure.is_dense:
+        structure = None
 
     # open buckets: [n_bucket, {order: count}]
     open_buckets: list[list] = []
     for d in sorted(manifest, reverse=True):
         count = manifest[d]
-        own = _steady_s(d, k, grid, machine)
+        own = _steady_s(d, k, grid, machine, structure=structure)
         best, best_extra = None, None
         for b in open_buckets:
-            extra = count * (_steady_s(b[0], k, grid, machine) - own)
+            extra = count * (_steady_s(b[0], k, grid, machine,
+                                       structure=structure) - own)
             if best_extra is None or extra < best_extra:
                 best, best_extra = b, extra
         if best is not None and best_extra <= dispatch_s:
@@ -181,15 +195,19 @@ def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
         orders_desc = tuple(sorted(members, reverse=True))
         counts = tuple(members[d] for d in orders_desc)
         method, n0, _ = tuning.choose_serving_method(
-            n_b, k, grid, machine, rec_model="tang2024")
-        merged_s = _steady_s(n_b, k, grid, machine, n0=n0) + dispatch_s
-        split_s = sum(_steady_s(d, k, grid, machine) + dispatch_s
+            n_b, k, grid, machine, rec_model="tang2024",
+            structure=structure)
+        merged_s = _steady_s(n_b, k, grid, machine, n0=n0,
+                             structure=structure) + dispatch_s
+        split_s = sum(_steady_s(d, k, grid, machine,
+                                structure=structure) + dispatch_s
                       for d in orders_desc)
         buckets.append(BucketPlan(
             n=n_b, policy=policy, capacity=sum(counts) + headroom,
             orders=orders_desc, counts=counts, method=method,
             n0=n0 if method == "inv" else None,
-            merged_s=merged_s, split_s=split_s))
+            merged_s=merged_s, split_s=split_s,
+            structure=structure if method == "inv" else None))
     return FleetPlan(buckets=tuple(buckets), k=k, dispatch_s=dispatch_s)
 
 
@@ -255,7 +273,7 @@ class SolverFleet:
                 grid, bp.n, method=bp.method, n0=bp.n0,
                 lower=lower, transpose=transpose, precision=bp.policy,
                 map_mode=map_mode, capacity=bp.capacity,
-                cache=self.cache)
+                structure=bp.structure, cache=self.cache)
             self._buckets[bp.key] = _Bucket(bp, bank,
                                             Solver.from_bank(bank))
         self._dir: dict[tuple, list[FleetHandle]] = {}  # (tenant,) index

@@ -147,7 +147,7 @@ def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode,
 
 
 def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
-                 accum_dtype=None, unroll=False):
+                 accum_dtype=None, unroll=False, spans=None):
     """Phase 2 (sweep, paper Alg. It-Inv-TRSM lines 3-10) against
     ALREADY-INVERTED diagonal faces Dt (m, n0/p1, n0/p1).
 
@@ -156,7 +156,21 @@ def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
     diagonal blocks every solve is pure steady-state waste) and serve
     with this sweep alone.  ``unroll`` unrolls the m-trip loop at trace
     time — the banked programs use it so XLA sees straight-line batched
-    GEMMs instead of a loop of dynamic slices."""
+    GEMMs instead of a loop of dynamic slices.
+
+    ``spans`` turns the unrolled sweep LEVEL-SCHEDULED (DESIGN.md
+    Sec. 14): one admission-time-computed ``(lo, hi)`` dependent-block
+    range (or None) per source column, from
+    ``repro.core.structure.analyze``.  The cyclic layout keeps every
+    global block row on a CONTIGUOUS local row range (``n0 % p1 == 0``
+    — global row ``g`` lives at local row ``g // p1``), so the
+    trailing update of column i statically narrows to the local rows
+    of blocks [lo, hi): the panel is row-sliced BEFORE the z-allgather
+    (less W, not just fewer flops) and a column with no off-diagonal
+    nonzero block skips its update — and its two collectives —
+    entirely.  Admission masks the factor to the block structure, so
+    any non-dependent block row inside a conservative span multiplies
+    exact zeros.  Trace-time decisions only: requires ``unroll``."""
     m = n // n0
     nl = n // p1
     kl = k // p2
@@ -180,6 +194,23 @@ def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
         Xacc = jax.lax.dynamic_update_slice(Xacc, Xi, (i * a, 0))
         if not update:
             return Bcur, Xacc
+        if spans is not None:
+            # level-scheduled path: static row-span update.  lo >= i+1
+            # always, so every span row is strictly below block i and
+            # the row_g mask of the dense path is vacuous here.
+            lo, hi = spans[i]
+            rl, rows = lo * a, (hi - lo) * a
+            panel = jax.lax.slice(Lloc, (rl, i * b),
+                                  (rl + rows, (i + 1) * b))
+            pg = comm.all_gather(panel, "z", axis=0, tiled=False)
+            pg = jnp.transpose(pg, (1, 2, 0)).reshape(rows, a)
+            upd = comm.psum(
+                jax.lax.dot(pg, Xi, preferred_element_type=acc),
+                "y").astype(ct)
+            Bspan = jax.lax.slice(Bcur, (rl, 0), (rl + rows, kl))
+            Bcur = jax.lax.dynamic_update_slice(Bcur, Bspan - upd,
+                                                (rl, 0))
+            return Bcur, Xacc
         panel = jax.lax.dynamic_slice(Lloc, (0, i * b), (nl, b))
         pg = comm.all_gather(panel, "z", axis=0, tiled=False)  # (p2, nl, b)
         pg = jnp.transpose(pg, (1, 2, 0)).reshape(nl, a)  # cols t' = c*p2+z
@@ -194,9 +225,13 @@ def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
         carry = (Bloc, x0)
         for i in range(m):
             # the final trailing update only touches the discarded
-            # remainder of B; unrolling lets us drop it entirely
-            carry = body(i, carry, update=i + 1 < m)
+            # remainder of B; unrolling lets us drop it entirely —
+            # and a level schedule drops every dependent-free column
+            carry = body(i, carry,
+                         update=i + 1 < m and (spans is None
+                                               or spans[i] is not None))
         return carry[1]
+    assert spans is None, "level-scheduled sweep requires unroll"
     with comm.scope(m):
         _, X = jax.lax.fori_loop(0, m, body, (Bloc, x0))
     return X
@@ -252,17 +287,32 @@ def it_inv_phase1_sharded(grid: TrsmGrid, n: int, n0: int,
 
 
 def it_inv_sweep_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
-                         accum_dtype=None, unroll: bool = True):
+                         accum_dtype=None, unroll: bool = True,
+                         structure=None):
     """Build the (un-jitted) shard_map program for the SWEEP against
     pre-inverted diagonal faces: (L_cyc, Dt, B_cyc) -> X_cyc.
 
     Layouts as :func:`it_inv_trsm_sharded` plus Dt per :data:`SPEC_DT`
     (an :func:`it_inv_phase1_sharded` output).  Mode-independent: the
-    phase-1 scheme only matters when Dt is produced."""
+    phase-1 scheme only matters when Dt is produced.
+
+    ``structure`` (a non-dense
+    :class:`~repro.core.structure.FactorStructure`) compiles the
+    LEVEL-SCHEDULED sweep instead: the admission-time analysis's
+    per-column update spans are baked in as static slice bounds, zero
+    blocks are skipped at trace time, and the loop is force-unrolled
+    (skip decisions need a trace-time i).  Dense/None compiles the
+    byte-identical program this function always built."""
     check_divisibility(n, k, n0, grid)
+    spans = None
+    if structure is not None and not structure.is_dense:
+        from repro.core.structure import analyze
+        spans = analyze(structure, n, n0).spans
+        unroll = True
     body = functools.partial(_sweep_shard, n=n, k=k, n0=n0,
                              p1=grid.p1, p2=grid.p2,
-                             accum_dtype=accum_dtype, unroll=unroll)
+                             accum_dtype=accum_dtype, unroll=unroll,
+                             spans=spans)
     return compat.shard_map(body, mesh=grid.mesh,
                             in_specs=(grid.spec_L(), SPEC_DT,
                                       grid.spec_B()),

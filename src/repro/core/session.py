@@ -213,7 +213,8 @@ def default_cache() -> CompiledSolverCache:
 
 @functools.lru_cache(maxsize=128)
 def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype,
-                stacked: bool = False):
+                stacked: bool = False, structure=None,
+                n0: int | None = None):
     """Jitted L_nat -> L_cyc distribution (shared by both methods: rec
     and inv use the same P("x", ("z","y")) factor layout).  Memoized on
     its full key — including the target dtype, so a refining policy's
@@ -222,13 +223,23 @@ def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype,
     traced program.  ``stacked`` builds the factor-bank variant: the
     SAME fused gather applied to an (M, n, n) stack in one program
     (grid.cyclic_matrix_device permutes the trailing two axes), output
-    sharded P(None, "x", ("z","y"))."""
+    sharded P(None, "x", ("z","y")).
+
+    A non-dense ``structure`` (with its serving block size ``n0`` —
+    both join the memo key) ENFORCES the declared block structure at
+    admission: every element outside the block mask is zeroed (in
+    natural layout, before the gather), which is what makes the
+    level-scheduled sweep's skipped blocks mathematically safe
+    (DESIGN.md Sec. 14)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.structure import apply_block_mask
     p1, p2 = grid.p1, grid.p2
     rev = _needs_reversal(lower, transpose)
 
     def prep(L):
         L = jnp.asarray(L, dtype)
+        if structure is not None and not structure.is_dense:
+            L = apply_block_mask(L, structure, n0)
         return gridlib.cyclic_matrix_device(
             L, p1, p1 * p2, reverse_rows=rev, reverse_cols=rev,
             transpose=transpose)
@@ -238,13 +249,17 @@ def _build_prep(grid: TrsmGrid, lower: bool, transpose: bool, dtype,
 
 
 def _factor_preps(grid: TrsmGrid, lower: bool, transpose: bool,
-                  policy: PrecisionPolicy, stacked: bool = False) -> tuple:
-    """The (storage[, residual]) distribution programs for a policy."""
+                  policy: PrecisionPolicy, stacked: bool = False,
+                  structure=None, n0: int | None = None) -> tuple:
+    """The (storage[, residual]) distribution programs for a policy.
+    Both copies mask to ``structure``: the refinement residual must see
+    the same (masked) operator the sweep solves against."""
     preps = (_build_prep(grid, lower, transpose, policy.storage_dtype,
-                         stacked),)
+                         stacked, structure, n0),)
     if policy.refines:
         preps += (_build_prep(grid, lower, transpose,
-                              policy.residual_dtype, stacked),)
+                              policy.residual_dtype, stacked,
+                              structure, n0),)
     return preps
 
 
@@ -328,10 +343,13 @@ def _build_solver(spec) -> SolverProgram:
             # a factor order with no good power-of-two divisor can pin
             # n0 = 1, and a straight-line m = n sweep would blow up
             # trace/compile time — past the cap the sweep keeps its
-            # fori_loop (still one mapped program).
+            # fori_loop (still one mapped program).  A non-dense
+            # structure compiles the LEVEL-SCHEDULED sweep (static
+            # skip/slice decisions per block column, DESIGN.md
+            # Sec. 14), which needs the unroll and overrides the cap.
             sweep = _map_factors(inv_trsm.it_inv_sweep_sharded(
                 grid, n, k, n0, accum_dtype=accum,
-                unroll=(n // n0) <= 64))
+                unroll=(n // n0) <= 64, structure=spec.structure))
 
             def base_solve(L_pair, B):
                 B_cyc = gridlib.cyclic_rows_device(
@@ -387,7 +405,8 @@ def _build_solver(spec) -> SolverProgram:
                                        reverse=rev)
 
     stacked = bank is not None
-    preps = _factor_preps(grid, lower, transpose, policy, stacked)
+    preps = _factor_preps(grid, lower, transpose, policy, stacked,
+                          spec.structure, n0)
     if prefactored:
         ph1 = _build_phase1(grid, n, n0, resolved_mode, accum, block_inv,
                             stacked)
@@ -455,7 +474,8 @@ def _build_updater(uspec) -> UpdaterProgram:
     chunked = uspec.chunk > 1
     if uspec.ingest == "natural":
         preps = _factor_preps(grid, uspec.lower, uspec.transpose, policy,
-                              stacked=chunked)
+                              stacked=chunked,
+                              structure=uspec.structure, n0=uspec.n0)
     if prefactored:
         ph1 = _build_phase1(grid, uspec.n, uspec.n0, uspec.mode,
                             policy.accumulate_dtype, uspec.block_inv,

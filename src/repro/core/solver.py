@@ -60,6 +60,7 @@ from repro.core import precision as preclib
 from repro.core.bank import FactorBank
 from repro.core.grid import TrsmGrid
 from repro.core.precision import PrecisionPolicy
+from repro.core.structure import FactorStructure
 
 
 # --------------------------- deprecation shims ---------------------------
@@ -100,7 +101,9 @@ def plan_grid(p1: int, p2: int) -> TrsmGrid:
 
 def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
                  n0: int | None = None, machine=None,
-                 hoisted: bool = False) -> tuple[str, int]:
+                 hoisted: bool = False,
+                 structure: FactorStructure | None = None
+                 ) -> tuple[str, int]:
     """The ONE place method/n0 defaults are resolved (pure host-side
     arithmetic, so cache keys are concrete).
 
@@ -113,19 +116,28 @@ def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
     ``n0`` is consumed verbatim from the tuner's frozen
     :class:`~repro.core.tuning.TrsmPlan` for "inv" (``tune_for_grid``
     — or the hoisted-serving argmin ``serving_n0``), and set to the
-    Sec. IV-A base-case size for "rec"."""
+    Sec. IV-A base-case size for "rec".
+
+    ``structure`` (a :class:`~repro.core.structure.FactorStructure`)
+    makes the hoisted dispatch and n0 argmin price exactly the blocks
+    the level-scheduled sweep executes; the recursive alternative is
+    priced dense (our recursion is structure-oblivious), so the
+    comparison stays honest."""
     from repro.core import tuning
+    if structure is not None and structure.is_dense:
+        structure = None
     if method == "auto":
         if hoisted:
             method, h_n0, _ = tuning.choose_serving_method(
-                n, k, grid, machine, n0=n0)
+                n, k, grid, machine, n0=n0, structure=structure)
             if method == "inv" and n0 is None:
                 n0 = h_n0
         else:
             method, _, _ = tuning.choose_method(n, k, grid.p, machine)
     if n0 is None:
         if method == "inv":
-            n0 = tuning.serving_n0(n, grid) if hoisted else \
+            n0 = tuning.serving_n0(n, grid, structure=structure) \
+                if hoisted else \
                 tuning.tune_for_grid(n, k, grid, machine).n0
         else:
             from repro.core import rec_trsm
@@ -156,6 +168,12 @@ class SolveSpec:
       (``None`` = the unbanked one-shot program; M >= 1 = the batched
       program over an M-factor stack) and ``map_mode`` ("vmap" |
       "scan"; normalized to ``None`` when unbanked).
+    * structure — the factor's
+      :class:`~repro.core.structure.FactorStructure` (DESIGN.md
+      Sec. 14).  ``None`` and ``FactorStructure.dense()`` are the SAME
+      key (``__post_init__`` normalizes dense to ``None``), so a
+      dense-structured spec compiles — and bit-identically runs — the
+      exact program the unstructured path always has.
 
     Every field changes the compiled artifact, which is exactly why
     the spec is the cache key: two call sites that build equal specs
@@ -174,6 +192,7 @@ class SolveSpec:
     block_inv: Callable | None = None
     bank_width: int | None = None
     map_mode: str | None = None
+    structure: FactorStructure | None = None
 
     def __post_init__(self):
         if self.method not in ("inv", "rec"):
@@ -189,6 +208,11 @@ class SolveSpec:
             object.__setattr__(self, "map_mode", "vmap")
         if self.map_mode not in (None, "vmap", "scan"):
             raise ValueError(f"unknown map_mode {self.map_mode!r}")
+        # dense IS the unstructured path: normalize so the two spell
+        # the same cache key and compile the same (byte-identical)
+        # program
+        if self.structure is not None and self.structure.is_dense:
+            object.__setattr__(self, "structure", None)
 
     # ------------------------------ queries ------------------------------
 
@@ -218,6 +242,9 @@ class SolveSpec:
                 raise ValueError(
                     f"n0={n0} infeasible for the cyclic layout on "
                     f"p1={self.grid.p1}, p2={self.grid.p2}")
+        if self.structure is not None:
+            self.structure.validate_for(self.n, lower=self.lower,
+                                        transpose=self.transpose)
         return self
 
     # ---------------------------- construction ----------------------------
@@ -231,7 +258,8 @@ class SolveSpec:
              block_inv: Callable | None = None,
              bank_width: int | None = None,
              map_mode: str | None = None,
-             hoisted: bool | None = None) -> "SolveSpec":
+             hoisted: bool | None = None,
+             structure: FactorStructure | None = None) -> "SolveSpec":
         """The a-priori front door: resolve the plan ONCE from the
         Sec. VIII cost model and freeze it into a spec.
 
@@ -248,6 +276,10 @@ class SolveSpec:
         from repro.core import tuning
         if hoisted is None:
             hoisted = bank_width is not None
+        if structure is not None and structure.is_dense:
+            structure = None
+        if structure is not None:
+            structure.validate_for(n, lower=lower, transpose=transpose)
         if grid is None:
             if p is None:
                 raise ValueError("SolveSpec.auto needs grid= or p=")
@@ -259,14 +291,16 @@ class SolveSpec:
             if n0 is None and method == "inv" and not hoisted:
                 n0 = plan.n0                      # the plan, verbatim
         method, n0 = resolve_plan(grid, n, k, method=method, n0=n0,
-                                  machine=machine, hoisted=hoisted)
+                                  machine=machine, hoisted=hoisted,
+                                  structure=structure)
         if precision is None and dtype is None:
             dtype = jnp.float32
         return cls(n=n, k=k, grid=grid,
                    policy=preclib.resolve(precision, dtype),
                    method=method, n0=n0, mode=mode, lower=lower,
                    transpose=transpose, block_inv=block_inv,
-                   bank_width=bank_width, map_mode=map_mode).validate()
+                   bank_width=bank_width, map_mode=map_mode,
+                   structure=structure).validate()
 
     @classmethod
     def from_plan(cls, plan, *, k: int | None = None,
@@ -340,10 +374,21 @@ class UpdateSpec:
     ingest: str = "natural"      # "natural" | "cyclic"
     chunk: int = 1               # contiguous slots written per dispatch
     pad_from: int | None = None  # incoming factor order d (< n) or None
+    structure: FactorStructure | None = None
 
     def __post_init__(self):
         if self.ingest not in ("natural", "cyclic"):
             raise ValueError(f"unknown ingest {self.ingest!r}")
+        if self.structure is not None and self.structure.is_dense:
+            object.__setattr__(self, "structure", None)
+        if self.structure is not None:
+            self.structure.validate_for(self.n, lower=self.lower,
+                                        transpose=self.transpose)
+            if self.ingest == "cyclic":
+                raise ValueError(
+                    "structured banks take natural ingestion only: the "
+                    "admission mask is applied in natural layout, "
+                    "before distribution")
         if self.bank_width < 1:
             raise ValueError(f"bank width must be >= 1, got "
                              f"{self.bank_width}")
@@ -437,13 +482,18 @@ class Solver:
                     lower: bool = True, transpose: bool = False,
                     machine=None, block_inv: Callable | None = None,
                     dtype=None, precision=None, map_mode: str = "vmap",
-                    k_hint: int | None = None, cache=None) -> "Solver":
+                    k_hint: int | None = None,
+                    structure: FactorStructure | None = None,
+                    cache=None) -> "Solver":
         """A width-1 solver around one natural-layout (n, n) factor
         (the former ``TrsmSession``).  ``method="auto"`` resolves the
         algorithm a priori from the cost model at ``k_hint`` RHS
         columns (default n); an unset n0 defaults to the
         hoisted-serving argmin (``tuning.serving_n0`` — phase 1 runs
-        at admission, see DESIGN.md Sec. 9)."""
+        at admission, see DESIGN.md Sec. 9).  ``structure`` declares
+        the factor's block structure (DESIGN.md Sec. 14): admission
+        masks to it, the sweep skips outside it, and the n0 argmin
+        prices it."""
         L = jnp.asarray(L) if dtype is None else jnp.asarray(L, dtype)
         if L.ndim != 2 or L.shape[0] != L.shape[1]:
             raise ValueError(f"factor must be square, got {L.shape}")
@@ -451,13 +501,14 @@ class Solver:
         if method == "auto":
             method, n0 = resolve_plan(grid, n, k_hint or n,
                                       method="auto", n0=n0,
-                                      machine=machine, hoisted=True)
+                                      machine=machine, hoisted=True,
+                                      structure=structure)
         bank = FactorBank(grid, n, method=method, n0=n0, mode=mode,
                           lower=lower, transpose=transpose,
                           machine=machine, block_inv=block_inv,
                           dtype=None if precision is not None else L.dtype,
                           precision=precision, map_mode=map_mode,
-                          cache=cache)
+                          structure=structure, cache=cache)
         bank.admit(L)
         return cls(bank, cache=cache)
 
@@ -467,7 +518,9 @@ class Solver:
                      lower: bool = True, transpose: bool = False,
                      machine=None, block_inv: Callable | None = None,
                      dtype=None, precision=None, map_mode: str = "vmap",
-                     capacity: int | None = None, cache=None) -> "Solver":
+                     capacity: int | None = None,
+                     structure: FactorStructure | None = None,
+                     cache=None) -> "Solver":
         """A width-M solver over an (M, n, n) natural-layout stack,
         admitted in one stacked gather (the former bank construction +
         ``BatchedTrsmSession``).  ``capacity=C`` (>= M) allocates a
@@ -484,7 +537,8 @@ class Solver:
                           dtype=None if precision is not None
                           else Ls.dtype,
                           precision=precision, map_mode=map_mode,
-                          capacity=capacity, cache=cache)
+                          capacity=capacity, structure=structure,
+                          cache=cache)
         bank.admit_stack(Ls)
         return cls(bank, cache=cache)
 
@@ -525,7 +579,8 @@ class Solver:
                           block_inv=spec.block_inv,
                           precision=spec.policy,
                           map_mode=spec.map_mode or "vmap",
-                          capacity=capacity, cache=cache)
+                          capacity=capacity, structure=spec.structure,
+                          cache=cache)
         solver = cls(bank, cache=cache)
         if factors is not None:
             factors = jnp.asarray(factors)
@@ -595,7 +650,7 @@ class Solver:
                          method=b.method, n0=n0, mode=b.mode,
                          lower=b.lower, transpose=b.transpose,
                          block_inv=b.block_inv, bank_width=b.width,
-                         map_mode=b.map_mode)
+                         map_mode=b.map_mode, structure=b.structure)
 
     def program_for(self, k: int):
         """The compiled :class:`~repro.core.session.SolverProgram` for

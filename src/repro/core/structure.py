@@ -1,0 +1,283 @@
+"""Block-structure layer for triangular factors (DESIGN.md Sec. 14).
+
+`FactorStructure` is a frozen, hashable description of WHERE the
+nonzero blocks of a lower-triangular factor live:
+
+  * ``dense``                 — every block at or below the diagonal;
+  * ``banded(bandwidth)``     — element-level band: L[i, j] == 0 when
+                                i - j > bandwidth;
+  * ``block_sparse(mask)``    — explicit boolean block mask at the
+                                mask's own granularity (n / len(mask)).
+
+Following the hoisted phase-1 pattern, structure is analyzed ONCE per
+(structure, n, n0) at admission/plan time — `analyze` is lru-cached
+and everything it returns is static Python data, so the serving sweep
+can make trace-time skip decisions and the steady state stays
+zero-retrace.  The analysis yields:
+
+  * the block-granularity nonzero mask at serving block size n0
+    (coarser/finer masks are OR-coarsened conservatively, diagonal
+    blocks forced present — every diagonal block sits on the critical
+    path of its own block row, so the paper's selective-inversion dial
+    keeps all of phase 1 and spends its selectivity in the sweep);
+  * a per-block-row level schedule (level[i] = 1 + max level of i's
+    prerequisites), a valid topological order of the block dependency
+    DAG — tested by hypothesis in tests/test_structure.py;
+  * per-column update spans: for source column i the half-open range
+    [lo, hi) of dependent block rows, or None when column i has no
+    off-diagonal nonzero block (the sweep then skips the trailing
+    update for i entirely);
+  * nonzero counts feeding the cost model (`cost_model`
+    prices exactly the blocks the sweep executes).
+
+Structure is a *promise* enforced at admission: `apply_block_mask`
+zeroes every element outside the block mask with `jnp.where` (never a
+multiply — 0 * NaN would leak), which makes skipping mathematically
+safe and makes `block_sparse` with a full mask bit-identical to
+`dense`.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FactorStructure", "StructureInfo", "analyze",
+           "apply_block_mask"]
+
+_KINDS = ("dense", "banded", "block_sparse")
+
+
+@dataclass(frozen=True)
+class FactorStructure:
+    """Frozen, hashable block-structure descriptor.
+
+    Participates verbatim in `SolveSpec`/`UpdateSpec` cache keys, so
+    two factors with the same structure share one compiled program.
+    Construct via the classmethods — `FactorStructure.dense()`,
+    `.banded(bw)`, `.block_sparse(mask)` — or `parse` for CLI strings.
+    """
+
+    kind: str = "dense"
+    bandwidth: int | None = None          # banded: element band width
+    mask: tuple | None = None             # block_sparse: nested bools
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(
+                f"structure kind must be one of {_KINDS}, got "
+                f"{self.kind!r}")
+        if self.kind == "banded":
+            if self.bandwidth is None or int(self.bandwidth) < 1:
+                raise ValueError(
+                    "banded structure needs bandwidth >= 1 "
+                    f"(got {self.bandwidth!r})")
+            object.__setattr__(self, "bandwidth", int(self.bandwidth))
+        elif self.bandwidth is not None:
+            raise ValueError(f"{self.kind} structure takes no bandwidth")
+        if self.kind == "block_sparse":
+            m = np.asarray(self.mask, dtype=bool)
+            if m.ndim != 2 or m.shape[0] != m.shape[1] or m.shape[0] < 1:
+                raise ValueError(
+                    f"block_sparse mask must be square 2-D, got shape "
+                    f"{m.shape}")
+            # normalize to nested tuples so the dataclass is hashable
+            # and equality is structural
+            object.__setattr__(
+                self, "mask", tuple(tuple(bool(x) for x in row)
+                                    for row in m))
+        elif self.mask is not None:
+            raise ValueError(f"{self.kind} structure takes no mask")
+
+    # ------------------------- constructors -------------------------
+
+    @classmethod
+    def dense(cls) -> "FactorStructure":
+        return cls("dense")
+
+    @classmethod
+    def banded(cls, bandwidth: int) -> "FactorStructure":
+        return cls("banded", bandwidth=bandwidth)
+
+    @classmethod
+    def block_sparse(cls, mask) -> "FactorStructure":
+        return cls("block_sparse", mask=mask)
+
+    @classmethod
+    def parse(cls, text: str, n: int | None = None) -> "FactorStructure":
+        """Parse a CLI string: ``dense``, ``banded``/``banded:BW``,
+        ``block-sparse``/``block_sparse``.
+
+        Bare ``banded`` defaults to bandwidth n//8 (the bench regime)
+        and bare ``block-sparse`` to a deterministic 8x8 example mask
+        (diagonal + first subdiagonal + one low corner block); both
+        need `n` only for the banded default.
+        """
+        text = text.strip().lower().replace("-", "_")
+        if text == "dense":
+            return cls.dense()
+        if text.startswith("banded"):
+            _, _, bw = text.partition(":")
+            if bw:
+                return cls.banded(int(bw))
+            if n is None:
+                raise ValueError("bare 'banded' needs n for the n//8 "
+                                 "default; use banded:<bandwidth>")
+            return cls.banded(max(1, n // 8))
+        if text == "block_sparse":
+            g = 8
+            m = np.zeros((g, g), dtype=bool)
+            for i in range(g):
+                m[i, i] = True
+                if i:
+                    m[i, i - 1] = True
+            m[g - 1, 0] = True
+            return cls.block_sparse(m)
+        raise ValueError(f"unknown structure {text!r} (want dense, "
+                         "banded[:BW], block-sparse)")
+
+    # --------------------------- queries ----------------------------
+
+    @property
+    def is_dense(self) -> bool:
+        return self.kind == "dense"
+
+    def validate_for(self, n: int, *, lower: bool = True,
+                     transpose: bool = False) -> None:
+        """Check this structure is usable for an order-n factor.
+
+        Non-dense structure is restricted to the plain lower
+        no-transpose path: the level-scheduled sweep walks block rows
+        top-down, and upper/transposed factors reach it through the
+        reversal gather which would silently invalidate the mask.
+        """
+        if self.is_dense:
+            return
+        if not lower or transpose:
+            raise ValueError(
+                "structured factors support lower=True, "
+                "transpose=False only (the reversal gather would "
+                "invalidate the block mask)")
+        if self.kind == "banded" and self.bandwidth >= n:
+            raise ValueError(
+                f"bandwidth {self.bandwidth} >= n {n}: use dense")
+        if self.kind == "block_sparse":
+            g = len(self.mask)
+            if n % g:
+                raise ValueError(
+                    f"block_sparse mask granularity {g} must divide "
+                    f"n={n}")
+
+    def block_mask(self, n: int, n0: int) -> np.ndarray:
+        """(m, m) bool mask at serving granularity n0 (m = n // n0).
+
+        Block (i, j) is True when the factor may hold a nonzero
+        element there.  Diagonal blocks are always True; everything
+        strictly above the diagonal is always False.  A block_sparse
+        mask at a different granularity is OR-coarsened (conservative:
+        a block is kept if ANY overlapping mask cell is set).
+        """
+        if n % n0:
+            raise ValueError(f"n0={n0} must divide n={n}")
+        m = n // n0
+        out = np.zeros((m, m), dtype=bool)
+        ii = np.arange(m)
+        if self.kind == "dense":
+            out = ii[:, None] >= ii[None, :]
+        elif self.kind == "banded":
+            # nearest element pair of block (i, j), j < i, is
+            # (i*n0, (j+1)*n0 - 1): distance (i-j)*n0 - (n0-1)
+            d = ii[:, None] - ii[None, :]
+            out = (d >= 0) & (d * n0 - (n0 - 1) <= self.bandwidth)
+        else:
+            src = np.asarray(self.mask, dtype=bool)
+            g = n // src.shape[0]          # element rows per mask cell
+            for i in range(m):
+                r0, r1 = i * n0, (i + 1) * n0
+                for j in range(i + 1):
+                    c0, c1 = j * n0, (j + 1) * n0
+                    cell = src[r0 // g:(r1 + g - 1) // g,
+                               c0 // g:(c1 + g - 1) // g]
+                    out[i, j] = bool(cell.any())
+        np.fill_diagonal(out, True)
+        return np.tril(out)
+
+    def nnz_blocks(self, n: int, n0: int) -> int:
+        return int(self.block_mask(n, n0).sum())
+
+
+@dataclass(frozen=True)
+class StructureInfo:
+    """Static admission-time analysis of one (structure, n, n0).
+
+    All fields are plain Python data (hashable tuples) — safe to
+    consult at trace time without touching devices.
+    """
+
+    n: int
+    n0: int
+    mask: tuple                       # (m, m) nested bool tuples
+    levels: tuple                     # level[i] per block row
+    spans: tuple                      # per column: (lo, hi) or None
+    nnz_offdiag: int                  # off-diagonal nonzero blocks
+    update_cols: int                  # columns with >= 1 dependent
+
+    @property
+    def m(self) -> int:
+        return self.n // self.n0
+
+    @property
+    def n_levels(self) -> int:
+        return 1 + max(self.levels) if self.levels else 0
+
+    def mask_array(self) -> np.ndarray:
+        return np.asarray(self.mask, dtype=bool)
+
+
+@functools.lru_cache(maxsize=512)
+def analyze(structure: FactorStructure, n: int, n0: int) -> StructureInfo:
+    """Admission-time analysis: block mask, level schedule, update
+    spans, nnz counts.  Pure + lru-cached, mirroring the hoisted
+    phase-1 pattern (compute once, consult forever)."""
+    bm = structure.block_mask(n, n0)
+    m = n // n0
+    levels = np.zeros(m, dtype=int)
+    for i in range(m):
+        deps = np.nonzero(bm[i, :i])[0]
+        if deps.size:
+            levels[i] = 1 + int(levels[deps].max())
+    spans = []
+    for j in range(m):
+        dep = np.nonzero(bm[j + 1:, j])[0]
+        if dep.size:
+            spans.append((j + 1 + int(dep[0]), j + 2 + int(dep[-1])))
+        else:
+            spans.append(None)
+    nnz_off = int(bm.sum() - m)
+    return StructureInfo(
+        n=n, n0=n0,
+        mask=tuple(tuple(bool(x) for x in row) for row in bm),
+        levels=tuple(int(x) for x in levels),
+        spans=tuple(spans),
+        nnz_offdiag=nnz_off,
+        update_cols=sum(1 for s in spans if s is not None),
+    )
+
+
+def apply_block_mask(L, structure: FactorStructure, n0: int):
+    """Zero every element of L outside the structure's block mask.
+
+    Uses `jnp.where`, NOT a multiply: 0 * NaN/Inf would leak garbage
+    into "zero" blocks and a multiply flips -0.0 signs, breaking the
+    full-mask == dense bit-identity contract.  Dense structure returns
+    L untouched (same object — the dense path stays byte-identical).
+    """
+    if structure.is_dense:
+        return L
+    n = L.shape[-1]
+    bm = structure.block_mask(n, n0)
+    elem = np.repeat(np.repeat(bm, n0, axis=0), n0, axis=1)
+    return jnp.where(jnp.asarray(elem), L, jnp.zeros((), L.dtype))

@@ -220,7 +220,7 @@ def tune_for_grid(n: int, k: int, grid,
     return best[1]
 
 
-def serving_n0(n: int, grid) -> int:
+def serving_n0(n: int, grid, structure=None) -> int:
     """Diagonal-block size for the HOISTED steady state (factor banks,
     DESIGN.md Sec. 9).
 
@@ -238,10 +238,35 @@ def serving_n0(n: int, grid) -> int:
     n (n0 = n is the only feasible size, e.g. n = p1^2*p2), m = 1 is
     forced rather than chosen and is returned — there is no hedged
     alternative to decline to pick.  k does not enter: with inversion
-    hoisted, every remaining cost term scales the same way in k."""
+    hoisted, every remaining cost term scales the same way in k.
+
+    With a non-dense ``structure`` the monotone argument breaks: a
+    LARGER block coarsens the mask (OR-coarsening fills in zero
+    blocks), so the sweep skips less.  The structured path argmins the
+    structure-priced steady cost (``cost_model.it_inv_trsm_steady_cost``
+    at a nominal k) over the same hedged feasible set, plus one alpha
+    of dispatch overhead per executed sweep step — a step costs at
+    least one program dispatch even on a 1-processor grid, where every
+    model comm term is zero and a pure flop argmin would otherwise
+    collapse to n0 = 1 (an m-step unrolled sweep of 1x1 blocks).  Ties
+    go to the larger block (fewer sweep steps)."""
     feas = _feasible_n0(n, grid.p1, grid.p2)
     capped = [n0 for n0 in feas if n0 <= n // 2]
-    return max(capped) if capped else max(feas)
+    cands = capped if capped else [max(feas)]
+    if structure is None or structure.is_dense:
+        return max(cands)
+    from repro.core.structure import analyze
+    machine = cm.tpu_v5e()
+    best = None
+    for n0 in sorted(cands, reverse=True):   # ties -> larger block
+        info = analyze(structure, n, n0)
+        t = cm.it_inv_trsm_steady_cost(
+            n, 16, n0, grid.p1, grid.p2, structure=structure
+        ).time(machine)
+        t += machine.alpha * (info.m + info.update_cols)
+        if best is None or t < best[0]:
+            best = (t, n0)
+    return best[1]
 
 
 def tuning_table(n: int, k: int, p: int) -> dict:
@@ -272,7 +297,8 @@ def choose_method(n: int, k: int, p: int,
 def choose_serving_method(n: int, k: int, grid,
                           machine: cm.Machine | None = None,
                           n0: int | None = None,
-                          rec_model: str = "paper"):
+                          rec_model: str = "paper",
+                          structure=None):
     """Auto-dispatch for the HOISTED steady state (a resident factor:
     phase 1 — the Diagonal-Inverter — runs once at admission).
 
@@ -286,11 +312,17 @@ def choose_serving_method(n: int, k: int, grid,
     caller's, passed through).  ``rec_model="tang2024"`` prices the
     recursive side with the corrected bandwidth term
     (:func:`repro.core.cost_model.rec_trsm_cost`) — the fleet planner's
-    setting, so recursion is not over-credited."""
+    setting, so recursion is not over-credited.
+
+    ``structure`` prices the It-Inv side with the level-scheduled
+    sweep's skipped blocks; the recursive side stays priced dense
+    (it cannot skip them), so structured factors shift the dispatch
+    toward "inv" exactly as far as the skips are real."""
     machine = machine or cm.tpu_v5e()
-    n0 = n0 if n0 is not None else serving_n0(n, grid)
-    t_inv = cm.it_inv_trsm_steady_cost(n, k, n0, grid.p1,
-                                       grid.p2).time(machine)
+    n0 = n0 if n0 is not None else serving_n0(n, grid,
+                                              structure=structure)
+    t_inv = cm.it_inv_trsm_steady_cost(n, k, n0, grid.p1, grid.p2,
+                                       structure=structure).time(machine)
     t_rec = cm.rec_trsm_cost(n, k, grid.p, model=rec_model).time(machine)
     method = "inv" if t_inv <= t_rec else "rec"
     return method, n0, {"inv": t_inv, "rec": t_rec}

@@ -25,30 +25,37 @@ def _interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("bt", "bn", "accum_dtype"))
-def trmm(L, X, bt: int = 128, bn: int = 128, accum_dtype=jnp.float32):
+def trmm(L, X, bt: int = 128, bn: int = 128, accum_dtype=jnp.float32,
+         block_mask=None):
     """C = tril(L) @ X (structure-skipping tiled MXU kernel).
 
     ``accum_dtype`` is the MXU accumulation width (scratch +
     preferred_element_type); float32 by default so bf16 operands
-    accumulate at full precision."""
+    accumulate at full precision.  ``block_mask`` (optional
+    (n/bt, n/bt) validity tiles, e.g. ``FactorStructure.block_mask``)
+    skips zero tiles on top of the above-diagonal skip."""
     return _trmm.trmm(L, X, bt=bt, bn=bn, accum_dtype=accum_dtype,
-                      interpret=_interpret())
+                      interpret=_interpret(), block_mask=block_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("accum_dtype",))
-def tri_inv_blocks(Ls, accum_dtype=jnp.float32):
+def tri_inv_blocks(Ls, accum_dtype=jnp.float32, valid=None):
     """Batched lower-triangular inversion (doubling, in-VMEM); level
-    GEMMs accumulate at ``accum_dtype``."""
+    GEMMs accumulate at ``accum_dtype``.  ``valid`` (optional (m,)
+    mask) writes zeros for flagged-out stack entries instead of
+    inverting them."""
     return _tib.tri_inv_blocks(Ls, accum_dtype=accum_dtype,
-                               interpret=_interpret())
+                               interpret=_interpret(), valid=valid)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "accum_dtype"))
-def trsm_substitution(L, B, bn: int = 128, accum_dtype=jnp.float32):
+def trsm_substitution(L, B, bn: int = 128, accum_dtype=jnp.float32,
+                      valid=None):
     """Baseline substitution TRSM (VPU-serial; what the paper replaces).
-    The row recurrence runs at ``accum_dtype``."""
+    The row recurrence runs at ``accum_dtype``.  ``valid`` (optional
+    (m,) mask) skips flagged-out stack entries, writing zeros."""
     return _tsb.trsm_substitution(L, B, bn=bn, accum_dtype=accum_dtype,
-                                  interpret=_interpret())
+                                  interpret=_interpret(), valid=valid)
 
 
 def block_inv_kernel(blocks: jnp.ndarray) -> jnp.ndarray:

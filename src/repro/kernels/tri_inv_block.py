@@ -64,6 +64,19 @@ def _tri_inv_kernel(l_ref, o_ref, *, accum_dtype):
     o_ref[0] = _doubling_inverse(l_ref[0], accum_dtype)
 
 
+def _tri_inv_valid_kernel(v_ref, l_ref, o_ref, *, accum_dtype):
+    """Validity-gated variant: an invalid stack entry (a block the
+    structure's level schedule never touches) writes zeros instead of
+    inverting — no division by its (arbitrary) diagonal."""
+    @pl.when(v_ref[0, 0] != 0)
+    def _inv():
+        o_ref[0] = _doubling_inverse(l_ref[0], accum_dtype)
+
+    @pl.when(v_ref[0, 0] == 0)
+    def _skip():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+
 def _out_sds(shape, dtype, like):
     """ShapeDtypeStruct matching ``like``'s varying-manual-axes so the
     kernel composes inside shard_map bodies."""
@@ -74,19 +87,37 @@ def _out_sds(shape, dtype, like):
 
 
 def tri_inv_blocks(Ls: jnp.ndarray, *, accum_dtype=jnp.float32,
-                   interpret: bool = False):
+                   interpret: bool = False, valid=None):
     """Invert a stack (m, n0, n0) of lower-triangular blocks.
 
     ``accum_dtype``: accumulation width of the doubling-level GEMMs
-    (float32 by default — full MXU accumulation for bf16 operands)."""
+    (float32 by default — full MXU accumulation for bf16 operands).
+
+    ``valid``: optional (m,) validity mask — stack entries flagged 0
+    (blocks a :class:`~repro.core.structure.FactorStructure` schedule
+    never touches) are written as zeros instead of inverted, so their
+    arbitrary diagonals never reach a reciprocal.  ``None`` (default)
+    compiles the exact unconditional kernel."""
     m, n0, n02 = Ls.shape
     assert n0 == n02 and (n0 & (n0 - 1)) == 0, Ls.shape
+    if valid is None:
+        return pl.pallas_call(
+            functools.partial(_tri_inv_kernel,
+                              accum_dtype=jnp.dtype(accum_dtype)),
+            grid=(m,),
+            in_specs=[pl.BlockSpec((1, n0, n0), lambda b: (b, 0, 0))],
+            out_specs=pl.BlockSpec((1, n0, n0), lambda b: (b, 0, 0)),
+            out_shape=_out_sds((m, n0, n0), Ls.dtype, Ls),
+            interpret=interpret,
+        )(Ls)
+    v = jnp.asarray(valid, jnp.int32).reshape(m, 1)
     return pl.pallas_call(
-        functools.partial(_tri_inv_kernel,
+        functools.partial(_tri_inv_valid_kernel,
                           accum_dtype=jnp.dtype(accum_dtype)),
         grid=(m,),
-        in_specs=[pl.BlockSpec((1, n0, n0), lambda b: (b, 0, 0))],
+        in_specs=[pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                  pl.BlockSpec((1, n0, n0), lambda b: (b, 0, 0))],
         out_specs=pl.BlockSpec((1, n0, n0), lambda b: (b, 0, 0)),
         out_shape=_out_sds((m, n0, n0), Ls.dtype, Ls),
         interpret=interpret,
-    )(Ls)
+    )(v, Ls)

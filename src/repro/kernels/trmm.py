@@ -47,6 +47,28 @@ def _trmm_kernel(l_ref, x_ref, o_ref, acc_ref, *, nk: int, accum_dtype):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _trmm_masked_kernel(m_ref, l_ref, x_ref, o_ref, acc_ref, *,
+                        nk: int, accum_dtype):
+    """The structure-skipping variant: one extra (1, 1) validity tile
+    per (i, kk); a zero entry skips the MXU op exactly like the
+    above-diagonal test (DESIGN.md Sec. 14)."""
+    i = pl.program_id(0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((kk <= i) & (m_ref[0, 0] != 0))
+    def _mac():
+        acc_ref[...] += jnp.dot(l_ref[...], x_ref[...],
+                                preferred_element_type=accum_dtype)
+
+    @pl.when(kk == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 def _out_sds(shape, dtype, like):
     vma = getattr(jax.core.get_aval(like), "vma", None)
     if vma:
@@ -55,13 +77,20 @@ def _out_sds(shape, dtype, like):
 
 
 def trmm(L: jnp.ndarray, X: jnp.ndarray, *, bt: int = 128, bn: int = 128,
-         accum_dtype=jnp.float32, interpret: bool = False) -> jnp.ndarray:
+         accum_dtype=jnp.float32, interpret: bool = False,
+         block_mask=None) -> jnp.ndarray:
     """C = tril(L) @ X with L: (n, n), X: (n, k).
 
     ``accum_dtype``: dtype of the VMEM scratch accumulator and the MXU
     partial sums (``preferred_element_type``).  Defaults to float32 —
     the MXU-native accumulation width for bf16/f32 inputs; pass the
-    operand dtype to reproduce a narrow-accumulation GEMM exactly."""
+    operand dtype to reproduce a narrow-accumulation GEMM exactly.
+
+    ``block_mask``: optional (n/bt, n/bt) validity mask at TILE
+    granularity (a ``FactorStructure.block_mask`` when bt == n0).  A
+    zero tile skips the MXU op and its VMEM traffic on top of the
+    above-diagonal skip; ``None`` (the default) compiles the exact
+    dense-triangular kernel unchanged."""
     n, n2 = L.shape
     _, k = X.shape
     assert n == n2 and X.shape[0] == n, (L.shape, X.shape)
@@ -72,17 +101,32 @@ def trmm(L: jnp.ndarray, X: jnp.ndarray, *, bt: int = 128, bn: int = 128,
     ni, nj, nk = n // bt, k // bn, n // bt
 
     grid = (ni, nj, nk)
+    # clamp the k-index for skipped tiles so we never prefetch
+    # out of the triangle (the compute is pl.when-guarded).
+    l_spec = pl.BlockSpec((bt, bt), lambda i, j, kk: (i, jnp.minimum(kk, i)))
+    x_spec = pl.BlockSpec((bt, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j))
+    if block_mask is None:
+        return pl.pallas_call(
+            functools.partial(_trmm_kernel, nk=nk,
+                              accum_dtype=accum_dtype),
+            grid=grid,
+            in_specs=[l_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=_out_sds((n, k), X.dtype, X),
+            scratch_shapes=[pltpu.VMEM((bt, bn), accum_dtype)],
+            interpret=interpret,
+        )(L, X)
+    mask = jnp.asarray(block_mask, jnp.int32)
+    assert mask.shape == (ni, nk), (mask.shape, ni, nk)
     return pl.pallas_call(
-        functools.partial(_trmm_kernel, nk=nk, accum_dtype=accum_dtype),
+        functools.partial(_trmm_masked_kernel, nk=nk,
+                          accum_dtype=accum_dtype),
         grid=grid,
-        in_specs=[
-            # clamp the k-index for skipped tiles so we never prefetch
-            # out of the triangle (the compute is pl.when-guarded).
-            pl.BlockSpec((bt, bt), lambda i, j, kk: (i, jnp.minimum(kk, i))),
-            pl.BlockSpec((bt, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        in_specs=[pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)),
+                  l_spec, x_spec],
+        out_specs=o_spec,
         out_shape=_out_sds((n, k), X.dtype, X),
         scratch_shapes=[pltpu.VMEM((bt, bn), accum_dtype)],
         interpret=interpret,
-    )(L, X)
+    )(mask, L, X)

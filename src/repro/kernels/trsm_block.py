@@ -41,6 +41,19 @@ def _trsm_kernel(l_ref, b_ref, x_ref, *, accum_dtype):
     x_ref[0] = jax.lax.fori_loop(0, n0, body, jnp.zeros_like(B))
 
 
+def _trsm_valid_kernel(v_ref, l_ref, b_ref, x_ref, *, accum_dtype):
+    """Validity-gated variant: a stack entry flagged 0 skips the whole
+    substitution recurrence and writes zeros (its L is never read, so
+    an arbitrary/zero diagonal cannot divide)."""
+    @pl.when(v_ref[0, 0] != 0)
+    def _solve():
+        _trsm_kernel(l_ref, b_ref, x_ref, accum_dtype=accum_dtype)
+
+    @pl.when(v_ref[0, 0] == 0)
+    def _skip():
+        x_ref[0] = jnp.zeros_like(x_ref[0])
+
+
 def _out_sds(shape, dtype, like):
     vma = getattr(jax.core.get_aval(like), "vma", None)
     if vma:
@@ -50,12 +63,16 @@ def _out_sds(shape, dtype, like):
 
 def trsm_substitution(L: jnp.ndarray, B: jnp.ndarray, *, bn: int = 128,
                       accum_dtype=jnp.float32,
-                      interpret: bool = False) -> jnp.ndarray:
+                      interpret: bool = False, valid=None) -> jnp.ndarray:
     """Solve tril(L) X = B by in-kernel forward substitution.
 
     L: (m, n0, n0) batched or (n0, n0); B matching (m, n0, k)/(n0, k).
     ``accum_dtype``: precision of the per-row dot/update recurrence
-    (float32 by default; the carried solution stays at B's dtype)."""
+    (float32 by default; the carried solution stays at B's dtype).
+    ``valid``: optional (m,) mask — entries flagged 0 (blocks outside
+    a :class:`~repro.core.structure.FactorStructure` schedule) skip
+    the recurrence and write zeros; ``None`` compiles the exact
+    unconditional kernel."""
     squeeze = L.ndim == 2
     if squeeze:
         L, B = L[None], B[None]
@@ -64,16 +81,28 @@ def trsm_substitution(L: jnp.ndarray, B: jnp.ndarray, *, bn: int = 128,
     bn = min(bn, k)
     assert k % bn == 0, (k, bn)
 
+    l_spec = pl.BlockSpec((1, n0, n0), lambda b, j: (b, 0, 0))
+    b_spec = pl.BlockSpec((1, n0, bn), lambda b, j: (b, 0, j))
+    if valid is None:
+        out = pl.pallas_call(
+            functools.partial(_trsm_kernel,
+                              accum_dtype=jnp.dtype(accum_dtype)),
+            grid=(m, k // bn),
+            in_specs=[l_spec, b_spec],
+            out_specs=b_spec,
+            out_shape=_out_sds((m, n0, k), B.dtype, B),
+            interpret=interpret,
+        )(L, B)
+        return out[0] if squeeze else out
+    v = jnp.asarray(valid, jnp.int32).reshape(m, 1)
     out = pl.pallas_call(
-        functools.partial(_trsm_kernel,
+        functools.partial(_trsm_valid_kernel,
                           accum_dtype=jnp.dtype(accum_dtype)),
         grid=(m, k // bn),
-        in_specs=[
-            pl.BlockSpec((1, n0, n0), lambda b, j: (b, 0, 0)),
-            pl.BlockSpec((1, n0, bn), lambda b, j: (b, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, n0, bn), lambda b, j: (b, 0, j)),
+        in_specs=[pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+                  l_spec, b_spec],
+        out_specs=b_spec,
         out_shape=_out_sds((m, n0, k), B.dtype, B),
         interpret=interpret,
-    )(L, B)
+    )(v, L, B)
     return out[0] if squeeze else out

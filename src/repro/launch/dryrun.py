@@ -163,20 +163,46 @@ def build_decode(cfg, sh, mesh, arch, kv_dtype=jnp.bfloat16):
 SPEC_REGIMES = [(16384, 128, 64), (16384, 512, 256), (256, 65536, 64)]
 
 
-def run_spec_smoke(triples) -> int:
+def run_spec_smoke(triples, structure: str | None = None) -> int:
     """Resolve and print the a-priori plan (SolveSpec.auto) for each
-    (n, k, p) — pure cost-model arithmetic, no devices touched."""
+    (n, k, p) — pure cost-model arithmetic, no devices touched.
+
+    ``structure`` ("dense" | "banded[:BW]" | "block-sparse") resolves
+    the HOISTED serving plan for a structured factor instead: the
+    structured n0 argmin + sweep-only dispatch, with the analyzed
+    level schedule printed next to the modeled times (DESIGN.md
+    Sec. 14) — still no devices, nothing compiled."""
     from repro.core import cost_model as cm, tuning
     from repro.core.solver import SolveSpec
     for (n, k, p) in triples:
-        spec = SolveSpec.auto(n, k, p=p)
-        method, plan, times = tuning.choose_method(n, k, p)
-        assert method == spec.method, (method, spec.method)
-        print(f"[spec] n={n} k={k} p={p}: regime={tuning.regime(n, k, p)}"
-              f" -> method={spec.method} grid={plan.p1}x{plan.p1}x"
-              f"{plan.p2} n0={spec.n0} r=({plan.r1},{plan.r2}) "
-              f"modeled inv={times['inv']:.3e}s rec={times['rec']:.3e}s "
-              f"(machine: {cm.tpu_v5e().name})")
+        if structure is None:
+            spec = SolveSpec.auto(n, k, p=p)
+            method, plan, times = tuning.choose_method(n, k, p)
+            assert method == spec.method, (method, spec.method)
+            print(f"[spec] n={n} k={k} p={p}: "
+                  f"regime={tuning.regime(n, k, p)}"
+                  f" -> method={spec.method} grid={plan.p1}x{plan.p1}x"
+                  f"{plan.p2} n0={spec.n0} r=({plan.r1},{plan.r2}) "
+                  f"modeled inv={times['inv']:.3e}s "
+                  f"rec={times['rec']:.3e}s "
+                  f"(machine: {cm.tpu_v5e().name})")
+            continue
+        from repro.core.structure import FactorStructure, analyze
+        st = FactorStructure.parse(structure, n=n)
+        spec = SolveSpec.auto(n, k, p=p, structure=st, hoisted=True)
+        _, _, times = tuning.choose_serving_method(
+            n, k, spec.grid, structure=spec.structure)
+        line = (f"[spec] n={n} k={k} p={p} structure={st.kind}: "
+                f"-> method={spec.method} grid={spec.grid.p1}x"
+                f"{spec.grid.p1}x{spec.grid.p2} n0={spec.n0} "
+                f"modeled inv={times['inv']:.3e}s "
+                f"rec={times['rec']:.3e}s")
+        if spec.structure is not None:
+            info = analyze(spec.structure, n, spec.n0)
+            dense_off = info.m * (info.m - 1) // 2
+            line += (f" levels={info.n_levels}/{info.m} "
+                     f"offdiag={info.nnz_offdiag}/{dense_off}")
+        print(line)
     return 0
 
 
@@ -298,12 +324,17 @@ def main():
                     help="print the fleet capacity planner's bucket "
                          "table for a mixed-order manifest (pure cost "
                          "model, no devices) and exit")
+    ap.add_argument("--structure", default=None,
+                    metavar="dense|banded[:BW]|block-sparse",
+                    help="with --spec: resolve the hoisted serving "
+                         "plan for a structured factor (structured n0 "
+                         "argmin + level schedule; DESIGN.md Sec. 14)")
     args = ap.parse_args()
 
     if args.spec is not None:
         triples = [tuple(int(x) for x in s.split(","))
                    for s in args.spec] or SPEC_REGIMES
-        return run_spec_smoke(triples)
+        return run_spec_smoke(triples, structure=args.structure)
     if args.fleet:
         return run_fleet_smoke()
 

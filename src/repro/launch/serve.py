@@ -79,10 +79,17 @@ def serve_trsm(args):
     L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
     if args.precision != "fp64_refine":
         L = L.astype(np.float32)
+    structure = None
+    if args.structure:
+        # admission enforces the promise (masks L to the structure),
+        # so serving a random dense factor under --structure is safe —
+        # it solves against the masked operator (DESIGN.md Sec. 14)
+        structure = api.FactorStructure.parse(args.structure, n=n)
     grid = api.make_trsm_mesh(args.p1, args.p2)
     solver = api.Solver.from_factor(L, grid, method=args.method,
                                     n0=args.n0, precision=args.precision,
-                                    k_hint=args.panel_k)
+                                    k_hint=args.panel_k,
+                                    structure=structure)
     server = api.SolveServer(solver, args.panel_k).warmup()
     widths = rng.integers(1, args.panel_k + 1, args.requests)
     t0 = time.time()
@@ -399,6 +406,10 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--p1", type=int, default=1)
     ap.add_argument("--p2", type=int, default=1)
+    ap.add_argument("--structure", default=None,
+                    metavar="dense|banded[:BW]|block-sparse",
+                    help="factor block structure for the trsm workload "
+                         "(level-scheduled sweep; DESIGN.md Sec. 14)")
     ap.add_argument("--method", default="inv",
                     choices=["inv", "rec", "auto"])
     ap.add_argument("--bank", type=int, default=16,

@@ -413,6 +413,77 @@ def test_fairqueue_width_bound_fifo_no_starvation(arrivals, panel_k):
         assert seqs == sorted(seqs), "FIFO per tenant"
 
 
+# ---------------- FactorStructure (DESIGN.md Sec. 14) ----------------
+
+
+@given(m=st.sampled_from([2, 4, 8, 16]), density=st.sampled_from(
+    [0.1, 0.4, 0.8]), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=60, deadline=None)
+def test_structure_level_schedule_is_topological(m, density, seed):
+    """The admission-time level schedule is a valid topological order
+    of the block dependency DAG for ANY lower-triangular mask: block
+    row i can only be scheduled after every j it reads (mask[i, j],
+    j < i), and levels are dense 0..max with level 0 = rows that
+    depend on nothing."""
+    from repro.core.structure import FactorStructure, analyze
+    rng = np.random.default_rng(seed)
+    mask = np.tril(rng.random((m, m)) < density)
+    np.fill_diagonal(mask, True)
+    n0 = 4
+    info = analyze(FactorStructure.block_sparse(mask), m * n0, n0)
+    levels = info.levels
+    assert len(levels) == m
+    assert sorted(set(levels)) == list(range(max(levels) + 1))
+    for i in range(m):
+        deps = [j for j in range(i) if mask[i, j]]
+        for j in deps:
+            assert levels[j] < levels[i], (i, j, levels)
+        if not deps:
+            assert levels[i] == 0
+        # spans cover every dependent of column i (conservatively)
+        for j in deps:
+            lo, hi = info.spans[j]
+            assert lo <= i < hi, (i, j, info.spans[j])
+
+
+@pytest.fixture(scope="module")
+def _structure_banks():
+    """A dense bank and a full-mask block_sparse bank sharing (n, n0),
+    module-scoped so hypothesis examples reuse the two compiled
+    programs and just replace the resident factor."""
+    from repro import api
+    grid = api.make_trsm_mesh(1, 1)
+    n, n0 = 16, 4
+    full = api.FactorStructure.block_sparse(
+        np.tril(np.ones((n // n0, n // n0), dtype=bool)))
+    dense = api.FactorBank(grid, n, n0=n0, capacity=1, dtype=np.float32)
+    struct = api.FactorBank(grid, n, n0=n0, capacity=1, structure=full,
+                            dtype=np.float32)
+    return (api.Solver.from_bank(dense), dense,
+            api.Solver.from_bank(struct), struct)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_full_mask_block_sparse_solves_bit_identical(_structure_banks,
+                                                     seed):
+    """A block_sparse structure whose mask keeps every lower block
+    masks nothing and skips nothing — its solve must be BIT-identical
+    to the dense bank's, across random factors and panels (DESIGN.md
+    Sec. 14 dense-degeneracy contract)."""
+    dsolver, dbank, ssolver, sbank = _structure_banks
+    n, k = 16, 3
+    rng = np.random.default_rng(seed)
+    L = (np.tril(rng.standard_normal((n, n)))
+         + n * np.eye(n)).astype(np.float32)
+    B = rng.standard_normal((1, n, k)).astype(np.float32)
+    for bank in (dbank, sbank):
+        bank.replace(0, L) if bank.size else bank.admit(L)
+    Xd = np.asarray(dsolver.solve(dsolver.place_rhs(B.copy())))
+    Xs = np.asarray(ssolver.solve(ssolver.place_rhs(B.copy())))
+    np.testing.assert_array_equal(Xd, Xs)
+
+
 @given(weights=st.tuples(st.integers(1, 5), st.integers(1, 5)),
        panel_k=st.sampled_from([4, 8, 16]),
        interleave=st.lists(st.sampled_from(["a", "b"]),

@@ -1,0 +1,442 @@
+"""The block-structure layer (repro.core.structure, DESIGN.md Sec. 14):
+admission-time analysis (block masks, level schedules, update spans),
+the level-scheduled sweep's correctness against dense references, the
+dense-path bit-identity contract across every precision preset, the
+structured steady state's zero-retrace / zero-transfer invariants at
+occupancies 1 and C, and the structure-priced cost model / a-priori
+plans (no compilation).
+
+Single-device grid; small n so the structured sweeps stay in the fast
+tier-1 set (``-m structure`` selects just these).  The hypothesis
+variants of the schedule properties live in tests/test_property.py
+(which importorskips hypothesis); the seeded sweeps here exercise the
+same invariants without the dependency.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import cost_model as cm, grid as gridlib, session, tuning
+from repro.core.structure import (FactorStructure, analyze,
+                                  apply_block_mask)
+
+pytestmark = pytest.mark.structure
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return gridlib.make_trsm_mesh(1, 1)
+
+
+def _banded_factor(n, bw, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    L = np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
+    i = np.arange(n)
+    keep = (i[:, None] - i[None, :] <= bw) & (i[:, None] >= i[None, :])
+    return np.where(keep, L, 0.0).astype(dtype), rng
+
+
+def _random_block_mask(m, rng):
+    bm = np.tril(rng.random((m, m)) < 0.4)
+    np.fill_diagonal(bm, True)
+    return bm
+
+
+# --------------------------- the descriptor ---------------------------
+
+def test_structure_constructors_and_hashing():
+    d = FactorStructure.dense()
+    assert d.is_dense and hash(d) == hash(FactorStructure("dense"))
+    b = FactorStructure.banded(8)
+    assert b == FactorStructure.banded(8) and b != FactorStructure.banded(9)
+    m = np.tril(np.ones((4, 4), bool))
+    s = FactorStructure.block_sparse(m)
+    assert s == FactorStructure.block_sparse(m.tolist())
+    assert isinstance(hash(s), int)          # nested-tuple normalized
+
+
+def test_structure_validation_errors():
+    with pytest.raises(ValueError, match="kind"):
+        FactorStructure("diagonal")
+    with pytest.raises(ValueError, match="bandwidth"):
+        FactorStructure.banded(0)
+    with pytest.raises(ValueError, match="no bandwidth"):
+        FactorStructure("dense", bandwidth=4)
+    with pytest.raises(ValueError, match="square"):
+        FactorStructure.block_sparse(np.ones((2, 3), bool))
+    with pytest.raises(ValueError, match="lower=True"):
+        FactorStructure.banded(4).validate_for(64, lower=False)
+    with pytest.raises(ValueError, match="lower=True"):
+        FactorStructure.banded(4).validate_for(64, transpose=True)
+    with pytest.raises(ValueError, match="use dense"):
+        FactorStructure.banded(64).validate_for(64)
+    with pytest.raises(ValueError, match="granularity"):
+        FactorStructure.block_sparse(
+            np.tril(np.ones((3, 3), bool))).validate_for(64)
+    # dense is unrestricted
+    FactorStructure.dense().validate_for(64, lower=False, transpose=True)
+
+
+def test_structure_parse():
+    assert FactorStructure.parse("dense").is_dense
+    assert FactorStructure.parse("banded:16").bandwidth == 16
+    assert FactorStructure.parse("banded", n=512).bandwidth == 64
+    bs = FactorStructure.parse("block-sparse")
+    assert bs.kind == "block_sparse" and len(bs.mask) == 8
+    with pytest.raises(ValueError, match="needs n"):
+        FactorStructure.parse("banded")
+    with pytest.raises(ValueError, match="unknown structure"):
+        FactorStructure.parse("butterfly")
+
+
+def test_banded_block_mask_exact():
+    # block (i, j)'s nearest element pair sits (i-j)*n0 - (n0-1) apart:
+    # the mask must keep exactly the blocks the element band touches
+    st = FactorStructure.banded(8)
+    bm = st.block_mask(64, 8)
+    d = np.subtract.outer(np.arange(8), np.arange(8))
+    expect = (d >= 0) & (d * 8 - 7 <= 8)
+    assert np.array_equal(bm, expect)
+    # element band fully inside the diagonal blocks: bidiagonal blocks
+    assert st.nnz_blocks(64, 8) == 8 + 7
+
+
+def test_block_sparse_or_coarsening_is_conservative():
+    rng = np.random.default_rng(3)
+    src = _random_block_mask(8, rng)
+    st = FactorStructure.block_sparse(src)
+    for n0 in (8, 16, 32):
+        bm = st.block_mask(64, n0)
+        # every source nonzero must land inside a kept serving block
+        g = 64 // 8
+        for i in range(8):
+            for j in range(i + 1):
+                if src[i, j]:
+                    assert bm[i * g // n0, j * g // n0]
+
+
+# ------------------------ schedule properties ------------------------
+
+def test_level_schedule_is_topological_seeded_sweep():
+    # hypothesis variant: tests/test_property.py
+    rng = np.random.default_rng(7)
+    for trial in range(50):
+        m = int(rng.integers(2, 17))
+        bm = _random_block_mask(m, rng)
+        st = FactorStructure.block_sparse(bm)
+        info = analyze(st, m * 8, 8)
+        levels = np.asarray(info.levels)
+        for i in range(m):
+            for j in range(i):
+                if bm[i, j]:
+                    # a dependency must be scheduled strictly earlier
+                    assert levels[j] < levels[i], (trial, i, j)
+        # levels are dense: every level up to the max is populated
+        assert set(levels) == set(range(int(levels.max()) + 1))
+
+
+def test_update_spans_cover_dependents_seeded_sweep():
+    rng = np.random.default_rng(11)
+    for trial in range(50):
+        m = int(rng.integers(2, 17))
+        bm = _random_block_mask(m, rng)
+        info = analyze(FactorStructure.block_sparse(bm), m * 8, 8)
+        for j in range(m):
+            dep = np.nonzero(bm[j + 1:, j])[0] + j + 1
+            if dep.size == 0:
+                assert info.spans[j] is None
+            else:
+                lo, hi = info.spans[j]
+                assert j + 1 <= lo <= dep.min()
+                assert dep.max() < hi <= m
+        assert info.update_cols == sum(
+            1 for j in range(m) if bm[j + 1:, j].any())
+        assert info.nnz_offdiag == int(bm.sum()) - m
+
+
+def test_apply_block_mask_where_semantics():
+    # jnp.where, not multiply: NaN/Inf in masked-out blocks must not
+    # leak, and -0.0 inside kept blocks must survive bit-exactly
+    st = FactorStructure.block_sparse(np.eye(2, dtype=bool))
+    L = np.ones((16, 16), np.float32)
+    L[8:, :8] = np.nan                       # the masked-OUT block
+    L[0, 0] = -0.0
+    out = np.asarray(apply_block_mask(jnp.asarray(L), st, 8))
+    assert not np.isnan(out).any()
+    assert (out[8:, :8] == 0).all()
+    assert np.signbit(out[0, 0])             # -0.0 preserved
+    # dense returns the SAME object (byte-identical path)
+    x = jnp.asarray(L)
+    assert apply_block_mask(x, FactorStructure.dense(), 8) is x
+
+
+# ----------------------- solve-path correctness -----------------------
+
+def test_banded_solve_matches_masked_reference(grid):
+    n, k, bw = 64, 8, 8
+    Lb, rng = _banded_factor(n, bw)
+    B = rng.standard_normal((n, k)).astype(np.float32)
+    solver = api.Solver.from_factor(
+        Lb, grid, structure=FactorStructure.banded(bw))
+    X = np.asarray(solver.solve(solver.place_rhs(B[None])))[0]
+    ref = np.linalg.solve(Lb.astype(np.float64), B.astype(np.float64))
+    rel = np.linalg.norm(X - ref) / np.linalg.norm(ref)
+    assert rel < 1e-4, rel
+
+
+def test_structured_admission_masks_the_operator(grid):
+    # admission enforces the promise: a DENSE factor admitted under a
+    # banded structure is served as the BLOCK-masked operator (the
+    # mask is conservative at block granularity — elements inside a
+    # kept block survive even below the element band)
+    n, k, bw = 64, 4, 8
+    rng = np.random.default_rng(5)
+    L = (np.tril(rng.standard_normal((n, n)))
+         + n * np.eye(n)).astype(np.float32)
+    B = rng.standard_normal((n, k)).astype(np.float32)
+    st = FactorStructure.banded(bw)
+    solver = api.Solver.from_factor(L, grid, structure=st)
+    n0 = solver.bank.n0
+    bm = st.block_mask(n, n0)
+    Lm = np.where(np.repeat(np.repeat(bm, n0, 0), n0, 1), L, 0.0)
+    X = np.asarray(solver.solve(solver.place_rhs(B[None])))[0]
+    ref = np.linalg.solve(Lm.astype(np.float64), B.astype(np.float64))
+    assert np.linalg.norm(X - ref) / np.linalg.norm(ref) < 1e-4
+
+
+def test_full_mask_block_sparse_equals_dense_bitexact(grid):
+    n, k = 64, 8
+    rng = np.random.default_rng(2)
+    L = (np.tril(rng.standard_normal((n, n)))
+         + n * np.eye(n)).astype(np.float32)
+    B = rng.standard_normal((n, k)).astype(np.float32)
+    dense = api.Solver.from_factor(L, grid)
+    m = n // dense.bank.n0
+    full = api.Solver.from_factor(
+        L, grid, n0=dense.bank.n0,
+        structure=FactorStructure.block_sparse(
+            np.tril(np.ones((m, m), bool))))
+    Xd = np.asarray(dense.solve(dense.place_rhs(B[None])))
+    Xf = np.asarray(full.solve(full.place_rhs(B[None])))
+    assert Xd.tobytes() == Xf.tobytes()
+
+
+@pytest.mark.parametrize("preset", ["fp32", "bf16", "bf16_refine",
+                                    "fp64_refine"])
+def test_dense_structure_bit_identity_per_preset(grid, preset):
+    """The regression contract: structure=dense must be byte-identical
+    to the unstructured path — same X bytes, same compiled program
+    (TRACE_COUNTS unchanged by the second build: dense normalizes to
+    None, so the two specs are the SAME cache key)."""
+    n, k = 64, 8
+    dt = np.float64 if preset == "fp64_refine" else np.float32
+    rng = np.random.default_rng(4)
+    L = (np.tril(rng.standard_normal((n, n))) + n * np.eye(n)).astype(dt)
+    B = rng.standard_normal((n, k)).astype(dt)
+    plain = api.Solver.from_factor(L, grid, precision=preset)
+    Xp = np.asarray(plain.solve(plain.place_rhs(B[None])))
+    key = plain.spec_for(k)
+    traces = session.TRACE_COUNTS[key]
+    structured = api.Solver.from_factor(
+        L, grid, precision=preset, structure=FactorStructure.dense())
+    skey = structured.spec_for(k)
+    assert skey == key and skey.structure is None
+    Xs = np.asarray(structured.solve(structured.place_rhs(B[None])))
+    assert Xp.tobytes() == Xs.tobytes()
+    assert session.TRACE_COUNTS[key] == traces   # shared program, no retrace
+
+
+# ---------------------- steady-state invariants ----------------------
+
+@pytest.mark.parametrize("occupancy", [1, 3])
+def test_structured_steady_state_zero_retrace_zero_transfer(
+        grid, occupancy):
+    n, k, bw, C = 64, 8, 8, 3
+    st = FactorStructure.banded(bw)
+    bank = api.FactorBank(grid, n, capacity=C, structure=st,
+                          dtype=np.float32)
+    solver = api.Solver.from_bank(bank).warmup(k)
+    Ls = [_banded_factor(n, bw, seed=20 + i)[0]
+          for i in range(occupancy)]
+    for L in Ls:                 # first admit compiles the updater
+        bank.admit(L)
+    fresh = _banded_factor(n, bw, seed=40)[0]
+    placed = bank.place_factor(fresh)
+    Ls[0] = fresh
+    rng = np.random.default_rng(9)
+    Bs = [solver.place_rhs(
+        rng.standard_normal((C, n, k)).astype(np.float32))
+        for _ in range(2)]
+    refs = [np.asarray(b) for b in Bs]       # solve() donates the RHS
+    key = solver.spec_for(k)
+    uspec = bank.update_spec()
+    traces = (session.TRACE_COUNTS[key], session.TRACE_COUNTS[uspec])
+    with jax.transfer_guard("disallow"):
+        bank.replace(bank.live_slots()[0], placed)   # steady churn
+        outs = [solver.solve(b) for b in Bs]
+    jax.block_until_ready(outs)
+    assert (session.TRACE_COUNTS[key],
+            session.TRACE_COUNTS[uspec]) == traces
+    for X, Bref in zip(outs, refs):
+        X = np.asarray(X)
+        for i, L in enumerate(Ls):
+            rel = (np.linalg.norm(
+                L.astype(np.float64) @ X[i] - Bref[i])
+                / np.linalg.norm(Bref[i]))
+            assert rel < 1e-4, (i, rel)
+
+
+def test_structured_bank_rejects_cyclic_ingestion(grid):
+    st = FactorStructure.banded(8)
+    bank = api.FactorBank(grid, 64, structure=st, dtype=np.float32)
+    Lb, _ = _banded_factor(64, 8)
+    with pytest.raises(ValueError, match="cyclic ingestion"):
+        bank.admit_cyclic(jnp.asarray(Lb))
+    with pytest.raises(ValueError, match="natural ingestion only"):
+        api.UpdateSpec(n=64, grid=grid, policy=bank.policy,
+                       method="inv", n0=bank.n0, mode=None, lower=True,
+                       transpose=False, block_inv=None, bank_width=1,
+                       ingest="cyclic", structure=st)
+
+
+# ------------------------- cost model / plans -------------------------
+
+def test_structured_cost_prices_skipped_blocks():
+    n, n0, k = 512, 64, 16
+    st = FactorStructure.banded(n // 8)
+    dense = cm.update_phase_cost(n, k, n0, 2, 1)
+    strct = cm.update_phase_cost(n, k, n0, 2, 1, structure=st)
+    info = analyze(st, n, n0)
+    m = n // n0
+    fill = info.nnz_offdiag / (m * (m - 1) / 2)
+    assert fill < 1
+    assert strct.f == pytest.approx(dense.f * fill)
+    assert strct.w == pytest.approx(dense.w * fill)
+    assert strct.s == pytest.approx(
+        dense.s * info.update_cols / (m - 1))
+    # solve phase is structure-independent (every diagonal block is on
+    # its own block row's critical path)
+    steady_d = cm.it_inv_trsm_steady_cost(n, k, n0, 2, 1)
+    steady_s = cm.it_inv_trsm_steady_cost(n, k, n0, 2, 1, structure=st)
+    solve = cm.solve_phase_cost(n, k, n0, 2, 1)
+    assert steady_s.f - solve.f == pytest.approx(strct.f)
+    # rec is priced dense regardless (honest dispatch)
+    assert cm.rec_trsm_cost(n, k, 4, structure=st) == \
+        cm.rec_trsm_cost(n, k, 4)
+
+
+def test_auto_resolves_structured_plan_without_compiling():
+    st = FactorStructure.banded(512 // 8)
+    spec = api.SolveSpec.auto(512, 16, p=4, structure=st, hoisted=True)
+    assert spec.structure == st
+    assert spec.n0 is not None and 512 % spec.n0 == 0
+    assert not spec.is_concrete            # plan-only grid: no devices
+    # dense-structure auto normalizes to the unstructured key
+    d = api.SolveSpec.auto(512, 16, p=4,
+                           structure=FactorStructure.dense(),
+                           hoisted=True)
+    assert d.structure is None
+    assert d == api.SolveSpec.auto(512, 16, p=4, hoisted=True)
+
+
+def test_structured_serving_n0_feasible_and_cached():
+    g = api.plan_grid(2, 1)
+    st = FactorStructure.banded(64)
+    n0 = tuning.serving_n0(512, g, structure=st)
+    assert 512 % n0 == 0 and n0 % (g.p1 * g.p2) == 0 and n0 <= 256
+    assert tuning.serving_n0(512, g, structure=st) == n0   # lru stable
+    # dense path: byte-identical to the historical policy
+    assert tuning.serving_n0(512, g) == \
+        tuning.serving_n0(512, g, structure=FactorStructure.dense())
+
+
+def test_plan_fleet_threads_structure():
+    g = api.plan_grid(1, 1)
+    st = FactorStructure.banded(16)
+    plan = api.plan_fleet({256: 2, 128: 2}, g, k=8, structure=st)
+    for b in plan.buckets:
+        if b.method == "inv":
+            assert b.structure == st
+
+
+# ------------- validity-gated Pallas kernels (DESIGN.md Sec. 14) -------------
+
+def test_trmm_block_mask_skips_poisoned_tiles():
+    """``ops.trmm(block_mask=...)`` equals the unmasked kernel on the
+    masked operand, and NEVER reads skipped tiles — NaNs planted in
+    masked-out strictly-lower blocks must not reach the output."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(11)
+    n, k, bt = 128, 64, 32
+    st = FactorStructure.banded(bt)
+    mask = st.block_mask(n, bt)              # diag + first subdiagonal
+    elem = np.repeat(np.repeat(mask, bt, 0), bt, 1)
+    L = np.tril(rng.standard_normal((n, n))).astype(np.float32)
+    Lm = np.where(elem, L, 0.0).astype(np.float32)
+    X = rng.standard_normal((n, k)).astype(np.float32)
+    want = np.asarray(ops.trmm(jnp.asarray(Lm), jnp.asarray(X),
+                               bt=bt, bn=32))
+    got = np.asarray(ops.trmm(jnp.asarray(Lm), jnp.asarray(X), bt=bt,
+                              bn=32,
+                              block_mask=jnp.asarray(mask, jnp.int32)))
+    np.testing.assert_array_equal(got, want)
+    poison = np.where(np.tril(elem, -1) | ~np.tri(n, dtype=bool),
+                      Lm, np.nan)            # NaN exactly where skipped
+    poison = np.where(elem, Lm, poison)
+    got_p = np.asarray(ops.trmm(jnp.asarray(np.tril(poison)),
+                                jnp.asarray(X), bt=bt, bn=32,
+                                block_mask=jnp.asarray(mask, jnp.int32)))
+    np.testing.assert_array_equal(got_p, want)
+
+
+def test_tri_inv_blocks_valid_skips_and_zeros():
+    """``ops.tri_inv_blocks(valid=...)`` writes zeros for flagged-out
+    stack entries without reading them (a zero diagonal there would
+    otherwise divide) and inverts the rest as usual."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(12)
+    m, n0 = 4, 16
+    Ls = np.stack([np.tril(rng.standard_normal((n0, n0)))
+                   + n0 * np.eye(n0) for _ in range(m)]
+                  ).astype(np.float32)
+    Ls[2] = 0.0                              # poison the skipped entry
+    valid = jnp.asarray([1, 1, 0, 1], jnp.int32)
+    out = np.asarray(ops.tri_inv_blocks(jnp.asarray(Ls), valid=valid))
+    np.testing.assert_array_equal(out[2], np.zeros((n0, n0)))
+    base = np.asarray(ops.tri_inv_blocks(jnp.asarray(Ls[[0, 1, 3]])))
+    np.testing.assert_allclose(out[[0, 1, 3]], base,
+                               rtol=1e-6, atol=1e-6)
+    assert np.isfinite(out).all()
+
+
+def test_trsm_substitution_valid_skips_and_zeros():
+    """Same contract for the substitution baseline: flagged-out stack
+    entries skip the recurrence (their zero diagonal never divides)
+    and come back as zero panels."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(13)
+    m, n0, k = 3, 16, 8
+    Ls = np.stack([np.tril(rng.standard_normal((n0, n0)))
+                   + n0 * np.eye(n0) for _ in range(m)]
+                  ).astype(np.float32)
+    Bs = rng.standard_normal((m, n0, k)).astype(np.float32)
+    Ls[1] = 0.0                              # poison the skipped entry
+    valid = jnp.asarray([1, 0, 1], jnp.int32)
+    out = np.asarray(ops.trsm_substitution(jnp.asarray(Ls),
+                                           jnp.asarray(Bs),
+                                           valid=valid))
+    np.testing.assert_array_equal(out[1], np.zeros((n0, k)))
+    keep = np.asarray(ops.trsm_substitution(jnp.asarray(Ls[[0, 2]]),
+                                            jnp.asarray(Bs[[0, 2]])))
+    np.testing.assert_allclose(out[[0, 2]], keep, rtol=1e-6, atol=1e-6)
+    assert np.isfinite(out).all()
