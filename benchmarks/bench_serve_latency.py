@@ -38,8 +38,23 @@ run appends a dated point to the committed
 weekly CI job) runs a reduced sweep and instead checks the measured
 saturation against the committed trajectory within tolerance.
 
-Run standalone (``--traffic`` for the harness alone) or via
-``python -m benchmarks.run serve_latency``.
+The third part is the CONTROL-PLANE overload comparison (DESIGN.md
+Sec. 15): the same open-loop harness driven at 2x the measured
+closed-loop capacity — sustained saturation, where a depth-bounded
+queue keeps every admitted request waiting a full backlog and the
+within-SLO goodput collapses.  Two arms, identical traffic: depth-only
+admission (the PR-7 baseline) vs the SLO-aware AdmissionController
+(requests whose estimated queue wait cannot meet the SLO are shed AT
+SUBMIT, so capacity serves requests that can still finish in time).
+Metric: the fraction of OFFERED requests completing within the SLO;
+the acceptance bar is >= 1.2x the baseline fraction, with zero
+retraces and zero transfers across both measured runs.  Full runs
+append to ``benchmarks/BENCH_control.json``; ``BENCH_CONTROL_SMOKE=1``
+(the weekly CI job) runs a reduced overload and asserts the bar plus
+the committed-trajectory band.
+
+Run standalone (``--traffic`` / ``--control`` for one harness alone)
+or via ``python -m benchmarks.run serve_latency``.
 """
 
 from __future__ import annotations
@@ -51,8 +66,11 @@ import time
 import numpy as np
 
 TRAFFIC_SMOKE = bool(int(os.environ.get("BENCH_TRAFFIC_SMOKE", "0")))
+CONTROL_SMOKE = bool(int(os.environ.get("BENCH_CONTROL_SMOKE", "0")))
 TRAJECTORY = os.path.join(os.path.dirname(__file__),
                           "BENCH_traffic.json")
+CONTROL_TRAJECTORY = os.path.join(os.path.dirname(__file__),
+                                  "BENCH_control.json")
 # the weekly smoke runs on whatever shared CPU the CI lands on, so the
 # committed-saturation comparison is a sanity band, not a perf gate
 SMOKE_TOLERANCE = 4.0
@@ -258,6 +276,195 @@ def _traffic(report):
                 sweep=points, accept=accept)
 
 
+# ---------------------- control-plane overload harness ----------------------
+
+def _prime_compositions(srv, pool, slots, per_wave):
+    """Compile every wave composition traffic can produce, then leave
+    the server idle — identical to the traffic harness's warm-up."""
+    for count in list(range(1, per_wave + 1)) * 2:
+        for i in range(count):
+            srv.submit(pool[i % len(pool)], factor=i % slots)
+        while srv.pending() or srv._inflight:
+            srv.step()
+
+
+def _offer_overload(srv, pool, rate, duration_s, rng, slots, slo_s):
+    """One open-loop overload run.  Unlike :func:`_offer`, this keeps
+    the books the control plane is judged on: EVERY scheduled arrival
+    counts as offered, depth sheds raise at submit, deadline sheds
+    come back as already-failed futures, and 'good' means completed
+    within the SLO measured from the SCHEDULED arrival."""
+    from repro.api import DeadlineUnmeetable, Overloaded
+    gaps = rng.exponential(1.0 / rate,
+                           size=max(int(rate * duration_s), 1))
+    t0 = time.monotonic()
+    sched = t0 + np.cumsum(gaps)
+    futs, depth_shed = [], 0
+    for i, t_i in enumerate(sched):
+        delay = t_i - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        try:
+            futs.append((t_i, srv.submit(pool[i % len(pool)],
+                                         factor=i % slots)))
+        except Overloaded:
+            depth_shed += 1
+    served = within = deadline_shed = 0
+    for t_i, f in futs:
+        try:
+            f.result(timeout=120)
+        except DeadlineUnmeetable:
+            deadline_shed += 1
+            continue
+        served += 1
+        if f.completed - t_i <= slo_s:
+            within += 1
+    offered = len(sched)
+    return dict(offered=offered, served=served,
+                within_slo=within, depth_shed=depth_shed,
+                deadline_shed=deadline_shed,
+                good_fraction=round(within / offered, 4))
+
+
+def _control_arm(report, label, rate, slo_ms, seed, *,
+                 admission, duration_s):
+    """One fresh server + one overload run; returns the arm's books.
+    Fresh per arm so queues, counters, and the service EWMA never
+    leak between the baseline and the controller."""
+    import gc
+
+    import jax
+    from repro import api
+    from repro.core import session
+
+    n, slots, panel_k, width, depth = 512, 4, 16, 4, 64
+    srv, _ = _traffic_server(n, slots, panel_k, depth)
+    rng = np.random.default_rng(seed)
+    pool = _place_pool(srv, rng, n, width)
+    per_wave = slots * (panel_k // width)
+    _prime_compositions(srv, pool, slots, per_wave)
+    key = srv.solver.program_for(panel_k).key
+    # the EWMA must reflect STEADY waves, not the priming compiles
+    srv.reset_service_ewma()
+    for _ in range(3):
+        for i in range(per_wave):
+            srv.submit(pool[i % len(pool)], factor=i % slots)
+        while srv.pending() or srv._inflight:
+            srv.step()
+    if admission:
+        srv.set_admission(api.AdmissionController(slo_ms=slo_ms))
+    traces = session.TRACE_COUNTS[key]
+    gc.collect()
+    gc.disable()
+    jax.config.update("jax_transfer_guard", "disallow")
+    srv.start()
+    try:
+        books = _offer_overload(srv, pool, rate, duration_s, rng,
+                                slots, slo_ms * 1e-3)
+    finally:
+        srv.stop(drain=True)
+        jax.config.update("jax_transfer_guard", "allow")
+        gc.enable()
+    assert session.TRACE_COUNTS[key] == traces, \
+        f"control/{label}: the wave program retraced under overload"
+    report(f"control: {label:9s} @ {rate:.0f} rps x {duration_s:.0f}s:"
+           f" {books['within_slo']}/{books['offered']} within "
+           f"{slo_ms:.0f} ms SLO (good {books['good_fraction']:.3f})"
+           f" | served {books['served']} | shed "
+           f"{books['depth_shed']} depth + {books['deadline_shed']} "
+           f"deadline | 0 retraces, 0 transfers")
+    return books
+
+
+def _control(report):
+    """The 2x-overload comparison: depth-only vs SLO-aware admission,
+    within-SLO goodput fraction, >= 1.2x acceptance bar."""
+    n, slots, panel_k, width, depth = 512, 4, 16, 4, 64
+    duration_s = 1.0 if CONTROL_SMOKE else 3.0
+
+    # closed-loop capacity anchor (its own throwaway server)
+    srv, rng0 = _traffic_server(n, slots, panel_k, depth)
+    pool = _place_pool(srv, rng0, n, width)
+    per_wave = slots * (panel_k // width)
+    _prime_compositions(srv, pool, slots, per_wave)
+    t0 = time.monotonic()
+    reps = 5
+    for _ in range(reps):
+        for i in range(per_wave):
+            srv.submit(pool[i % len(pool)], factor=i % slots)
+        while srv.pending() or srv._inflight:
+            srv.step()
+    capacity = per_wave * reps / (time.monotonic() - t0)
+    wave_ms = per_wave / capacity * 1e3
+    # the SLO buys ~6 waves of queueing — deep enough to serve real
+    # bursts, far shallower than the depth bound's ~16-wave backlog
+    slo_ms = 6.0 * wave_ms
+    rate = 2.0 * capacity                 # sustained saturation
+    report(f"control: capacity ~ {capacity:.0f} rps "
+           f"({wave_ms:.1f} ms/wave) -> overload {rate:.0f} rps, "
+           f"SLO {slo_ms:.0f} ms")
+
+    base = _control_arm(report, "depth", rate, slo_ms, 11,
+                        admission=False, duration_s=duration_s)
+    slo = _control_arm(report, "slo", rate, slo_ms, 11,
+                       admission=True, duration_s=duration_s)
+    gain = slo["good_fraction"] / max(base["good_fraction"], 1e-9)
+    report(f"control: within-SLO goodput {slo['good_fraction']:.3f} "
+           f"vs depth-only {base['good_fraction']:.3f} "
+           f"({min(gain, 999):.2f}x)")
+    assert slo["good_fraction"] >= 1.2 * base["good_fraction"], (
+        f"SLO-aware admission did not clear the 1.2x within-SLO "
+        f"goodput bar: {slo} vs {base}")
+    result = dict(n=n, slots=slots, panel_k=panel_k, width=width,
+                  queue_depth=depth, capacity_rps=round(capacity, 1),
+                  overload_rps=round(rate, 1),
+                  slo_ms=round(slo_ms, 2), base=base, slo=slo,
+                  gain=round(min(gain, 999.0), 3))
+    if CONTROL_SMOKE:
+        _check_control_vs_committed(report, result)
+    else:
+        _record_control(result)
+        report(f"trajectory point appended to {CONTROL_TRAJECTORY}")
+    return result
+
+
+def _check_control_vs_committed(report, result):
+    if not os.path.exists(CONTROL_TRAJECTORY):
+        report("control: no committed trajectory; smoke check skipped")
+        return
+    with open(CONTROL_TRAJECTORY) as f:
+        traj = json.load(f).get("trajectory", [])
+    if not traj:
+        return
+    # band the GAIN, not the absolute fraction: both arms share the
+    # host's noise and the short window's cold-start transient, so
+    # their ratio is what a 1 s smoke can reproduce
+    committed = traj[-1]["gain"]
+    floor = committed / SMOKE_TOLERANCE
+    got = result["gain"]
+    assert got >= floor, (
+        f"smoke: goodput gain {got:.2f}x fell below {floor:.2f}x "
+        f"({SMOKE_TOLERANCE}x band around the committed "
+        f"{committed:.2f}x) — the admission path regressed (or the "
+        f"trajectory needs a refresh)")
+    report(f"control: goodput gain {got:.2f}x within "
+           f"{SMOKE_TOLERANCE}x of committed {committed:.2f}x")
+
+
+def _record_control(point):
+    traj = []
+    if os.path.exists(CONTROL_TRAJECTORY):
+        with open(CONTROL_TRAJECTORY) as f:
+            traj = json.load(f).get("trajectory", [])
+    date = time.strftime("%Y-%m-%d")
+    traj = [p for p in traj if p.get("date") != date] + \
+        [dict(date=date, **point)]
+    with open(CONTROL_TRAJECTORY, "w") as f:
+        json.dump({"bench": "control", "trajectory": traj}, f,
+                  indent=1)
+        f.write("\n")
+
+
 def _check_saturation_vs_committed(report, saturation):
     if not os.path.exists(TRAJECTORY):
         report("traffic: no committed trajectory; smoke check skipped")
@@ -354,13 +561,18 @@ def run(report):
                f"bf16_refine {row['bf16_refine_ms']:6.2f} ms | "
                f"{row['speedup']:6.1f}x")
         assert hit_rate > 0.9, f"one-shot cache hit rate {hit_rate}"
-    traffic = _traffic(report)
-    return dict(latency=rows, traffic=traffic)
+    # each smoke env var focuses the weekly CI job on ITS harness;
+    # a full (no-env) run still exercises both
+    traffic = None if CONTROL_SMOKE else _traffic(report)
+    control = None if TRAFFIC_SMOKE else _control(report)
+    return dict(latency=rows, traffic=traffic, control=control)
 
 
 if __name__ == "__main__":
     import sys
     if "--traffic" in sys.argv:
         _traffic(print)
+    elif "--control" in sys.argv:
+        _control(print)
     else:
         run(print)

@@ -35,7 +35,16 @@ One import surface for everything a serving client needs:
   bounded per-slot queues, typed :class:`Overloaded` shedding,
   weighted fair per-tenant packing, and :class:`SolveFuture`
   completion handles; evict-under-flight surfaces as
-  :class:`StrandedRequestError` through the future.
+  :class:`StrandedRequestError` through the future.  All serving
+  faults share the :class:`ServingError` hierarchy
+  (``repro.core.errors``).
+* :class:`AdmissionController` / :class:`Autoscaler` — the control
+  plane (DESIGN.md Sec. 15): SLO-aware admission sheds requests whose
+  estimated queue wait cannot meet their deadline
+  (:class:`DeadlineUnmeetable`, surfaced only through the future),
+  and the autoscaler re-prices the live manifest with
+  :func:`plan_fleet` under load drift, migrating resident factors
+  into the new buckets without stranding queued work.
 * :class:`FactorStructure` — the block-structure layer (DESIGN.md
   Sec. 14): a frozen ``dense`` / ``banded`` / ``block_sparse``
   promise analyzed once at admission; the level-scheduled sweep skips
@@ -49,6 +58,11 @@ stable spelling for scripts and downstream users.
 
 from repro.core import trsm  # noqa: F401
 from repro.core.bank import FactorBank  # noqa: F401
+from repro.core.control import (  # noqa: F401
+    AdmissionController, Autoscaler)
+from repro.core.errors import (  # noqa: F401
+    DeadlineUnmeetable, Overloaded, ServingError,
+    StrandedRequestError)
 from repro.core.fleet import (  # noqa: F401
     BucketPlan, FleetHandle, FleetPlan, SolverFleet, plan_fleet)
 from repro.core.grid import TrsmGrid, make_trsm_mesh  # noqa: F401
@@ -57,8 +71,8 @@ from repro.core.precision import (  # noqa: F401
 from repro.core.session import (  # noqa: F401
     CompiledSolverCache, default_cache)
 from repro.core.serving import (  # noqa: F401
-    AsyncSolveServer, Overloaded, SolveFuture)
+    AsyncSolveServer, SolveFuture)
 from repro.core.solver import (  # noqa: F401
-    Solver, SolveServer, SolveSpec, StrandedRequestError, UpdateSpec,
+    Solver, SolveServer, SolveSpec, UpdateSpec,
     plan_grid, resolve_plan, solver_for, updater_for)
 from repro.core.structure import FactorStructure  # noqa: F401

@@ -290,6 +290,31 @@ def it_inv_trsm_steady_cost(n: float, k: float, n0: float,
             + update_phase_cost(n, k, n0, p1, p2, structure=structure))
 
 
+# ------------------- control-plane wait pricing -------------------
+
+def queue_wait_estimate(queued_cols: float, width: float,
+                        inflight_waves: float, k: float,
+                        steady_s: float,
+                        dispatch_s: float = 0.0) -> float:
+    """A priori queue-wait bound for one arriving request (DESIGN.md
+    Sec. 15): seconds until a request of ``width`` columns joining a
+    backlog of ``queued_cols`` columns completes, when each wave
+    carries up to ``k`` columns and costs ``steady_s`` (the modeled —
+    or measured-EWMA — per-wave service time) plus ``dispatch_s`` of
+    launch overhead, with ``inflight_waves`` already dispatched ahead.
+
+    This is the same a-priori-pricing discipline as :func:`plan_fleet`
+    — the request is admitted or shed on ARITHMETIC, before any queue
+    time is spent — just applied to the time axis instead of the
+    bucket layout.  The estimate is deliberately a CEILING on wave
+    count (a request never splits across waves), so admission errs
+    toward shedding work it could not serve in time rather than
+    admitting work it cannot."""
+    waves = math.ceil((queued_cols + width) / max(k, 1.0)) \
+        + inflight_waves
+    return waves * (steady_s + dispatch_s)
+
+
 # --------------------- Sec. IX comparison table ---------------------
 
 def paper_table_row(n: float, k: float, p: float) -> dict:

@@ -1,0 +1,72 @@
+"""The unified serving-error hierarchy (DESIGN.md Sec. 15).
+
+Every typed failure the serving tier can hand a client — at submit
+time or through a :class:`~repro.core.serving.SolveFuture` — derives
+from one base, :class:`ServingError`, so a client that wants "anything
+the serving tier sheds or strands" catches ONE type instead of
+tracking the per-mechanism spellings:
+
+* :class:`Overloaded` — depth-based admission control: the target
+  slot's bounded queue is full, the request was shed at submit.
+* :class:`DeadlineUnmeetable` — SLO-aware admission control (the
+  control plane, :class:`~repro.core.control.AdmissionController`):
+  the queue-wait estimate says the request cannot finish inside its
+  ``slo_ms`` even if admitted, so it is shed up front.  A subclass of
+  :class:`Overloaded` (both are load shedding; a depth-only client's
+  ``except Overloaded`` keeps working) but surfaced ONLY through the
+  request's :class:`~repro.core.serving.SolveFuture` — ``submit``
+  still returns a handle, so open-loop producers need no extra
+  try/except on the hot submit path.
+* :class:`StrandedRequestError` — evict-under-flight: the request's
+  slot was turned over between submit and pack, so serving it would
+  hit the slot's NEW occupant; the future fails instead.
+
+Compatibility is part of the contract: :class:`Overloaded` remains a
+``RuntimeError`` and :class:`StrandedRequestError` remains a
+``ValueError`` (their pre-hierarchy bases), so existing handlers that
+caught those stdlib types are bit-identical.  The pre-hierarchy access
+paths — ``repro.core.serving.Overloaded`` and
+``repro.core.solver.StrandedRequestError`` — keep working as warn-once
+aliases of THESE SAME class objects (see the README migration table);
+``repro.api`` re-exports the canonical spellings.
+"""
+
+from __future__ import annotations
+
+
+class ServingError(Exception):
+    """Base of every typed serving-tier failure (shed / strand).  The
+    concrete subclasses keep their historical stdlib bases
+    (``RuntimeError`` / ``ValueError``) so pre-hierarchy handlers keep
+    catching them."""
+
+
+class Overloaded(ServingError, RuntimeError):
+    """Typed admission-control rejection: the target slot's bounded
+    queue is full, so the request was SHED at submit time — never
+    enqueued, never served.  Open-loop producers treat this as
+    backpressure (back off, retry, or drop); the server counts sheds
+    in :meth:`~repro.core.serving.AsyncSolveServer.stats`."""
+
+
+class DeadlineUnmeetable(Overloaded):
+    """SLO-aware admission rejection (DESIGN.md Sec. 15): the
+    cost-model-seeded queue-wait estimate says ``arrival +
+    wait_estimate`` cannot meet ``slo_ms``, so serving the request
+    would only burn capacity on a guaranteed SLO violation.  Unlike a
+    depth shed this is NOT raised from ``submit`` — the request's
+    :class:`~repro.core.serving.SolveFuture` is returned already
+    failed with this error, so the producer's submit path stays
+    exception-free and the shed is observable exactly where every
+    other request outcome is: on the future."""
+
+
+class StrandedRequestError(ServingError, ValueError):
+    """A queued request's factor slot was evicted (or turned over to a
+    new occupant) after the request was accepted: serving it would
+    silently solve against the WRONG factor, so it fails instead.
+    Raised by the synchronous :class:`~repro.core.solver.SolveServer`
+    at pack time and surfaced through
+    :meth:`~repro.core.serving.SolveFuture.result` on the async tier.
+    ``replace`` preserves the slot generation and strands nothing;
+    only evict / re-admit turnover does."""

@@ -120,12 +120,11 @@ class FleetPlan:
 def _steady_s(n: int, k: int, grid: TrsmGrid, machine,
               n0: int | None = None, structure=None) -> float:
     """Modeled steady-state seconds for one order-n, width-k solve on
-    the grid (hoisted It-Inv sweep — the serving configuration).
-    ``structure`` prices the level-scheduled sweep's skipped blocks."""
-    n0 = n0 if n0 is not None else tuning.serving_n0(n, grid,
-                                                    structure=structure)
-    return cm.it_inv_trsm_steady_cost(
-        n, k, n0, grid.p1, grid.p2, structure=structure).time(machine)
+    the grid — delegates to :func:`repro.core.tuning.serving_steady_s`
+    so the planner and the admission controller's wait estimates price
+    the SAME model (DESIGN.md Sec. 15)."""
+    return tuning.serving_steady_s(n, k, grid, machine=machine, n0=n0,
+                                   structure=structure)
 
 
 def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
@@ -236,6 +235,11 @@ class _Bucket:
         self.solver = solver
         self.handles: dict[int, FleetHandle] = {}   # slot -> handle
         self.last_used: dict[int, int] = {}         # slot -> LRU clock
+        # slot -> the natural (d, d) factor as admitted (a reference,
+        # not a copy — typically the caller's pinned device array from
+        # place_factor): live migration re-admits it into a replanned
+        # bucket without an unscatter from cyclic storage
+        self.factors: dict[int, object] = {}
         self.admits = 0
         self.reclaims = 0
 
@@ -335,10 +339,34 @@ class SolverFleet:
         victim = b.handles.pop(slot)
         self._dir[victim.tenant].remove(victim)
         b.last_used.pop(slot, None)
+        b.factors.pop(slot, None)
         b.bank.evict(slot)           # bumps the slot generation
         b.reclaims += 1
         self.reclaims += 1
         return slot
+
+    def _admit_into(self, b: _Bucket, L, *, tenant: str,
+                    tag: object, order: int) -> FleetHandle:
+        """The admit core, targeted at one (possibly not-yet-routed)
+        bucket: reclaim-if-full, padded bank admit, handle + directory
+        bookkeeping.  :meth:`admit` routes through the plan;
+        :meth:`apply_plan` targets migration destinations directly."""
+        if b.bank.size == b.bank.capacity:
+            self._reclaim(b)
+        slot = b.bank.admit(L, pad_to=b.plan.n if order < b.plan.n
+                            else None)
+        handle = FleetHandle(bucket=b.plan.key, slot=slot,
+                             generation=b.bank.slot_generation(slot),
+                             tenant=tenant, tag=tag, order=order)
+        b.handles[slot] = handle
+        b.factors[slot] = L
+        b.admits += 1
+        self.admits += 1
+        self._dir.setdefault(tenant, []).append(handle)
+        # touch the TARGET bucket directly: during apply_plan it may
+        # not be routed in self._buckets yet
+        b.last_used[slot] = self._tick()
+        return handle
 
     def admit(self, L, *, tenant: str = "default",
               tag: object = None) -> FleetHandle:
@@ -348,19 +376,8 @@ class SolverFleet:
         (cross-tenant LRU).  Returns the tenant's :class:`FleetHandle`."""
         order = int(L.shape[-1])
         bp = self.plan.bucket_for(order)
-        b = self._buckets[bp.key]
-        if b.bank.size == b.bank.capacity:
-            self._reclaim(b)
-        slot = b.bank.admit(L, pad_to=bp.n if order < bp.n else None)
-        handle = FleetHandle(bucket=bp.key, slot=slot,
-                             generation=b.bank.slot_generation(slot),
-                             tenant=tenant, tag=tag, order=order)
-        b.handles[slot] = handle
-        b.admits += 1
-        self.admits += 1
-        self._dir.setdefault(tenant, []).append(handle)
-        self._touch(handle)
-        return handle
+        return self._admit_into(self._buckets[bp.key], L,
+                                tenant=tenant, tag=tag, order=order)
 
     def replace(self, handle: FleetHandle, L) -> FleetHandle:
         """Refresh the handle's slot in place (same order, same
@@ -374,6 +391,7 @@ class SolverFleet:
                              f"change order")
         b.bank.replace(handle.slot, L,
                        pad_to=b.plan.n if d < b.plan.n else None)
+        b.factors[handle.slot] = L
         self._touch(handle)
         return handle
 
@@ -382,6 +400,7 @@ class SolverFleet:
         b = self._check_current(handle)
         b.handles.pop(handle.slot)
         b.last_used.pop(handle.slot, None)
+        b.factors.pop(handle.slot, None)
         self._dir[handle.tenant].remove(handle)
         b.bank.evict(handle.slot)
 
@@ -415,6 +434,85 @@ class SolverFleet:
         if tenant is not None:
             return tuple(self._dir.get(tenant, ()))
         return tuple(h for hs in self._dir.values() for h in hs)
+
+    def manifest(self) -> dict[int, int]:
+        """The LIVE mixed-order manifest, ``{order: count}`` over every
+        resident handle — exactly the input :func:`plan_fleet` takes,
+        so an autoscale replan prices the population actually being
+        served, not the admission-time forecast."""
+        man: dict[int, int] = {}
+        for h in self.handles():
+            man[h.order] = man.get(h.order, 0) + 1
+        return man
+
+    def apply_plan(self, new_plan: FleetPlan, *,
+                   on_move=None) -> dict:
+        """Live-migrate the fleet onto ``new_plan`` (the Autoscaler's
+        apply path, DESIGN.md Sec. 15).
+
+        Buckets are REBUILT only where the plan demands it: a bucket
+        key that survives with sufficient capacity keeps its bank —
+        same compiled programs, zero retraces for its residents —
+        while new keys (a split) and under-capacity keys (a merge
+        growing a bucket's population; capacity is the bank's cache
+        key, so it cannot grow in place) get fresh banks.  Every
+        handle whose order now routes elsewhere is re-admitted from
+        its retained natural factor through the standard admit path
+        (hoisted phase 1 runs once per moved factor, exactly like any
+        admission) and its old slot is evicted — generation counters
+        bump, so any stale claim on the old slot stays detectable.
+        ``on_move(old_handle, new_handle)`` fires per migrated handle
+        (the async tier re-keys queued requests there, stranding
+        nothing); LRU clocks carry over so migration does not reset
+        reclaim order.  Returns ``dict(moved=[(old, new), ...],
+        opened=[...], closed=[...], rebuilt=[...])``."""
+        for d in self.manifest():
+            new_plan.bucket_for(d)       # raises if any order unroutable
+        targets: dict[tuple, _Bucket] = {}
+        opened, rebuilt = [], []
+        for bp in new_plan.buckets:
+            old = self._buckets.get(bp.key)
+            if old is not None and old.bank.capacity >= bp.capacity:
+                old.plan = bp            # keep the bank (and its key)
+                targets[bp.key] = old
+            else:
+                bank = FactorBank(
+                    self.grid, bp.n, method=bp.method, n0=bp.n0,
+                    lower=old.bank.lower if old is not None else True,
+                    transpose=old.bank.transpose if old is not None
+                    else False,
+                    precision=bp.policy,
+                    map_mode=old.bank.map_mode if old is not None
+                    else "vmap",
+                    capacity=bp.capacity, structure=bp.structure,
+                    cache=self.cache)
+                targets[bp.key] = _Bucket(bp, bank,
+                                          Solver.from_bank(bank))
+                (rebuilt if old is not None else opened).append(bp.key)
+        moved = []
+        for h in list(self.handles()):
+            src = self._buckets[h.bucket]
+            dest = targets.get(new_plan.bucket_for(h.order).key)
+            if dest is src:
+                continue                 # bucket survives: no move
+            L = src.factors[h.slot]
+            clock = src.last_used.get(h.slot, 0)
+            new_h = self._admit_into(dest, L, tenant=h.tenant,
+                                     tag=h.tag, order=h.order)
+            dest.last_used[new_h.slot] = clock   # LRU order carries
+            src.handles.pop(h.slot)
+            src.last_used.pop(h.slot, None)
+            src.factors.pop(h.slot, None)
+            self._dir[h.tenant].remove(h)
+            src.bank.evict(h.slot)       # bumps the old generation
+            moved.append((h, new_h))
+            if on_move is not None:
+                on_move(h, new_h)
+        closed = [key for key in self._buckets if key not in targets]
+        self._buckets = targets
+        self.plan = new_plan
+        return dict(moved=moved, opened=opened, closed=closed,
+                    rebuilt=rebuilt)
 
     def place_factor(self, L, order: int | None = None):
         """Pin a factor on device in its ROUTED bucket's bank (the

@@ -67,16 +67,26 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.solver import (
-    SolveServer, StrandedRequestError, static_slice)
+from repro.core import errors as _errors
+from repro.core.solver import SolveServer, static_slice
+from repro.core.solver import _warn_deprecated
 
 
-class Overloaded(RuntimeError):
-    """Typed admission-control rejection: the target slot's bounded
-    queue is full, so the request was SHED at submit time — never
-    enqueued, never served.  Open-loop producers treat this as
-    backpressure (back off, retry, or drop); the server counts sheds
-    in :meth:`AsyncSolveServer.stats`."""
+# Overloaded now lives in the unified serving-error hierarchy
+# (repro.core.errors, DESIGN.md Sec. 15); the historical spelling
+# `repro.core.serving.Overloaded` is a warn-once alias of the same
+# class via __getattr__ below.
+
+def __getattr__(name: str):
+    if name == "Overloaded":
+        _warn_deprecated("repro.core.serving.Overloaded",
+                         "repro.api.Overloaded (repro.core.errors)")
+        # warn-once: bind the module attribute so subsequent accesses
+        # resolve silently to the SAME class object
+        globals()[name] = _errors.Overloaded
+        return _errors.Overloaded
+    raise AttributeError(f"module {__name__!r} has no attribute "
+                         f"{name!r}")
 
 
 class SystemClock:
@@ -163,6 +173,7 @@ class _Request:
     order: int                  # true row count (== n unless padded)
     future: SolveFuture
     vtag: float = 0.0           # WFQ virtual finish time (set on push)
+    deadline: float | None = None   # arrival + slo (admission-stamped)
 
 
 class FairQueue:
@@ -212,9 +223,28 @@ class FairQueue:
     def weight(self, tenant) -> float:
         return self.weights.get(tenant, 1.0)
 
-    def push(self, req: _Request) -> None:
-        if len(self._reqs) >= self.depth:
-            raise Overloaded(
+    def set_weight(self, tenant, w: float) -> None:
+        """Update one tenant's fair-share weight mid-stream.  Applies
+        to stamps assigned from now on; already-queued requests keep
+        the stamps they were admitted with (no retroactive reshuffle,
+        so FIFO-per-tenant holds across the change)."""
+        if not w > 0:
+            raise ValueError(f"tenant {tenant!r} weight must be > 0, "
+                             f"got {w}")
+        self.weights[tenant] = w
+
+    def queued_width(self) -> int:
+        """Total queued RHS columns (the admission controller's
+        queue-backlog signal)."""
+        return sum(r.width for r in self._reqs)
+
+    def push(self, req: _Request, *, force: bool = False) -> None:
+        """``force=True`` bypasses the depth bound — migration re-keys
+        an old bucket's queue into a new one and must strand/shed
+        nothing, even when the target queue is momentarily over
+        depth (it drains on the next waves)."""
+        if not force and len(self._reqs) >= self.depth:
+            raise _errors.Overloaded(
                 f"slot {req.key} queue full ({self.depth} pending): "
                 f"request for tenant {req.tenant!r} shed — back off "
                 f"and resubmit")
@@ -223,20 +253,51 @@ class FairQueue:
         self._vt[req.tenant] = req.vtag
         self._reqs.append(req)
 
-    def pack(self) -> list[_Request]:
-        """Pop one wave: ascending (vtag, seq), stop at first non-fit.
-        Nonempty queue => nonempty wave (every admitted width <=
-        panel_k)."""
-        self._reqs.sort(key=lambda r: (r.vtag, r.seq))
-        width = take = 0
+    def _pack_order(self) -> list[tuple[tuple, _Request]]:
+        """The pack ordering: each request paired with its effective
+        (vtag, seq) sort key, ascending.
+
+        Plain WFQ order is each request's own stamp.  When any queued
+        request carries a ``deadline`` (SLO-aware admission), requests
+        are reordered WITHIN each tenant's FIFO window by earliest
+        deadline first: the multiset of a tenant's stamps is kept —
+        so the cross-tenant weighted interleave and the width bound
+        are exactly what plain WFQ would produce — but the tenant's
+        own requests map onto those stamp slots in EDF order
+        (deadline-less requests keep submission order via an infinite
+        deadline tiebroken by seq).  Stamps themselves are never
+        mutated, so future packs and the vclock stay consistent."""
+        if not any(r.deadline is not None for r in self._reqs):
+            return sorted(((r.vtag, r.seq), r) for r in self._reqs)
+        by_tenant: dict = {}
         for r in self._reqs:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        paired = []
+        inf = float("inf")
+        for reqs in by_tenant.values():
+            slots = sorted((r.vtag, r.seq) for r in reqs)
+            edf = sorted(reqs, key=lambda r: (
+                r.deadline if r.deadline is not None else inf, r.seq))
+            paired.extend(zip(slots, edf))
+        paired.sort(key=lambda kr: kr[0])
+        return paired
+
+    def pack(self) -> list[_Request]:
+        """Pop one wave: ascending effective (vtag, seq) — see
+        :meth:`_pack_order` — stop at first non-fit.  Nonempty queue
+        => nonempty wave (every admitted width <= panel_k)."""
+        order = self._pack_order()
+        width = take = 0
+        for _, r in order:
             if width + r.width > self.panel_k:
                 break
             width += r.width
             take += 1
-        wave, self._reqs = self._reqs[:take], self._reqs[take:]
+        wave = [r for _, r in order[:take]]
+        self._reqs = [r for _, r in order[take:]]
         if wave:
-            self._vclock = max(self._vclock, wave[-1].vtag)
+            self._vclock = max([self._vclock]
+                               + [key[0] for key, _ in order[:take]])
         if not self._reqs:
             # system idle: reset virtual time (standard WFQ), so stamp
             # magnitudes cannot grow without bound across a long run
@@ -286,7 +347,8 @@ class AsyncSolveServer:
                  queue_depth: int = 64, weights=None, clock=None,
                  slo_ms: float | None = None, max_inflight: int = 2,
                  thread_factory=None, poll_s: float = 0.001,
-                 latency_window: int = 8192):
+                 latency_window: int = 8192, admission=None,
+                 wave_ewma_alpha: float = 0.25):
         from repro.core.fleet import SolverFleet
         if isinstance(solver, SolveServer):
             raise TypeError(
@@ -315,13 +377,33 @@ class AsyncSolveServer:
             is not None else threading.Thread
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._step_lock = threading.Lock()
+        # RLock: an attached Autoscaler applies a migration from
+        # inside step() (same thread, lock already held)
+        self._step_lock = threading.RLock()
         self._queues: dict[object, FairQueue] = {}
         self._inflight: collections.deque = collections.deque()
         self._seq = 0
         self._thread = None
         self._stop_evt = threading.Event()
         self._drain_on_stop = True
+        # control-plane hooks (DESIGN.md Sec. 15): an
+        # AdmissionController consulted at submit, an Autoscaler
+        # ticked after each step — both optional, both clocked by
+        # self._clock only (no wall-clock on the decision path)
+        self.admission = admission
+        if admission is not None and hasattr(admission, "attach"):
+            admission.attach(self)
+        self._autoscaler = None
+        # live service signal per dispatch unit (bucket key in fleet
+        # mode, None in plain mode): EWMA of measured seconds per
+        # finalized wave — the admission controller's wait-estimate
+        # input once real observations exist (cost-model seed before)
+        self.wave_ewma_alpha = wave_ewma_alpha
+        self._wave_ewma: dict = {}
+        # offered / served columns per dispatch unit (the autoscaler's
+        # rate signals; under self._lock / step lock respectively)
+        self._offered_cols: collections.Counter = collections.Counter()
+        self._served_cols: collections.Counter = collections.Counter()
         # counters (under self._lock unless noted)
         self.submitted = 0
         self.served = 0            # finalized OK (step lock)
@@ -331,6 +413,54 @@ class AsyncSolveServer:
         self._latencies: collections.deque = \
             collections.deque(maxlen=latency_window)
         self._slo_violations = 0
+        self._tenants: dict[str, dict] = {}   # per-tenant breakdown
+
+    def _tenant_stats(self, tenant: str) -> dict:
+        ts = self._tenants.get(tenant)
+        if ts is None:
+            ts = self._tenants[tenant] = dict(
+                submitted=0, served=0, shed=0, deadline_shed=0,
+                stranded=0, slo_violations=0)
+        return ts
+
+    def _unit(self, key):
+        """The dispatch unit a queue key belongs to (bucket key in
+        fleet mode, None in plain mode)."""
+        return key[0] if self.fleet is not None else None
+
+    def attach_autoscaler(self, autoscaler) -> None:
+        """Hook an :class:`~repro.core.control.Autoscaler`: ``step()``
+        ticks it after finalization, on the server's injected clock."""
+        self._autoscaler = autoscaler
+
+    def set_admission(self, admission) -> None:
+        """Install (or remove, with None) the admission controller
+        after construction — e.g. only AFTER priming traffic, so
+        startup compiles never feed the controller's signals."""
+        with self._cond:
+            self.admission = admission
+        if admission is not None and hasattr(admission, "attach"):
+            admission.attach(self)
+
+    def reset_service_ewma(self) -> None:
+        """Forget the measured seconds-per-wave signal.  Startup waves
+        fold first-compile time into the EWMA; call this when priming
+        is done so admission estimates start from the cost-model seed
+        and refresh from STEADY-state waves only."""
+        with self._cond:
+            self._wave_ewma.clear()
+
+    def set_weight(self, tenant: str, w: float) -> None:
+        """Update one tenant's fair-share weight across every queue
+        (and for queues created later)."""
+        if not w > 0:
+            raise ValueError(f"tenant {tenant!r} weight must be > 0, "
+                             f"got {w}")
+        with self._lock:
+            self.weights = dict(self.weights or {})
+            self.weights[tenant] = w
+            for fq in self._queues.values():
+                fq.set_weight(tenant, w)
 
     # ------------------------------ lifecycle ------------------------------
 
@@ -472,19 +602,37 @@ class AsyncSolveServer:
             key, order = factor, int(b.shape[0])
             gen = bank.slot_generation(factor)
         with self._cond:
+            now = self._now()
             future = SolveFuture(tenant=tenant, tag=tag, factor=key,
                                  order=order, width=int(b.shape[1]),
-                                 arrival=self._now())
+                                 arrival=now)
             req = _Request(seq=self._seq, b=b, width=int(b.shape[1]),
                            tenant=tenant, key=key, gen=gen, order=order,
                            future=future)
+            if self.admission is not None:
+                # SLO-aware admission (DESIGN.md Sec. 15): the
+                # controller stamps req.deadline, or sheds by raising
+                # DeadlineUnmeetable — which surfaces ONLY through
+                # the future (submit still returns a handle)
+                try:
+                    self.admission.admit(self, key, req, now)
+                except _errors.DeadlineUnmeetable as e:
+                    self.shed += 1
+                    ts = self._tenant_stats(tenant)
+                    ts["shed"] += 1
+                    ts["deadline_shed"] += 1
+                    future._fail(e, now)
+                    return future
             try:
                 self._queue_for(key).push(req)
-            except Overloaded:
+            except _errors.Overloaded:
                 self.shed += 1
+                self._tenant_stats(tenant)["shed"] += 1
                 raise
             self._seq += 1
             self.submitted += 1
+            self._tenant_stats(tenant)["submitted"] += 1
+            self._offered_cols[self._unit(key)] += req.width
             self._cond.notify()
         return future
 
@@ -494,7 +642,10 @@ class AsyncSolveServer:
         """(live, current generation) for a queue key, either mode."""
         if self.fleet is not None:
             bucket, slot = key
-            bank = self.fleet.bucket(bucket).bank
+            try:
+                bank = self.fleet.bucket(bucket).bank
+            except KeyError:
+                return False, -1     # bucket closed by a replan
             return bank.is_live(slot), bank.slot_generation(slot)
         return self.solver.bank.is_live(key), \
             self.solver.bank.slot_generation(key)
@@ -504,7 +655,8 @@ class AsyncSolveServer:
         stale = fq.pop_if(lambda r: not live or r.gen != gen)
         for r in stale:
             self.stranded += 1
-            r.future._fail(StrandedRequestError(
+            self._tenant_stats(r.tenant)["stranded"] += 1
+            r.future._fail(_errors.StrandedRequestError(
                 f"slot {key} evicted after submission (generation "
                 f"{r.gen} -> {gen}, live={live}); the request would "
                 f"be served against the slot's new occupant — "
@@ -528,9 +680,13 @@ class AsyncSolveServer:
                             waves[key] = wave
             if not waves:
                 self._finalize(all_waves=True)
+                if self._autoscaler is not None:
+                    self._autoscaler.tick()
                 return 0
             dispatched = self._dispatch(waves)
             self._finalize(all_waves=False)
+            if self._autoscaler is not None:
+                self._autoscaler.tick()
             return dispatched
 
     def flush(self) -> None:
@@ -588,13 +744,30 @@ class AsyncSolveServer:
         pairs = self._inflight.popleft()
         jax.block_until_ready([X for _, X in pairs])
         now = self._now()
+        units_seen = set()
         for r, X in pairs:
             r.future._resolve(X, now)
             self.served += 1
+            ts = self._tenant_stats(r.tenant)
+            ts["served"] += 1
             lat = r.future.latency()
             self._latencies.append(lat)
             if self.slo_ms is not None and lat * 1e3 > self.slo_ms:
                 self._slo_violations += 1
+                ts["slo_violations"] += 1
+            unit = self._unit(r.key)
+            self._served_cols[unit] += r.width
+            # measured seconds per wave for this dispatch unit (one
+            # sample per unit per finalized wave): the live service
+            # signal wait estimation and autoscaling run on
+            if unit not in units_seen and r.future.dispatched \
+                    is not None:
+                units_seen.add(unit)
+                s = now - r.future.dispatched
+                prev = self._wave_ewma.get(unit)
+                a = self.wave_ewma_alpha
+                self._wave_ewma[unit] = s if prev is None \
+                    else (1 - a) * prev + a * s
 
     # ------------------------------- stats -------------------------------
 
@@ -602,14 +775,21 @@ class AsyncSolveServer:
         """Serving counters + the latency distribution of the last
         ``latency_window`` completed requests: submitted / served /
         shed / stranded / waves / pending / inflight, p50/p99/max
-        latency (ms), and — when an SLO was set — the violation
-        count."""
+        latency (ms), the violation count when an SLO was set, and the
+        per-tenant breakdown under ``"tenants"`` (submitted / served /
+        shed / deadline_shed / stranded / slo_violations each).
+
+        Empty-window contract: with NO completed request in the
+        window, every percentile field (``p50_ms`` / ``p99_ms`` /
+        ``max_ms``) is ``None`` — never ``0.0``, which a scraper would
+        read as an (excellent) measurement instead of an absence."""
         with self._lock:
             pending = sum(len(q) for q in self._queues.values())
             lat = sorted(self._latencies)
-        def pct(q: float) -> float:
+            tenants = {t: dict(ts) for t, ts in self._tenants.items()}
+        def pct(q: float) -> float | None:
             if not lat:
-                return 0.0
+                return None
             return lat[min(len(lat) - 1, int(q * len(lat)))] * 1e3
         return dict(
             submitted=self.submitted, served=self.served,
@@ -617,5 +797,63 @@ class AsyncSolveServer:
             pending=pending, inflight=len(self._inflight),
             queue_depth=self.queue_depth,
             p50_ms=pct(0.50), p99_ms=pct(0.99),
-            max_ms=lat[-1] * 1e3 if lat else 0.0,
-            slo_ms=self.slo_ms, slo_violations=self._slo_violations)
+            max_ms=lat[-1] * 1e3 if lat else None,
+            slo_ms=self.slo_ms, slo_violations=self._slo_violations,
+            tenants=tenants)
+
+    # ------------------------- migration support -------------------------
+
+    def rekey_queue(self, old_handle, new_handle) -> int:
+        """Live-migration hook (DESIGN.md Sec. 15): move every queued
+        request addressed at ``old_handle``'s (bucket, slot) onto
+        ``new_handle``'s, re-padding the staged RHS to the new bucket
+        order and re-stamping the generation — so a fleet replan
+        strands NOTHING.  Caller (the Autoscaler's apply path) holds
+        the step lock; this takes the submit lock itself.  Returns the
+        number of requests moved."""
+        if self.fleet is None:
+            raise ValueError("rekey_queue is fleet-mode only")
+        old_key = (old_handle.bucket, old_handle.slot)
+        new_key = (new_handle.bucket, new_handle.slot)
+        n_old, n_new = old_handle.bucket[0], new_handle.bucket[0]
+        with self._cond:
+            fq = self._queues.get(old_key)
+            if fq is None:
+                return 0
+            moved = fq.pop_if(lambda r: True)
+            target = self._queue_for(new_key)
+            for r in moved:
+                if n_new > n_old:
+                    # grow from the dispatcher's cached zero filler
+                    # (device-resident) — not jnp.pad, whose constant
+                    # fill value is a host->device upload
+                    filler = self._server_for(new_handle.bucket) \
+                        ._filler(r.b.dtype)
+                    r.b = jnp.concatenate(
+                        [r.b, static_slice((0, 0),
+                                           (n_new - n_old, r.width))
+                         (filler)], axis=0)
+                elif n_new < n_old:
+                    # rows past the true order are the admit-time zero
+                    # padding; the narrower bucket keeps >= order rows
+                    r.b = static_slice((0, 0), (n_new, r.width))(r.b)
+                r.key = new_key
+                r.gen = new_handle.generation
+                r.future.factor = new_key
+                target.push(r, force=True)
+            if not len(fq):
+                self._queues.pop(old_key, None)
+            if moved:
+                self._cond.notify()
+        return len(moved)
+
+    def drop_dispatch_unit(self, bucket_key) -> None:
+        """Forget the wave dispatcher and any empty queues of a bucket
+        the fleet closed on migration (stale queues would re-create
+        phantom slots on the next sweep)."""
+        self._servers.pop(bucket_key, None)
+        with self._lock:
+            for key in [k for k in self._queues
+                        if k[0] == bucket_key and not len(
+                            self._queues[k])]:
+                self._queues.pop(key)

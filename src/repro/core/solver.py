@@ -56,6 +56,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import errors as _errors
 from repro.core import precision as preclib
 from repro.core.bank import FactorBank
 from repro.core.grid import TrsmGrid
@@ -744,16 +745,22 @@ class Solver:
 
 # ------------------------------ SolveServer ------------------------------
 
-class StrandedRequestError(ValueError):
-    """Queued requests reference a bank slot that was TURNED OVER
-    (evicted — even if re-admitted since) after they were submitted:
-    serving them would silently solve against whatever factor occupies
-    the lane now.  The per-slot generation counter recorded at submit
-    time catches what liveness alone cannot.  A ``ValueError`` subclass
-    so pre-existing callers catching ValueError keep working; the async
-    tier (:mod:`repro.core.serving`) fails the affected
-    :class:`~repro.core.serving.SolveFuture` s with this instead of
-    raising into the drain loop."""
+# StrandedRequestError now lives in the unified serving-error
+# hierarchy (repro.core.errors, DESIGN.md Sec. 15); the historical
+# spelling `repro.core.solver.StrandedRequestError` is a warn-once
+# alias of the same class via __getattr__ below.
+
+def __getattr__(name: str):
+    if name == "StrandedRequestError":
+        _warn_deprecated("repro.core.solver.StrandedRequestError",
+                         "repro.api.StrandedRequestError "
+                         "(repro.core.errors)")
+        # warn-once: bind the module attribute so subsequent accesses
+        # (and re-imports) resolve silently to the SAME class object
+        globals()[name] = _errors.StrandedRequestError
+        return _errors.StrandedRequestError
+    raise AttributeError(f"module {__name__!r} has no attribute "
+                         f"{name!r}")
 
 
 @functools.lru_cache(maxsize=4096)
@@ -1058,7 +1065,7 @@ class SolveServer:
             or any(self._req_gen[seq] != bank.slot_generation(f)
                    for seq, _ in q)))
         if dead:
-            raise StrandedRequestError(
+            raise _errors.StrandedRequestError(
                 f"pending requests for slot(s) {dead} evicted after "
                 f"submission; drain before evicting a slot, or "
                 f"cancel(factor) to drop the stranded requests")

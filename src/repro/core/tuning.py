@@ -269,6 +269,24 @@ def serving_n0(n: int, grid, structure=None) -> int:
     return best[1]
 
 
+def serving_steady_s(n: int, k: int, grid, *,
+                     machine: cm.Machine | None = None,
+                     n0: int | None = None, structure=None) -> float:
+    """Modeled steady-state seconds for one order-n, width-k solve on
+    the grid — the HOISTED It-Inv sweep, i.e. the serving
+    configuration (DESIGN.md Secs. 9, 15).  The one spelling of this
+    quantity: the fleet planner prices bucket merges with it and the
+    admission controller seeds its queue-wait estimates with it, so
+    both control decisions price the same model.  ``n0`` defaults to
+    the hoisted-serving argmin; ``structure`` prices the
+    level-scheduled sweep's skipped blocks."""
+    machine = machine or cm.tpu_v5e()
+    n0 = n0 if n0 is not None else serving_n0(n, grid,
+                                              structure=structure)
+    return cm.it_inv_trsm_steady_cost(
+        n, k, n0, grid.p1, grid.p2, structure=structure).time(machine)
+
+
 def tuning_table(n: int, k: int, p: int) -> dict:
     """Sec. VIII report: ideal closed forms vs snapped/argmin'd plan."""
     plan = tune(n, k, p)

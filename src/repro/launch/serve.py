@@ -323,34 +323,87 @@ def serve_trsm_fleet(args):
 def serve_trsm_traffic(args):
     """Open-loop async serving: Poisson arrivals against the
     background drain loop, futures resolved as waves finalize, tail
-    latency reported against the --slo-ms objective."""
+    latency reported against the --slo-ms objective.
+
+    ``--admission slo`` runs the SLO-aware admission controller
+    (requests whose estimated queue wait cannot meet --slo-ms are shed
+    at submit with DeadlineUnmeetable, surfaced through the future);
+    ``--autoscale`` serves a mixed-order FLEET instead of a flat bank
+    and attaches the planner-driven Autoscaler (DESIGN.md Sec. 15)."""
+    import json
+
     from repro import api
     if args.precision == "fp64_refine":
         jax.config.update("jax_enable_x64", True)
     rng = np.random.default_rng(0)
     n, M = args.n, min(args.bank, 4)
     dt = np.float64 if args.precision == "fp64_refine" else np.float32
-    Ls = np.stack([np.tril(rng.standard_normal((n, n))) + n * np.eye(n)
-                   for _ in range(M)]).astype(dt)
     grid = api.make_trsm_mesh(args.p1, args.p2)
-    solver = api.Solver.from_factors(Ls, grid, method=args.method,
-                                     n0=args.n0,
-                                     precision=args.precision)
-    server = api.AsyncSolveServer(
-        solver, args.panel_k, queue_depth=args.queue_depth,
-        slo_ms=args.slo_ms).warmup()
+
+    def fresh(d):
+        return (np.tril(rng.standard_normal((d, d)))
+                + d * np.eye(d)).astype(dt)
+
+    admission = api.AdmissionController(slo_ms=args.slo_ms) \
+        if args.admission == "slo" else None
+    if args.autoscale:
+        # mixed-order fleet: half the factors at n, half at n // 2 —
+        # the spectrum the autoscaler splits/merges under load drift
+        orders = [n] * max(M // 2, 1) + [n // 2] * max(M // 2, 1)
+        manifest = {}
+        for d in orders:
+            manifest[d] = manifest.get(d, 0) + 1
+        plan = api.plan_fleet(manifest, grid, k=args.panel_k,
+                              precision=args.precision,
+                              dtype=None if args.precision else dt)
+        fleet = api.SolverFleet(grid, plan)
+        tags = []
+        for j, d in enumerate(orders):
+            tag = f"f{j}"
+            fleet.admit(fresh(d), tenant="traffic", tag=tag)
+            tags.append((tag, d))
+        server = api.AsyncSolveServer(
+            fleet, args.panel_k, queue_depth=args.queue_depth,
+            slo_ms=args.slo_ms).warmup()
+        scaler = api.Autoscaler(server)
+        policy = fleet.solver(next(iter(fleet.buckets))).policy
+    else:
+        Ls = np.stack([fresh(n) for _ in range(M)])
+        solver = api.Solver.from_factors(Ls, grid, method=args.method,
+                                         n0=args.n0,
+                                         precision=args.precision)
+        server = api.AsyncSolveServer(
+            solver, args.panel_k, queue_depth=args.queue_depth,
+            slo_ms=args.slo_ms).warmup()
+        scaler = None
+        policy = solver.policy
     width = max(args.panel_k // 4, 1)
-    pool = [jnp.asarray(rng.standard_normal((n, width)).astype(dt))
-            for _ in range(32)]
-    jax.block_until_ready(pool)
+    pools = {d: [jnp.asarray(rng.standard_normal((d, width))
+                             .astype(dt)) for _ in range(32)]
+             for d in ({n, n // 2} if args.autoscale else {n})}
+    jax.block_until_ready(list(pools.values()))
+
+    def sub(i, d=None):
+        if args.autoscale:
+            tag, order = tags[i % len(tags)]
+            return server.submit(pools[order][i % 32],
+                                 tenant="traffic", tag=tag)
+        return server.submit(pools[n][i % 32], factor=i % M)
+
     # prime every wave composition before the clock starts: lazy
     # first compiles belong to startup, not to the measured traffic
     per_wave = M * max(args.panel_k // width, 1)
     for count in range(1, per_wave + 1):
         for i in range(count):
-            server.submit(pool[i % len(pool)], factor=i % M)
+            sub(i)
         while server.pending() or server._inflight:
             server.step()
+        server.flush()
+    # admission goes live only now: priming compiles must not feed
+    # the controller's service estimates
+    server.reset_service_ewma()
+    if admission is not None:
+        server.set_admission(admission)
     gaps = rng.exponential(1.0 / args.rate, size=args.requests)
     shed = 0
     futs = []
@@ -362,27 +415,48 @@ def serve_trsm_traffic(args):
             if delay > 0:
                 time.sleep(delay)
             try:
-                futs.append((t_i, server.submit(pool[i % len(pool)],
-                                                factor=i % M)))
+                futs.append((t_i, sub(i)))
             except api.Overloaded:
-                shed += 1
-        for _, f in futs:
-            f.result(timeout=120)
+                shed += 1              # depth shed (raised at submit)
+        served, deadline_shed = [], 0
+        for t_i, f in futs:
+            try:
+                f.result(timeout=120)
+                served.append((t_i, f))
+            except api.DeadlineUnmeetable:
+                deadline_shed += 1     # SLO shed (through the future)
     elapsed = time.monotonic() - t0
-    lat = np.asarray([f.completed for _, f in futs]) \
-        - np.asarray([t for t, _ in futs])
+    lat = np.asarray([f.completed for _, f in served]) \
+        - np.asarray([t for t, _ in served])
     violations = int((lat * 1e3 > args.slo_ms).sum())
-    policy = solver.policy
-    print(f"served {len(futs)}/{args.requests} open-loop requests "
+
+    def pct(q):
+        return f"{np.percentile(lat, q) * 1e3:.2f}" if len(lat) \
+            else "n/a"
+    print(f"served {len(served)}/{args.requests} open-loop requests "
           f"(offered {args.rate:.0f} rps, goodput "
-          f"{len(futs) / elapsed:.0f} rps) against {M} factors in "
+          f"{len(served) / elapsed:.0f} rps) in "
           f"{server.stats()['waves']} waves; p50 "
-          f"{np.percentile(lat, 50) * 1e3:.2f} ms p99 "
-          f"{np.percentile(lat, 99) * 1e3:.2f} ms vs SLO "
+          f"{pct(50)} ms p99 "
+          f"{pct(99)} ms vs SLO "
           f"{args.slo_ms:.0f} ms ({violations} violations); "
-          f"shed {shed} (queue depth {args.queue_depth}) on grid "
+          f"shed {shed} at depth {args.queue_depth} + "
+          f"{deadline_shed} at admission ({args.admission}) on grid "
           f"p1={args.p1} p2={args.p2} n={n} "
           f"precision={policy.name}")
+    if scaler is not None:
+        print(f"autoscaler: {len(scaler.replans)} replan(s) "
+              + "".join(f"[{r['kind']}: {r['moved']} moved] "
+                        for r in scaler.replans)
+              + f"buckets now "
+                f"{sorted(k[0] for k in server.fleet.buckets)}")
+    if args.stats_json:
+        st = server.stats()
+        if scaler is not None:
+            st["autoscaler"] = scaler.stats()
+        if admission is not None:
+            st["admission"] = admission.stats()
+        print(json.dumps(st, default=str, sort_keys=True))
     if args.cache_stats:
         _print_cache_stats()
 
@@ -427,6 +501,22 @@ def main():
     ap.add_argument("--queue-depth", type=int, default=128,
                     help="per-slot bounded queue depth; submits beyond "
                          "it are shed with Overloaded (trsm-traffic)")
+    ap.add_argument("--admission", default="depth",
+                    choices=["depth", "slo"],
+                    help="admission policy for trsm-traffic: 'depth' "
+                         "sheds only on full queues; 'slo' also sheds "
+                         "requests whose estimated queue wait cannot "
+                         "meet --slo-ms (DeadlineUnmeetable through "
+                         "the future; DESIGN.md Sec. 15)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="serve a mixed-order fleet with the "
+                         "planner-driven Autoscaler attached: bucket "
+                         "splits/merges follow offered-load drift "
+                         "(trsm-traffic; DESIGN.md Sec. 15)")
+    ap.add_argument("--stats-json", action="store_true",
+                    help="dump one machine-readable JSON line of "
+                         "server (+ admission/autoscaler) stats after "
+                         "the run (trsm-traffic)")
     ap.add_argument("--map-mode", default="vmap",
                     choices=["vmap", "scan"],
                     help="how the bank program maps the factor axis")

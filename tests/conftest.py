@@ -70,6 +70,24 @@ class DrainDriver:
             f"(pending={self.server.pending()}, "
             f"inflight={len(self.server._inflight)})")
 
+    def run_until(self, pred, max_waves: int = 1000,
+                  advance: float = 0.0) -> int:
+        """Step until ``pred()`` is true (checked BEFORE each wave, so
+        an already-true predicate steps zero times).  The control-plane
+        harness: 'step until the autoscaler has replanned', 'until this
+        future resolved'.  Raises AssertionError after ``max_waves``."""
+        total = 0
+        for _ in range(max_waves):
+            if pred():
+                return total
+            total += self.step(advance)
+        if pred():
+            return total
+        raise AssertionError(
+            f"predicate still false after {max_waves} waves "
+            f"(pending={self.server.pending()}, "
+            f"inflight={len(self.server._inflight)})")
+
 
 @pytest.fixture
 def fake_clock():

@@ -532,6 +532,70 @@ def test_fairqueue_pop_if_removes_matching_fifo():
     assert fq.pop_if(lambda r: False) == []
 
 
+def test_fairqueue_pop_if_frees_width_and_depth():
+    fq = FairQueue(panel_k=8, depth=2)
+    fq.push(_req(0, width=3))
+    fq.push(_req(1, width=2))
+    assert fq.queued_width() == 5
+    fq.pop_if(lambda r: r.seq == 0)
+    assert fq.queued_width() == 2
+    fq.push(_req(2))                  # depth slot freed by the pop
+    assert [r.seq for r in fq.pack()] == [1, 2]
+    assert fq.pop_if(lambda r: True) == []    # empty queue: no-op
+
+
+def test_fairqueue_weight_update_under_churn():
+    fq = FairQueue(panel_k=2, depth=64)
+    seq = 0
+
+    def burst(counts):
+        nonlocal seq
+        for t, c in counts:
+            for _ in range(c):
+                fq.push(_req(seq, t))
+                seq += 1
+
+    burst([("a", 2), ("b", 2)])
+    drained = []
+    while len(fq):
+        drained.extend(fq.pack())
+    # equal weights: the wave interleaves fairly
+    assert sorted(r.tenant for r in drained[:2]) == ["a", "b"]
+    fq.set_weight("a", 4.0)           # mid-stream reweigh
+    with pytest.raises(ValueError, match="weight"):
+        fq.set_weight("a", 0.0)
+    burst([("a", 4), ("b", 4)])
+    drained2 = []
+    while len(fq):
+        drained2.extend(fq.pack())
+    # churn loses nothing, per-tenant FIFO holds, and the heavier
+    # tenant now FRONT-LOADS the drain order
+    assert len(drained2) == 8
+    for t in ("a", "b"):
+        mine = [r.seq for r in drained2 if r.tenant == t]
+        assert mine == sorted(mine)
+    first_half = [r.tenant for r in drained2[:4]]
+    assert first_half.count("a") > first_half.count("b")
+
+
+def test_server_set_weight_applies_to_live_and_future_queues(
+        grid, fake_clock, drain_driver):
+    srv, Ls, _, rng = _server(grid, clock=fake_clock,
+                              weights={"a": 1.0, "b": 1.0})
+    b = rng.standard_normal((32, 1)).astype(np.float32)
+    f0 = srv.submit(b, factor=0, tenant="a")  # queue 0 exists now
+    srv.set_weight("a", 8.0)
+    with pytest.raises(ValueError, match="weight"):
+        srv.set_weight("a", -1.0)
+    assert srv._queues[0].weight("a") == 8.0  # live queue updated
+    f1 = srv.submit(b, factor=1, tenant="a")  # queue 1 created after
+    assert srv._queues[1].weight("a") == 8.0
+    drain_driver(srv).run_until_idle()
+    srv.flush()
+    assert f0.exception(timeout=0) is None
+    assert f1.exception(timeout=0) is None
+
+
 def test_fairqueue_rejects_bad_config():
     with pytest.raises(ValueError, match="depth"):
         FairQueue(panel_k=4, depth=0)

@@ -1,0 +1,485 @@
+"""Control plane (repro.core.control / DESIGN.md Sec. 15): the
+unified ServingError hierarchy with warn-once legacy aliases,
+SLO-aware admission (deadline stamping, DeadlineUnmeetable through the
+future, the idle probe path), deadline-EDF reordering inside a
+tenant's fair-share window, and the planner-driven autoscaler —
+split under saturation, merge at idle, convergence, live migration
+that strands nothing, and the zero-retrace/zero-transfer steady state
+on non-migrating waves.
+
+Everything runs on the deterministic FakeClock/DrainDriver harness
+(tests/conftest.py): no background thread, no wall-clock reads — the
+same decision sequence replays on every run.
+"""
+
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import cost_model as cm
+from repro.core import session
+from repro.core.serving import FairQueue, _Request
+
+pytestmark = [pytest.mark.fast, pytest.mark.control]
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return api.make_trsm_mesh(1, 1)
+
+
+def _lower(d, rng):
+    L = np.tril(rng.standard_normal((d, d))).astype(np.float32)
+    L[np.diag_indices(d)] = np.abs(L[np.diag_indices(d)]) + d
+    return L
+
+
+def _rel(L, X, b):
+    X = np.asarray(X, np.float64)[:L.shape[0]]
+    return (np.linalg.norm(L.astype(np.float64) @ X - np.asarray(b))
+            / max(np.linalg.norm(b), 1e-30))
+
+
+def _fleet_server(grid, clock, *, man={32: 3, 24: 3}, panel_k=4,
+                  depth=64, slo_ms=None, admission=None, seed=0):
+    """Mixed-order fleet (merged into ONE bucket at the default
+    dispatch budget) + async server on the fake clock."""
+    rng = np.random.default_rng(seed)
+    plan = api.plan_fleet(dict(man), grid, k=panel_k)
+    fleet = api.SolverFleet(grid, plan)
+    Ls, handles = {}, {}
+    for d, count in man.items():
+        for i in range(count):
+            Ls[(d, i)] = _lower(d, rng)
+            handles[(d, i)] = fleet.admit(Ls[(d, i)],
+                                          tenant=f"t{d}", tag=f"f{i}")
+    srv = api.AsyncSolveServer(fleet, panel_k, queue_depth=depth,
+                               slo_ms=slo_ms, admission=admission,
+                               clock=clock).warmup()
+    return srv, fleet, Ls, handles, rng
+
+
+# ------------------------- error hierarchy -------------------------
+
+def test_serving_error_hierarchy():
+    assert issubclass(api.Overloaded, api.ServingError)
+    assert issubclass(api.DeadlineUnmeetable, api.Overloaded)
+    assert issubclass(api.StrandedRequestError, api.ServingError)
+    # stdlib bases are part of the compat contract: pre-hierarchy
+    # handlers written against them keep catching
+    assert issubclass(api.Overloaded, RuntimeError)
+    assert issubclass(api.StrandedRequestError, ValueError)
+    assert not issubclass(api.StrandedRequestError, api.Overloaded)
+    # one catch-all for "the serving tier refused/failed this request"
+    for exc in (api.Overloaded("x"), api.DeadlineUnmeetable("x"),
+                api.StrandedRequestError("x")):
+        with pytest.raises(api.ServingError):
+            raise exc
+
+
+def test_legacy_error_spellings_warn_once_and_alias(recwarn):
+    import repro.core.serving as serving
+    import repro.core.solver as solver
+    for mod, name in ((serving, "Overloaded"),
+                      (solver, "StrandedRequestError")):
+        mod.__dict__.pop(name, None)     # reset the warn-once binding
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            first = getattr(mod, name)
+            again = getattr(mod, name)   # second access: cached, quiet
+        assert first is again is getattr(api, name)
+        msgs = [x for x in w if "README migration table"
+                in str(x.message)]
+        assert len(msgs) == 1 and issubclass(
+            msgs[0].category, DeprecationWarning)
+
+
+def test_unknown_attr_still_raises():
+    import repro.core.serving as serving
+    import repro.core.solver as solver
+    for mod in (serving, solver):
+        with pytest.raises(AttributeError, match="no attribute"):
+            mod.no_such_name
+
+
+# ------------------------- stats contracts -------------------------
+
+def test_stats_empty_window_is_none(grid, fake_clock):
+    srv, _, _, _, _ = _fleet_server(grid, fake_clock)
+    st = srv.stats()
+    assert st["served"] == 0 and st["shed"] == 0
+    assert st["p50_ms"] is None and st["p99_ms"] is None
+    assert st["max_ms"] is None
+    assert st["tenants"] == {}
+
+
+def test_stats_per_tenant_breakdown(grid, fake_clock, drain_driver):
+    srv, fleet, Ls, handles, rng = _fleet_server(grid, fake_clock,
+                                                 slo_ms=0.5)
+    drv = drain_driver(srv)
+    for (d, i), h in handles.items():
+        srv.submit(rng.standard_normal((d, 2)).astype(np.float32),
+                   tenant=f"t{d}", tag=f"f{i}")
+    drv.run_until_idle(advance=0.25)     # every wave blows the SLO
+    srv.flush()
+    st = srv.stats()
+    assert set(st["tenants"]) == {"t32", "t24"}
+    for t in ("t32", "t24"):
+        ts = st["tenants"][t]
+        assert ts["submitted"] == ts["served"] == 3
+        assert ts["slo_violations"] == 3
+        assert ts["shed"] == ts["deadline_shed"] == 0
+        assert ts["stranded"] == 0
+    assert st["slo_violations"] == 6
+    # the breakdown is a copy: mutating it never corrupts the server
+    st["tenants"]["t32"]["served"] = 999
+    assert srv.stats()["tenants"]["t32"]["served"] == 3
+
+
+# ------------------------- admission -------------------------
+
+def test_queue_wait_estimate_arithmetic():
+    # 7 queued + 1 new = 2 waves of 4, plus 1 in flight = 3 waves
+    assert cm.queue_wait_estimate(7, 1, 1, 4, 0.01) \
+        == pytest.approx(0.03)
+    assert cm.queue_wait_estimate(0, 1, 0, 4, 0.01) \
+        == pytest.approx(0.01)
+    # dispatch overhead is paid per wave
+    assert cm.queue_wait_estimate(7, 1, 1, 4, 0.01, 0.001) \
+        == pytest.approx(0.033)
+
+
+@pytest.mark.parametrize("occupancy", [1, 6])    # 1 and C (=3+3)
+def test_admission_sheds_deadline_unmeetable(grid, fake_clock,
+                                             drain_driver, occupancy):
+    man = {32: min(occupancy, 3), 24: max(occupancy - 3, 0)}
+    man = {d: c for d, c in man.items() if c}
+    ctrl = api.AdmissionController(slo_ms=50.0)
+    srv, fleet, Ls, handles, rng = _fleet_server(
+        grid, fake_clock, man=man, slo_ms=50.0, admission=ctrl)
+    drv = drain_driver(srv)
+    keys = sorted(handles)
+    # measured signal: one wave at 10 ms -> EWMA seeds to 10 ms/wave
+    d0, i0 = keys[0]
+    first = srv.submit(rng.standard_normal((d0, 1)).astype(np.float32),
+                       tenant=f"t{d0}", tag=f"f{i0}")
+    drv.run_until_idle(advance=0.010)
+    srv.flush()
+    assert first.exception(timeout=0) is None
+    unit = next(iter(fleet.buckets))
+    assert srv._wave_ewma[unit] == pytest.approx(0.010)
+    # 50 ms / 10 ms-per-wave / (panel_k=4 cols) -> ~20 columns admit;
+    # beyond that the estimate exceeds the SLO and submits shed
+    futs = []
+    for j in range(40 * len(keys)):
+        d, i = keys[j % len(keys)]
+        futs.append(srv.submit(
+            rng.standard_normal((d, 1)).astype(np.float32),
+            tenant=f"t{d}", tag=f"f{i}"))      # NEVER raises
+    shed = [f for f in futs if f.done()]
+    ok = [f for f in futs if not f.done()]
+    assert shed and ok, (len(shed), len(ok))
+    for f in shed:
+        assert isinstance(f.exception(timeout=0),
+                          api.DeadlineUnmeetable)
+        assert isinstance(f.exception(timeout=0), api.Overloaded)
+    st = srv.stats()
+    assert st["shed"] == len(shed) == ctrl.shed
+    per_tenant = sum(ts["deadline_shed"]
+                     for ts in st["tenants"].values())
+    assert per_tenant == len(shed)
+    # admitted requests were stamped and ALL serve
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    assert all(f.exception(timeout=0) is None for f in ok)
+    assert srv.stranded == 0
+
+
+def test_admission_probe_path_unwedges(grid, fake_clock,
+                                       drain_driver):
+    ctrl = api.AdmissionController(slo_ms=10.0)
+    srv, fleet, Ls, handles, rng = _fleet_server(
+        grid, fake_clock, slo_ms=10.0, admission=ctrl)
+    unit = next(iter(fleet.buckets))
+    srv._wave_ewma[unit] = 10.0          # poisoned: 10 s per wave
+    # idle system: the probe admits anyway (and refreshes the EWMA)
+    fut = srv.submit(np.random.default_rng(1)
+                     .standard_normal((32, 1)).astype(np.float32),
+                     tenant="t32", tag="f0")
+    assert not fut.done()                # admitted, not shed
+    drain_driver(srv).run_until_idle(advance=0.0005)
+    srv.flush()
+    assert fut.exception(timeout=0) is None
+    assert srv._wave_ewma[unit] < 10.0   # signal recovered
+
+
+def test_admission_without_slo_is_depth_only(grid, fake_clock):
+    ctrl = api.AdmissionController()     # no SLO anywhere
+    srv, _, _, _, rng = _fleet_server(grid, fake_clock, depth=2,
+                                      admission=ctrl)
+    b = rng.standard_normal((32, 1)).astype(np.float32)
+    srv.submit(b, tenant="t32", tag="f0")
+    srv.submit(b, tenant="t32", tag="f0")
+    with pytest.raises(api.Overloaded):  # depth bound still raises
+        srv.submit(b, tenant="t32", tag="f0")
+    assert ctrl.shed == 0                # the controller shed nothing
+
+
+# ------------------------- deadline EDF packing -------------------------
+
+def _req(seq, tenant="t", width=1, deadline=None):
+    return _Request(seq=seq, b=None, width=width, tenant=tenant,
+                    key=0, gen=0, order=32, future=None,
+                    deadline=deadline)
+
+
+def test_pack_reorders_within_tenant_by_deadline():
+    fq = FairQueue(panel_k=3, depth=16)
+    fq.push(_req(0, deadline=9.0))
+    fq.push(_req(1, deadline=1.0))
+    fq.push(_req(2, deadline=5.0))
+    assert [r.seq for r in fq.pack()] == [1, 2, 0]
+
+
+def test_pack_without_deadlines_is_fifo():
+    fq = FairQueue(panel_k=3, depth=16)
+    for seq in range(3):
+        fq.push(_req(seq))
+    assert [r.seq for r in fq.pack()] == [0, 1, 2]
+
+
+def test_deadline_reorder_preserves_cross_tenant_shares():
+    # identical queues, one with deadlines: tenant B's positions and
+    # every tenant's SLOT COUNT in the wave must be unchanged —
+    # deadlines reorder only WITHIN a tenant's fair-share window
+    def fill(fq, with_deadlines):
+        dl = [7.0, 1.0, 4.0] if with_deadlines else [None] * 3
+        fq.push(_req(0, "a", deadline=dl[0]))
+        fq.push(_req(1, "b"))
+        fq.push(_req(2, "a", deadline=dl[1]))
+        fq.push(_req(3, "b"))
+        fq.push(_req(4, "a", deadline=dl[2]))
+        fq.push(_req(5, "b"))
+    plain = FairQueue(panel_k=6, depth=16)
+    edf = FairQueue(panel_k=6, depth=16)
+    fill(plain, False)
+    fill(edf, True)
+    base = [(r.tenant, r.seq) for r in plain.pack()]
+    wave = [(r.tenant, r.seq) for r in edf.pack()]
+    assert [t for t, _ in base] == [t for t, _ in wave]
+    assert [s for t, s in wave if t == "b"] \
+        == [s for t, s in base if t == "b"]
+    assert [s for t, s in wave if t == "a"] == [2, 4, 0]  # EDF
+    # None deadlines sort LAST within the tenant, FIFO among them
+    fq = FairQueue(panel_k=3, depth=16)
+    fq.push(_req(0))
+    fq.push(_req(1, deadline=1.0))
+    fq.push(_req(2))
+    assert [r.seq for r in fq.pack()] == [1, 0, 2]
+
+
+def test_deadline_reorder_respects_width_bound():
+    # EDF brings seq 2 forward; the width bound still stops the wave
+    # at the first non-fit IN PACK ORDER
+    fq = FairQueue(panel_k=3, depth=16)
+    fq.push(_req(0, width=2, deadline=5.0))
+    fq.push(_req(1, width=3, deadline=9.0))
+    fq.push(_req(2, width=1, deadline=1.0))
+    assert [r.seq for r in fq.pack()] == [2, 0]
+    assert [r.seq for r in fq.pack()] == [1]
+
+
+# ------------------------- autoscaler -------------------------
+
+def _pressurize(srv, scaler, handles, rng, clock, count=20):
+    """Re-baseline the rate window, then offer a burst over a short
+    interval so the next tick sees saturation."""
+    scaler.observe(now=clock.monotonic())
+    futs = []
+    for j in range(count):
+        for (d, i) in sorted(handles):
+            futs.append(srv.submit(
+                rng.standard_normal((d, 4)).astype(np.float32),
+                tenant=f"t{d}", tag=f"f{i}"))
+    clock.advance(0.01)
+    return futs
+
+
+def test_autoscaler_requires_fleet(grid, fake_clock):
+    Ls = np.stack([_lower(16, np.random.default_rng(0))])
+    solver = api.Solver.from_factors(Ls, grid, n0=8)
+    srv = api.AsyncSolveServer(solver, 4, clock=fake_clock)
+    with pytest.raises(ValueError, match="fleet"):
+        api.Autoscaler(srv)
+
+
+def test_autoscale_split_triggers_and_converges(grid, fake_clock,
+                                                drain_driver):
+    srv, fleet, Ls, handles, rng = _fleet_server(grid, fake_clock)
+    drv = drain_driver(srv)
+    scaler = api.Autoscaler(srv, dwell_s=0.5, rate_alpha=1.0)
+    assert sorted(k[0] for k in fleet.buckets) == [32]   # merged
+    # one measured wave -> finite service signal
+    f0 = srv.submit(rng.standard_normal((32, 2)).astype(np.float32),
+                    tenant="t32", tag="f0")
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    futs = _pressurize(srv, scaler, handles, rng, fake_clock)
+    report = scaler.tick(now=fake_clock.monotonic())
+    assert report is not None and len(report["moved"]) == 3
+    assert sorted(k[0] for k in fleet.buckets) == [24, 32]
+    assert scaler.replans[-1]["kind"] == "split"
+    # generations: every live handle still round-trips the directory
+    for h in fleet.handles():
+        assert fleet.bucket(h.bucket).bank.slot_generation(h.slot) \
+            == h.generation
+    # nothing stranded: every queued future resolves CORRECTLY
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    assert srv.stranded == 0
+    for f in futs:
+        assert f.exception(timeout=0) is None
+    # convergence: sustained pressure re-prices to the SAME buckets
+    fake_clock.advance(1.0)
+    _pressurize(srv, scaler, handles, rng, fake_clock)
+    assert scaler.tick(now=fake_clock.monotonic()) is None
+    assert len(scaler.replans) == 1
+    # ...and the split-time dispatch budget itself is a fixed point
+    fixed = scaler.replan(scaler.replans[-1]["dispatch_s"])
+    assert set(b.key for b in fixed.buckets) == set(fleet.buckets)
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+
+
+def test_autoscale_merge_triggers_and_converges(grid, fake_clock,
+                                                drain_driver):
+    srv, fleet, Ls, handles, rng = _fleet_server(grid, fake_clock)
+    drv = drain_driver(srv)
+    scaler = api.Autoscaler(srv, dwell_s=0.5, rate_alpha=1.0)
+    f0 = srv.submit(rng.standard_normal((32, 2)).astype(np.float32),
+                    tenant="t32", tag="f0")
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    futs = _pressurize(srv, scaler, handles, rng, fake_clock)
+    scaler.tick(now=fake_clock.monotonic())
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    assert sorted(k[0] for k in fleet.buckets) == [24, 32]
+    # idle: the offered EWMA decays to ~0 -> merge back to one bucket
+    fake_clock.advance(5.0)
+    report = None
+    for _ in range(4):
+        fake_clock.advance(5.0)
+        report = scaler.tick(now=fake_clock.monotonic())
+        if report is not None:
+            break
+    assert report is not None
+    assert sorted(k[0] for k in fleet.buckets) == [32]
+    assert scaler.replans[-1]["kind"] == "merge"
+    assert srv.stranded == 0
+    # converged: further idle ticks are no-ops
+    fake_clock.advance(5.0)
+    assert scaler.tick(now=fake_clock.monotonic()) is None
+    # the re-merged bucket still serves every order correctly
+    b = rng.standard_normal((24, 1)).astype(np.float32)
+    f = srv.submit(b, tenant="t24", tag="f1")
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    assert f.exception(timeout=0) is None
+    assert _rel(Ls[(24, 1)], f.result(timeout=0), b) < 1e-4
+
+
+@pytest.mark.parametrize("occupancy", [1, 6])
+def test_migrate_under_flight_strands_nothing(grid, fake_clock,
+                                              drain_driver,
+                                              occupancy):
+    man = {32: min(occupancy, 3), 24: max(occupancy - 3, 0)}
+    man = {d: c for d, c in man.items() if c}
+    srv, fleet, Ls, handles, rng = _fleet_server(grid, fake_clock,
+                                                 man=man)
+    drv = drain_driver(srv)
+    # attach=False: this test drives replan/apply BY HAND while a
+    # wave is in flight — no step-driven ticks interfering
+    scaler = api.Autoscaler(srv, attach=False)
+    keys = sorted(handles)
+    # queue several waves' worth, dispatch ONE (leaves it in flight)
+    bs = []
+    futs = []
+    for j in range(4):
+        for (d, i) in keys:
+            b = rng.standard_normal((d, 2)).astype(np.float32)
+            bs.append(((d, i), b))
+            futs.append(srv.submit(b, tenant=f"t{d}", tag=f"f{i}"))
+    drv.step(advance=0.001)
+    assert srv._inflight
+    # force a migration while that wave is in flight: re-price at
+    # zero dispatch budget (full split by order)
+    plan = scaler.replan(0.0)
+    queued_before = srv.pending()
+    if len(man) > 1:
+        assert len(plan.buckets) == 2    # it IS a real split
+        report = scaler.apply(plan)
+        assert len(report["moved"]) == man[24]
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    assert srv.stranded == 0
+    for ((d, i), b), f in zip(bs, futs):
+        assert f.exception(timeout=0) is None
+        X = np.asarray(f.result(timeout=0))
+        assert _rel(Ls[(d, i)], X[:d], b) < 1e-4
+    assert srv.pending() == 0 and not srv._inflight
+
+
+def test_non_migrating_waves_stay_zero_retrace_zero_transfer(
+        grid, fake_clock, drain_driver):
+    srv, fleet, Ls, handles, rng = _fleet_server(grid, fake_clock)
+    drv = drain_driver(srv)
+    # dwell blocks every replan after the first: steady-state waves
+    # must run with NO further migrations
+    scaler = api.Autoscaler(srv, dwell_s=1e9, rate_alpha=1.0)
+    # split, then run one wave per bucket (first-compile of the new
+    # bucket belongs to the migration, not to steady state)
+    f0 = srv.submit(rng.standard_normal((32, 2)).astype(np.float32),
+                    tenant="t32", tag="f0")
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    futs = _pressurize(srv, scaler, handles, rng, fake_clock, count=3)
+    assert scaler.tick(now=fake_clock.monotonic()) is not None
+    drv.run_until_idle(advance=0.001)
+    srv.flush()
+    # steady state AFTER the migration: zero retraces, zero transfers
+    solve_keys = [fleet.solver(key).spec_for(srv.panel_k)
+                  for key in fleet.buckets]
+    traces0 = sum(session.TRACE_COUNTS[k] for k in solve_keys)
+    # same (slot x width) composition the drained burst compiled, so
+    # nothing under the guard traces for the first time
+    pool = {d: jax.numpy.asarray(
+        rng.standard_normal((d, 4)).astype(np.float32))
+        for d in (32, 24)}
+    jax.block_until_ready(list(pool.values()))
+    steady = []
+    with jax.transfer_guard("disallow"):
+        for j in range(6):
+            for (d, i) in sorted(handles):
+                steady.append(srv.submit(pool[d], tenant=f"t{d}",
+                                         tag=f"f{i}"))
+            drv.run_until_idle(advance=0.001)
+        srv.flush()
+    assert sum(session.TRACE_COUNTS[k] for k in solve_keys) \
+        == traces0
+    for f in steady:
+        assert f.exception(timeout=0) is None
+    assert srv.stranded == 0
+
+
+def test_autoscaler_stats_json_serializable(grid, fake_clock):
+    srv, fleet, _, _, _ = _fleet_server(grid, fake_clock)
+    scaler = api.Autoscaler(srv)
+    ctrl = api.AdmissionController(slo_ms=5.0)
+    json.dumps(scaler.stats())
+    json.dumps(ctrl.stats())
+    json.dumps(srv.stats())
