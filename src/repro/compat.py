@@ -17,6 +17,14 @@ import jax
 
 _HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
 _HAS_PCAST = hasattr(jax.lax, "pcast")
+# Async (start/finish split) collectives: no released jax exposes them
+# as stable lax primitives yet (XLA performs the split internally via
+# its latency-hiding scheduler), so this probes for the experimental
+# spelling and otherwise reports False — callers then fall back to
+# eager-issue + identity-finish, which is value-identical (see
+# ``async_*`` below and DESIGN.md Sec. 16).
+_HAS_ASYNC_COLLECTIVES = hasattr(jax.lax, "all_gather_start") and \
+    hasattr(jax.lax, "all_gather_finish")
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
@@ -53,6 +61,51 @@ def axis_size(axis_name) -> int:
             return int(math.prod(jax.lax.axis_size(a) for a in axis_name))
         return int(jax.lax.axis_size(axis_name))
     return int(jax.lax.psum(1, axis_name))
+
+
+def has_async_collectives() -> bool:
+    """Whether the installed jax can express a true start/finish
+    collective split.  False on every 0.4.x (and, at the time of
+    writing, every released) jax: there the ``async_*_start`` shims
+    below issue the collective eagerly and ``async_finish`` is the
+    identity — the VALUES are identical either way, and XLA's
+    latency-hiding scheduler is still free to overlap the issued
+    collective with any data-independent compute between start and
+    finish (DESIGN.md Sec. 16)."""
+    return _HAS_ASYNC_COLLECTIVES
+
+
+def async_all_gather_start(x, axis_name, *, axis: int = 0,
+                           tiled: bool = False):
+    """Begin an all-gather; returns an opaque handle for
+    :func:`async_finish`.  True split where jax exposes one, else the
+    eager synchronous gather (the handle is then just the result)."""
+    if _HAS_ASYNC_COLLECTIVES:
+        return jax.lax.all_gather_start(x, axis_name, axis=axis,
+                                        tiled=tiled)
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+
+def async_all_gather_finish(handle):
+    """Complete an all-gather started by :func:`async_all_gather_start`."""
+    if _HAS_ASYNC_COLLECTIVES:
+        return jax.lax.all_gather_finish(handle)
+    return handle
+
+
+def async_ppermute_start(x, axis_name, perm):
+    """Begin a ppermute; returns an opaque handle for
+    :func:`async_finish`.  Same fallback contract as the gather."""
+    if _HAS_ASYNC_COLLECTIVES:
+        return jax.lax.ppermute_start(x, axis_name, perm=perm)
+    return jax.lax.ppermute(x, axis_name, perm=perm)
+
+
+def async_ppermute_finish(handle):
+    """Complete a ppermute started by :func:`async_ppermute_start`."""
+    if _HAS_ASYNC_COLLECTIVES:
+        return jax.lax.ppermute_finish(handle)
+    return handle
 
 
 def abstract_mesh(axis_sizes, axis_names, **kw):

@@ -113,6 +113,7 @@ class FactorBank:
                  machine=None, block_inv: Callable | None = None,
                  dtype=None, precision=None, map_mode: str = "vmap",
                  capacity: int | None = None, structure=None,
+                 overlap="auto",
                  cache: CompiledSolverCache | None = None):
         if precision is None and dtype is None:
             dtype = jnp.float32
@@ -130,6 +131,11 @@ class FactorBank:
         if structure is not None:
             structure.validate_for(n, lower=lower, transpose=transpose)
         self.structure = structure
+        # software pipelining of the steady-state sweep (DESIGN.md
+        # Sec. 16): "auto" -> "on" (results are bit-identical either
+        # way); "off"/None keys the pre-overlap program.
+        from repro.core import solver as solverlib
+        self.overlap = solverlib._normalize_overlap(overlap)
         self.grid = grid
         self.n = n
         self.method = method

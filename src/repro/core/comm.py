@@ -177,6 +177,47 @@ def ppermute(x, axis_name, perm: Sequence[tuple[int, int]]):
     return jax.lax.ppermute(x, axis_name, perm)
 
 
+# ------------------- async (start/finish) wrappers -------------------
+#
+# Software-pipelining primitives (DESIGN.md Sec. 16): ``*_start``
+# issues the collective and returns an opaque handle; ``*_finish``
+# yields its value.  The COST is recorded once, at start — that is
+# where the messages leave the wire — so a start/finish pair prices
+# identically to the synchronous wrapper it replaces.  On jax builds
+# with no async collective API (every 0.4.x), ``repro.compat`` issues
+# the collective eagerly and finish is the identity: bit-identical
+# values, with overlap left to XLA's latency-hiding scheduler (the
+# data dependence between start and finish is the same either way).
+
+def all_gather_start(x, axis_name, *, axis: int = 0,
+                     tiled: bool = False):
+    """Begin ``all_gather``; pair with :func:`all_gather_finish`."""
+    p = _axis_size(axis_name)
+    n_total = _size(x) * p
+    _rec("allgather", axis_name, p, n_total,
+         s=_lg(p), w=n_total * _ind(p), f=0.0)
+    return compat.async_all_gather_start(x, axis_name, axis=axis,
+                                         tiled=tiled)
+
+
+def all_gather_finish(handle):
+    """Complete an :func:`all_gather_start` (cost already recorded)."""
+    return compat.async_all_gather_finish(handle)
+
+
+def ppermute_start(x, axis_name, perm: Sequence[tuple[int, int]]):
+    """Begin ``ppermute``; pair with :func:`ppermute_finish`."""
+    p = _axis_size(axis_name)
+    n_local = _size(x)
+    _rec("permute", axis_name, p, n_local, s=1.0, w=n_local, f=0.0)
+    return compat.async_ppermute_start(x, axis_name, perm)
+
+
+def ppermute_finish(handle):
+    """Complete a :func:`ppermute_start` (cost already recorded)."""
+    return compat.async_ppermute_finish(handle)
+
+
 def bcast_from(x, axis_name, root: int = 0):
     """Broadcast the value held at ``root`` along ``axis_name`` to all.
 

@@ -16,6 +16,7 @@ choice is machine dependent") and for the roofline collective term.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 
@@ -35,6 +36,8 @@ class Cost:
     f: float = 0.0   # flops
 
     def __add__(self, o: "Cost") -> "Cost":
+        if not isinstance(o, Cost):      # PipelinedCost handles Cost +
+            return NotImplemented        # PipelinedCost via __radd__
         return Cost(self.s + o.s, self.w + o.w, self.f + o.f)
 
     def __mul__(self, c: float) -> "Cost":
@@ -44,6 +47,75 @@ class Cost:
 
     def time(self, m: "Machine") -> float:
         return m.alpha * self.s + m.beta * self.w + m.gamma * self.f
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinedCost:
+    """A sequence of pipelined stages, each a (comm, comp) pair of
+    :class:`Cost` terms that execute CONCURRENTLY (DESIGN.md Sec. 16).
+
+    The S/W/F *counts* are unchanged by overlap — the same messages,
+    words and flops happen — so ``s``/``w``/``f`` sum both sides; only
+    ``time`` changes: each stage prices ``max(comm.time, comp.time)``
+    instead of their sum, which is the overlapped sweep's steady-state
+    critical path (the panel collective of step i+1 rides under step
+    i's GEMMs).  Stages are sequential with respect to each other, so
+    ``__add__`` concatenates stage lists; adding a plain :class:`Cost`
+    appends it as a serial stage (``max(0, c) == c``).
+    """
+    stages: tuple = ()        # tuple of (comm: Cost, comp: Cost) pairs
+
+    @property
+    def s(self) -> float:
+        return sum(c.s + g.s for c, g in self.stages)
+
+    @property
+    def w(self) -> float:
+        return sum(c.w + g.w for c, g in self.stages)
+
+    @property
+    def f(self) -> float:
+        return sum(c.f + g.f for c, g in self.stages)
+
+    def time(self, m: "Machine") -> float:
+        return sum(max(c.time(m), g.time(m)) for c, g in self.stages)
+
+    def serial(self) -> Cost:
+        """Collapse to a plain (non-overlapped) :class:`Cost`."""
+        return Cost(self.s, self.w, self.f)
+
+    @staticmethod
+    def _lift(o) -> tuple:
+        if isinstance(o, PipelinedCost):
+            return o.stages
+        if isinstance(o, Cost):
+            return ((Cost(), o),)
+        return NotImplemented
+
+    def __add__(self, o):
+        stages = self._lift(o)
+        if stages is NotImplemented:
+            return NotImplemented
+        return PipelinedCost(self.stages + stages)
+
+    def __radd__(self, o):
+        stages = self._lift(o)
+        if stages is NotImplemented:
+            return NotImplemented
+        return PipelinedCost(stages + self.stages)
+
+    def __mul__(self, c: float):
+        return PipelinedCost(tuple((cm * c, cp * c)
+                                   for cm, cp in self.stages))
+
+    __rmul__ = __mul__
+
+
+def pipelined(comm: Cost, comp: Cost) -> PipelinedCost:
+    """One pipelined stage: ``comm`` and ``comp`` overlap, so the
+    stage's machine time is ``max`` of the two instead of their sum
+    (the counts still sum — overlap hides time, not traffic)."""
+    return PipelinedCost(((comm, comp),))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +147,95 @@ def tpu_v5e_dcn(dtype_bytes: int = 2) -> Machine:
         beta=dtype_bytes / 25e9,
         gamma=1.0 / 197e12,
     )
+
+
+# --------------------- measured-cost calibration ---------------------
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """A fitted per-:class:`Machine` correction (DESIGN.md Sec. 16).
+
+    The closed forms above predict in MODEL units (messages, words,
+    flops x nominal hardware constants); measured wall times on a real
+    host differ by per-term constant factors (dispatch overhead per
+    collective, achieved vs peak bandwidth, achieved vs peak flops).
+    ``(a, b, g)`` are multiplicative rescales of (alpha, beta, gamma)
+    fitted by least squares from ``bench_paper_table`` measurements
+    (committed in ``benchmarks/BENCH_overlap.json``); ``dispatch_s`` is
+    the measured per-program host dispatch overhead, which keeps
+    absolute-seconds comparisons (``plan_fleet`` merges, queue-wait
+    admission) in the SAME units as the calibrated steady costs.
+
+    Argmin plan choices are invariant under a UNIFORM rescale; a
+    non-uniform fit deliberately shifts the latency/bandwidth/compute
+    balance toward what the host actually delivers — that is the
+    point.  Any plan change this induces is asserted by test, not just
+    logged (tests/test_overlap.py)."""
+    a: float = 1.0
+    b: float = 1.0
+    g: float = 1.0
+    dispatch_s: float | None = None
+
+    def apply(self, m: Machine) -> Machine:
+        return Machine(name=m.name + "+cal", alpha=m.alpha * self.a,
+                       beta=m.beta * self.b, gamma=m.gamma * self.g)
+
+
+def fit_calibration(rows, machine: Machine,
+                    dispatch_s: float | None = None) -> Calibration:
+    """Least-squares fit of the (a, b, g) rescale from measured rows.
+
+    Each row needs model counts ``s``/``w``/``f`` and a wall-clock
+    ``measured_s``; the fit solves ``min || A x - t ||`` with
+    ``A[i] = [alpha*s_i, beta*w_i, gamma*f_i]`` (plain
+    ``numpy.linalg.lstsq`` — no scipy dependency) and clips the scales
+    positive: a negative term rate is never physical, it only means
+    the regime set did not separate that term."""
+    import numpy as np
+    A = np.array([[machine.alpha * r["s"], machine.beta * r["w"],
+                   machine.gamma * r["f"]] for r in rows], dtype=float)
+    t = np.array([r["measured_s"] for r in rows], dtype=float)
+    x, *_ = np.linalg.lstsq(A, t, rcond=None)
+    x = np.clip(x, 1e-9, None)
+    return Calibration(a=float(x[0]), b=float(x[1]), g=float(x[2]),
+                       dispatch_s=dispatch_s)
+
+
+def _default_calibration_path():
+    import pathlib
+    return pathlib.Path(__file__).resolve().parents[3] \
+        / "benchmarks" / "BENCH_overlap.json"
+
+
+def load_calibration(path=None) -> Calibration | None:
+    """Load the committed calibration (``benchmarks/BENCH_overlap.json``,
+    written by ``benchmarks/bench_paper_table.py``).  Returns None when
+    the file is missing or has no calibration block — planners then
+    fall back to the nominal machine constants.  Cached per path."""
+    import pathlib
+    p = pathlib.Path(path) if path is not None \
+        else _default_calibration_path()
+    return _load_calibration_cached(str(p))
+
+
+@functools.lru_cache(maxsize=8)
+def _load_calibration_cached(path: str) -> Calibration | None:
+    import json
+    import pathlib
+    p = pathlib.Path(path)
+    if not p.is_file():
+        return None
+    try:
+        payload = json.loads(p.read_text())
+        cal = payload.get("calibration")
+        if not cal:
+            return None
+        ds = cal.get("dispatch_s")
+        return Calibration(a=float(cal["a"]), b=float(cal["b"]),
+                           g=float(cal["g"]),
+                           dispatch_s=None if ds is None else float(ds))
+    except (ValueError, KeyError, TypeError, OSError):
+        return None
 
 
 # --------------------- collectives (Sec. II-C1) ---------------------
@@ -180,27 +341,64 @@ def rec_trsm_cost(n: float, k: float, p: float,
     recursion is not over-credited against It-Inv serving
     (DESIGN.md Sec. 12).
 
-    ``structure`` is accepted for signature parity with the It-Inv
-    side but priced DENSE: Rec-TRSM has no structure-aware schedule,
-    so crediting it with skipped blocks it cannot skip would bias the
-    planner's dispatch (DESIGN.md Sec. 14)."""
-    del structure  # priced dense — see docstring
+    ``structure`` (a non-dense ``FactorStructure``) prices the
+    STRUCTURED recursion from the :class:`StructureInfo` nnz counts:
+    admission masks the factor to its block structure, so the
+    L-proportional terms — the n^2-order words that move the factor
+    and the trailing-MM flops — scale with the factor's block fill
+    (diagonal blocks included, they are always present).  The
+    RHS-proportional nk words stay dense (B/X are dense regardless of
+    L's structure), and the message count S is NOT scaled: the
+    recursion depth and its base-case collectives are structure-blind
+    (Rec-TRSM has no level schedule to skip them).
+    Before this, the rec side was priced dense, which over-priced rec
+    on banded/block-sparse specs and biased
+    ``tuning.choose_serving_method`` toward It-Inv (DESIGN.md
+    Sec. 14/16)."""
     if model not in ("paper", "tang2024"):
         raise ValueError(f"unknown rec cost model {model!r}")
+    fill = 1.0
+    if structure is not None and not structure.is_dense:
+        fill = _structure_fill_total(structure, n)
     corrected = model == "tang2024"
     if n < 4 * k / p:      # one large dimension
-        return Cost(s=lg(p), w=n * n, f=n * n * k / p)
+        return Cost(s=lg(p), w=n * n * fill, f=n * n * k / p * fill)
     if n > 4 * k * math.sqrt(p):   # two large dimensions
         w = n * k * lg(p) / math.sqrt(p)
         if corrected:
-            w += n * n / math.sqrt(p)
-        return Cost(s=math.sqrt(p), w=w, f=n * n * k / p)
+            w += n * n / math.sqrt(p) * fill
+        return Cost(s=math.sqrt(p), w=w, f=n * n * k / p * fill)
     # three large dimensions
     w = (n * n * k / p) ** (2.0 / 3.0)
     if corrected:
         w *= max(lg(n / k), 1.0)   # one optimal-size term per level
     return Cost(s=(n * p / k) ** (2.0 / 3.0) * lg(p), w=w,
-                f=n * n * k / p)
+                f=n * n * k / p * fill)
+
+
+def _structure_fill_total(structure, n: float) -> float:
+    """Whole-factor (diagonal included) block fill of a structure at
+    its natural granularity, from the admission analysis's nnz counts
+    (``StructureInfo``, DESIGN.md Sec. 14).  Falls back to dense (1.0)
+    when n cannot host the structure's granularity."""
+    from repro.core.structure import analyze
+    n = int(n)
+    if n < 2:
+        return 1.0
+    if structure.kind == "block_sparse":
+        g = len(structure.mask)
+        n0 = n // g if g and n % g == 0 else 0
+    else:
+        g = 64
+        while g > 1 and n % g:
+            g //= 2
+        n0 = n // g
+    if n0 < 1 or n % n0:
+        return 1.0
+    info = analyze(structure, n, n0)
+    m = info.m
+    total = m * (m + 1) / 2.0
+    return (info.nnz_offdiag + m) / total if total else 1.0
 
 
 # --------------------- Triangular inversion (Sec. V) ---------------------
@@ -232,18 +430,27 @@ def inv_phase_cost(n: float, n0: float, r1: float, r2: float,
 
 
 def solve_phase_cost(n: float, k: float, n0: float,
-                     p1: float, p2: float) -> Cost:
-    """n/n0 block solves:  X_i = L~_ii B_i  + allreduce over x (Sec. VII-B)."""
+                     p1: float, p2: float, overlap: bool = False):
+    """n/n0 block solves:  X_i = L~_ii B_i  + allreduce over x (Sec. VII-B).
+
+    ``overlap`` returns the PIPELINED form (DESIGN.md Sec. 16): the
+    per-step collective words/messages and the per-step GEMM flops
+    price ``max(comm, comp)`` instead of their sum.  The counts are
+    identical either way — overlap hides time, not traffic."""
     m = n / n0
     p = p1 * p1 * p2
     w = m * ((n0 * n0 / (p1 * p1)) * ind(p2)
              + 4 * (n0 * k / (p1 * p2)) * ind(p1))
-    return Cost(s=m * lg(p), w=w, f=m * n0 * n0 * k / (p1 * p1 * p2))
+    comm = Cost(s=m * lg(p), w=w)
+    comp = Cost(f=m * n0 * n0 * k / (p1 * p1 * p2))
+    if overlap:
+        return pipelined(comm, comp)
+    return comm + comp
 
 
 def update_phase_cost(n: float, k: float, n0: float,
                       p1: float, p2: float,
-                      structure=None) -> Cost:
+                      structure=None, overlap: bool = False):
     """Trailing updates: bcast of the L~ panel + GEMM + allreduce (VII-C).
 
     With a non-dense ``structure`` (a ``FactorStructure``), the sweep
@@ -251,7 +458,12 @@ def update_phase_cost(n: float, k: float, n0: float,
     block fill (nnz_offdiag / (m(m-1)/2), the dense count), and the
     latency term counts only the columns that have at least one
     dependent block row — a column with no off-diagonal nonzero skips
-    the update AND both collectives (DESIGN.md Sec. 14)."""
+    the update AND both collectives (DESIGN.md Sec. 14).
+
+    ``overlap`` returns the pipelined ``max(comm, comp)`` form — the
+    double-buffered sweep starts panel i+1's allgather before panel
+    i's update GEMM executes (Sec. 16); skipped spans skip the
+    prefetch too, so the structured scaling applies to both sides."""
     m = n / n0
     p = p1 * p1 * p2
     w = (m - 1) * (4 * (n * n0 - n) / (p1 * p1) * ind(p2)
@@ -266,28 +478,34 @@ def update_phase_cost(n: float, k: float, n0: float,
         fill = info.nnz_offdiag / dense_off if dense_off else 0.0
         cols = info.update_cols / (mi - 1.0) if mi > 1 else 0.0
         w, f, s = w * fill, f * fill, s * cols
+    if overlap:
+        return pipelined(Cost(s=s, w=w), Cost(f=f))
     return Cost(s=s, w=w, f=f)
 
 
 def it_inv_trsm_cost(n: float, k: float, n0: float, p1: float, p2: float,
-                     r1: float, r2: float) -> Cost:
+                     r1: float, r2: float, overlap: bool = False):
     p = p1 * p1 * p2
     return (inv_phase_cost(n, n0, r1, r2, p)
-            + solve_phase_cost(n, k, n0, p1, p2)
-            + update_phase_cost(n, k, n0, p1, p2))
+            + solve_phase_cost(n, k, n0, p1, p2, overlap=overlap)
+            + update_phase_cost(n, k, n0, p1, p2, overlap=overlap))
 
 
 def it_inv_trsm_steady_cost(n: float, k: float, n0: float,
                             p1: float, p2: float,
-                            structure=None) -> Cost:
+                            structure=None, overlap: bool = False):
     """Per-solve It-Inv cost in the HOISTED steady state (DESIGN.md
     Secs. 9-10): the Diagonal-Inverter ran once at factor admission, so
     a resident-factor solve pays only the sweep (solve + update
     phases).  ``structure`` prices the level-scheduled sweep: the solve
     phase is unchanged (every diagonal block is on its own block row's
-    critical path), the update phase pays only for nonzero blocks."""
-    return (solve_phase_cost(n, k, n0, p1, p2)
-            + update_phase_cost(n, k, n0, p1, p2, structure=structure))
+    critical path), the update phase pays only for nonzero blocks.
+    ``overlap`` prices the double-buffered sweep's ``max(comm, comp)``
+    per phase (a :class:`PipelinedCost` — same counts, smaller
+    ``time``)."""
+    return (solve_phase_cost(n, k, n0, p1, p2, overlap=overlap)
+            + update_phase_cost(n, k, n0, p1, p2, structure=structure,
+                                overlap=overlap))
 
 
 # ------------------- control-plane wait pricing -------------------

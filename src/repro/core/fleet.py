@@ -75,6 +75,7 @@ class BucketPlan:
     merged_s: float              # modeled s/wave serving members here
     split_s: float               # modeled s/wave with per-order banks
     structure: object | None = None   # FactorStructure (None = dense)
+    overlap: str | None = "on"   # normalized SolveSpec.overlap value
 
     @property
     def key(self) -> tuple:
@@ -118,19 +119,21 @@ class FleetPlan:
 
 
 def _steady_s(n: int, k: int, grid: TrsmGrid, machine,
-              n0: int | None = None, structure=None) -> float:
+              n0: int | None = None, structure=None,
+              overlap: bool = True) -> float:
     """Modeled steady-state seconds for one order-n, width-k solve on
     the grid — delegates to :func:`repro.core.tuning.serving_steady_s`
     so the planner and the admission controller's wait estimates price
     the SAME model (DESIGN.md Sec. 15)."""
     return tuning.serving_steady_s(n, k, grid, machine=machine, n0=n0,
-                                   structure=structure)
+                                   structure=structure, overlap=overlap)
 
 
 def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
                dtype=None, machine: cm.Machine | None = None,
-               dispatch_s: float = DEFAULT_DISPATCH_S,
-               headroom: int = 0, structure=None) -> FleetPlan:
+               dispatch_s: float | None = None,
+               headroom: int = 0, structure=None,
+               overlap="auto") -> FleetPlan:
     """Decide the fleet's buckets a priori — pure cost-model
     arithmetic, no compilation, no devices (a mesh-less
     ``plan_grid(p1, p2)`` works).
@@ -149,12 +152,23 @@ def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
     adds spare capacity slots per bucket (reclaim-free churn room).
     ``structure`` (a :class:`~repro.core.structure.FactorStructure`)
     declares the block structure every member factor honors; it prices
-    the It-Inv side of each bucket's method choice (the recursive side
-    stays dense — it cannot skip blocks), picks each bucket's n0 from
-    the structured argmin, and is stamped on the plan so
+    BOTH sides of each bucket's method choice (the It-Inv side from
+    the skipped blocks, the recursive side from the mask's nnz — the
+    admission mask zeroes the factor either way), picks each bucket's
+    n0 from the structured argmin, and is stamped on the plan so
     :class:`SolverFleet` builds structured banks.  Padding into a
     bucket preserves the promise: the pad is a blockdiag(L, I) whose
     identity tail lives on diagonal blocks, which every mask keeps.
+
+    ``machine`` defaults to the CALIBRATED machine when a committed
+    calibration exists (``tuning.default_machine``, DESIGN.md
+    Sec. 16), and an unset ``dispatch_s`` to the calibration's
+    MEASURED per-dispatch overhead (falling back to
+    :data:`DEFAULT_DISPATCH_S`) — the merge comparison is an absolute
+    seconds-vs-seconds tradeoff, so both sides must be in the same
+    measured units.  ``overlap`` prices buckets with the pipelined
+    sweep (the serving default) and is stamped on each bucket so the
+    fleet's banks compile the matching program.
     """
     if hasattr(orders, "items"):
         manifest = {int(d): int(c) for d, c in orders.items()}
@@ -169,7 +183,12 @@ def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
     policy = preclib.resolve(precision, dtype) if (
         precision is not None or dtype is not None) \
         else preclib.PRESETS["fp32"]
-    machine = machine or cm.tpu_v5e()
+    machine = machine or tuning.default_machine()
+    if dispatch_s is None:
+        dispatch_s = tuning.default_dispatch_s(DEFAULT_DISPATCH_S)
+    from repro.core import solver as solverlib
+    overlap = solverlib._normalize_overlap(overlap)
+    ov = overlap == "on"
     if structure is not None and structure.is_dense:
         structure = None
 
@@ -177,11 +196,13 @@ def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
     open_buckets: list[list] = []
     for d in sorted(manifest, reverse=True):
         count = manifest[d]
-        own = _steady_s(d, k, grid, machine, structure=structure)
+        own = _steady_s(d, k, grid, machine, structure=structure,
+                        overlap=ov)
         best, best_extra = None, None
         for b in open_buckets:
             extra = count * (_steady_s(b[0], k, grid, machine,
-                                       structure=structure) - own)
+                                       structure=structure,
+                                       overlap=ov) - own)
             if best_extra is None or extra < best_extra:
                 best, best_extra = b, extra
         if best is not None and best_extra <= dispatch_s:
@@ -195,18 +216,20 @@ def plan_fleet(orders, grid: TrsmGrid, *, k: int = 16, precision=None,
         counts = tuple(members[d] for d in orders_desc)
         method, n0, _ = tuning.choose_serving_method(
             n_b, k, grid, machine, rec_model="tang2024",
-            structure=structure)
+            structure=structure, overlap=ov)
         merged_s = _steady_s(n_b, k, grid, machine, n0=n0,
-                             structure=structure) + dispatch_s
+                             structure=structure, overlap=ov) + dispatch_s
         split_s = sum(_steady_s(d, k, grid, machine,
-                                structure=structure) + dispatch_s
+                                structure=structure, overlap=ov)
+                      + dispatch_s
                       for d in orders_desc)
         buckets.append(BucketPlan(
             n=n_b, policy=policy, capacity=sum(counts) + headroom,
             orders=orders_desc, counts=counts, method=method,
             n0=n0 if method == "inv" else None,
             merged_s=merged_s, split_s=split_s,
-            structure=structure if method == "inv" else None))
+            structure=structure if method == "inv" else None,
+            overlap=overlap))
     return FleetPlan(buckets=tuple(buckets), k=k, dispatch_s=dispatch_s)
 
 
@@ -277,7 +300,8 @@ class SolverFleet:
                 grid, bp.n, method=bp.method, n0=bp.n0,
                 lower=lower, transpose=transpose, precision=bp.policy,
                 map_mode=map_mode, capacity=bp.capacity,
-                structure=bp.structure, cache=self.cache)
+                structure=bp.structure, overlap=bp.overlap,
+                cache=self.cache)
             self._buckets[bp.key] = _Bucket(bp, bank,
                                             Solver.from_bank(bank))
         self._dir: dict[tuple, list[FleetHandle]] = {}  # (tenant,) index
@@ -485,7 +509,7 @@ class SolverFleet:
                     map_mode=old.bank.map_mode if old is not None
                     else "vmap",
                     capacity=bp.capacity, structure=bp.structure,
-                    cache=self.cache)
+                    overlap=bp.overlap, cache=self.cache)
                 targets[bp.key] = _Bucket(bp, bank,
                                           Solver.from_bank(bank))
                 (rebuilt if old is not None else opened).append(bp.key)

@@ -88,7 +88,7 @@ def _swap_perm(p1: int):
 
 
 def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode,
-                        accum_dtype=None):
+                        accum_dtype=None, overlap=False):
     """Phase 1: return Dt (m, n0/p1, n0/p1) — the transposed-face pieces
     (rows ≡ y, cols ≡ x) of the inverted diagonal blocks.
 
@@ -132,7 +132,17 @@ def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode,
         Vd = Linv.reshape(m, a, m, b)
         Dd = Vd[jnp.arange(m), :, jnp.arange(m), :]    # (m, a, b) cyclic
         if p1 > 1:
-            Dd = comm.ppermute(Dd, ("x", "y"), _swap_perm(p1))
+            if overlap:
+                # start/finish split: the face exchange is in flight
+                # while XLA schedules any independent work between the
+                # two (the fused overlapped solve issues panel 0's
+                # gather before phase 1, so on an async backend the
+                # whole inversion — this ppermute included — hides
+                # behind the first panel's collective)
+                Dd = comm.ppermute_finish(
+                    comm.ppermute_start(Dd, ("x", "y"), _swap_perm(p1)))
+            else:
+                Dd = comm.ppermute(Dd, ("x", "y"), _swap_perm(p1))
         if p2 > 1:
             Dg = comm.all_gather(Dd, "z", axis=2, tiled=True)  # (m,a,p2*b)
             Dg = Dg.reshape(m, a, p2, b).transpose(0, 1, 3, 2)
@@ -147,7 +157,8 @@ def _invert_diag_blocks(Lloc, *, n, n0, p1, p2, block_inv, mode,
 
 
 def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
-                 accum_dtype=None, unroll=False, spans=None):
+                 accum_dtype=None, unroll=False, spans=None,
+                 overlap=False, prefetched0=None):
     """Phase 2 (sweep, paper Alg. It-Inv-TRSM lines 3-10) against
     ALREADY-INVERTED diagonal faces Dt (m, n0/p1, n0/p1).
 
@@ -170,7 +181,25 @@ def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
     nonzero block skips its update — and its two collectives —
     entirely.  Admission masks the factor to the block structure, so
     any non-dependent block row inside a conservative span multiplies
-    exact zeros.  Trace-time decisions only: requires ``unroll``."""
+    exact zeros.  Trace-time decisions only: requires ``unroll``.
+
+    ``overlap`` SOFTWARE-PIPELINES the panel collective (DESIGN.md
+    Sec. 16): column i's panel depends only on Lloc (never on the
+    solve chain), so its z-allgather is STARTED one step early —
+    before column i-1's update GEMM + y-allreduce execute — and
+    FINISHED where the update consumes it.  The ops and operands are
+    identical to the sequential sweep (same slices, gathers, dots,
+    reductions), only the issue order changes, so the result is
+    bit-identical; level-scheduled skipped spans also skip the
+    prefetch (the prefetch chain walks the live columns only).  The
+    ``fori_loop`` form carries the FINISHED panel instead (a loop
+    iteration is a barrier, so an unfinished handle cannot cross it):
+    a prologue gathers panel 0 and the body prefetches panel i+1 with
+    a clamped slice — one extra (discarded) gather on the last trip,
+    so traced cost records m+1 panel gathers instead of m.
+    ``prefetched0`` lets the fused solve start panel 0's gather BEFORE
+    phase 1, hiding the whole diagonal inversion (its ppermute
+    included) behind the first panel collective."""
     m = n // n0
     nl = n // p1
     kl = k // p2
@@ -182,8 +211,20 @@ def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
 
     row_g = jnp.arange(nl) * p1 + xi                   # global row ids
 
-    def body(i, carry, update=True):
-        Bcur, Xacc = carry
+    def _panel_start(i):
+        """Issue column i's panel z-allgather (reads only Lloc; ``i``
+        may be traced — dynamic_slice clamps an out-of-bounds start,
+        which makes the fori path's last-trip prefetch harmless)."""
+        if spans is not None:
+            lo, hi = spans[i]
+            rl, rows = lo * a, (hi - lo) * a
+            panel = jax.lax.slice(Lloc, (rl, i * b),
+                                  (rl + rows, (i + 1) * b))
+        else:
+            panel = jax.lax.dynamic_slice(Lloc, (0, i * b), (nl, b))
+        return comm.all_gather_start(panel, "z", axis=0, tiled=False)
+
+    def solve_step(i, Bcur, Xacc):
         Bi = jax.lax.dynamic_slice(Bcur, (i * a, 0), (a, kl))
         Dti = jax.lax.dynamic_index_in_dim(Dt, i, axis=0, keepdims=False)
         # solve via GEMM (l. 4-5); partials and the cross-x reduction
@@ -191,61 +232,112 @@ def _sweep_shard(Lloc, Dt, Bloc, *, n, k, n0, p1, p2,
         # carried values stay at compute precision.
         Xi = comm.psum(jax.lax.dot(Dti, Bi, preferred_element_type=acc),
                        "x").astype(ct)
-        Xacc = jax.lax.dynamic_update_slice(Xacc, Xi, (i * a, 0))
-        if not update:
-            return Bcur, Xacc
+        return Xi, jax.lax.dynamic_update_slice(Xacc, Xi, (i * a, 0))
+
+    def apply_update(i, Bcur, Xi, pg):
         if spans is not None:
             # level-scheduled path: static row-span update.  lo >= i+1
             # always, so every span row is strictly below block i and
             # the row_g mask of the dense path is vacuous here.
             lo, hi = spans[i]
             rl, rows = lo * a, (hi - lo) * a
-            panel = jax.lax.slice(Lloc, (rl, i * b),
-                                  (rl + rows, (i + 1) * b))
-            pg = comm.all_gather(panel, "z", axis=0, tiled=False)
             pg = jnp.transpose(pg, (1, 2, 0)).reshape(rows, a)
             upd = comm.psum(
                 jax.lax.dot(pg, Xi, preferred_element_type=acc),
                 "y").astype(ct)
             Bspan = jax.lax.slice(Bcur, (rl, 0), (rl + rows, kl))
-            Bcur = jax.lax.dynamic_update_slice(Bcur, Bspan - upd,
+            return jax.lax.dynamic_update_slice(Bcur, Bspan - upd,
                                                 (rl, 0))
-            return Bcur, Xacc
-        panel = jax.lax.dynamic_slice(Lloc, (0, i * b), (nl, b))
-        pg = comm.all_gather(panel, "z", axis=0, tiled=False)  # (p2, nl, b)
-        pg = jnp.transpose(pg, (1, 2, 0)).reshape(nl, a)  # cols t' = c*p2+z
+        pg = jnp.transpose(pg, (1, 2, 0)).reshape(nl, a)  # cols t'=c*p2+z
         upd = comm.psum(jax.lax.dot(pg, Xi, preferred_element_type=acc),
                         "y").astype(ct)                # update (lines 7-8)
         mask = (row_g >= (i + 1) * n0).astype(ct)[:, None]
-        Bcur = Bcur - mask * upd
-        return Bcur, Xacc
+        return Bcur - mask * upd
+
+    def body(i, carry, update=True):
+        Bcur, Xacc = carry
+        Xi, Xacc = solve_step(i, Bcur, Xacc)
+        if not update:
+            return Bcur, Xacc
+        pg = comm.all_gather_finish(_panel_start(i))
+        return apply_update(i, Bcur, Xi, pg), Xacc
+
+    def live_update(i):
+        # the final trailing update only touches the discarded
+        # remainder of B; unrolling lets us drop it entirely —
+        # and a level schedule drops every dependent-free column
+        return i + 1 < m and (spans is None or spans[i] is not None)
 
     x0 = compat.pcast_varying(jnp.zeros((nl, kl), Bloc.dtype), ("y", "z"))
     if unroll:
+        if overlap:
+            # double-buffered: the prefetch chain walks the LIVE
+            # columns (skipped spans skip the prefetch too); each live
+            # column's gather is started exactly once — same collective
+            # count and operands as the sequential unroll.
+            live = [i for i in range(m) if live_update(i)]
+            succ = {live[t]: live[t + 1] for t in range(len(live) - 1)}
+            pending = None
+            if live:
+                pending = prefetched0 if prefetched0 is not None \
+                    else _panel_start(live[0])
+            carry = (Bloc, x0)
+            for i in range(m):
+                Bcur, Xacc = carry
+                Xi, Xacc = solve_step(i, Bcur, Xacc)
+                if live_update(i):
+                    pg = comm.all_gather_finish(pending)
+                    # issue the next live column's gather BEFORE this
+                    # update's GEMM + y-allreduce consume this one
+                    pending = _panel_start(succ[i]) if i in succ else None
+                    Bcur = apply_update(i, Bcur, Xi, pg)
+                carry = (Bcur, Xacc)
+            return carry[1]
         carry = (Bloc, x0)
         for i in range(m):
-            # the final trailing update only touches the discarded
-            # remainder of B; unrolling lets us drop it entirely —
-            # and a level schedule drops every dependent-free column
-            carry = body(i, carry,
-                         update=i + 1 < m and (spans is None
-                                               or spans[i] is not None))
+            carry = body(i, carry, update=live_update(i))
         return carry[1]
     assert spans is None, "level-scheduled sweep requires unroll"
+    if overlap:
+        # fori form: a loop iteration is a barrier, so carry the
+        # FINISHED gathered panel; the prologue gather runs outside
+        # the x m cost scope (hence m+1 recorded panel gathers).
+        pg0 = comm.all_gather_finish(
+            prefetched0 if prefetched0 is not None else _panel_start(0))
+
+        def body_ov(i, carry):
+            Bcur, Xacc, pg = carry
+            Xi, Xacc = solve_step(i, Bcur, Xacc)
+            nxt = _panel_start(i + 1)      # clamped no-op on last trip
+            Bcur = apply_update(i, Bcur, Xi, pg)
+            return Bcur, Xacc, comm.all_gather_finish(nxt)
+
+        with comm.scope(m):
+            _, X, _ = jax.lax.fori_loop(0, m, body_ov, (Bloc, x0, pg0))
+        return X
     with comm.scope(m):
         _, X = jax.lax.fori_loop(0, m, body, (Bloc, x0))
     return X
 
 
 def _it_inv_trsm_shard(Lloc, Bloc, *, n, k, n0, p1, p2, block_inv, mode,
-                       accum_dtype=None):
+                       accum_dtype=None, overlap=False):
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else Bloc.dtype
+    pre0 = None
+    if overlap:
+        # start panel 0's z-allgather BEFORE phase 1: the panel reads
+        # only Lloc, so the whole diagonal inversion (its collectives
+        # included) can hide behind the first panel collective
+        nl, b = n // p1, n0 // (p1 * p2)
+        panel0 = jax.lax.dynamic_slice(Lloc, (0, 0), (nl, b))
+        pre0 = comm.all_gather_start(panel0, "z", axis=0, tiled=False)
     Dt = _invert_diag_blocks(Lloc, n=n, n0=n0, p1=p1, p2=p2,
                              block_inv=block_inv, mode=mode,
-                             accum_dtype=acc)
+                             accum_dtype=acc, overlap=overlap)
     return _sweep_shard(Lloc, Dt, Bloc, n=n, k=k, n0=n0, p1=p1, p2=p2,
-                        accum_dtype=acc)
+                        accum_dtype=acc, overlap=overlap,
+                        prefetched0=pre0)
 
 
 # Sharding of the inverted-diagonal-faces array Dt (m, n0, n0): rows
@@ -288,7 +380,7 @@ def it_inv_phase1_sharded(grid: TrsmGrid, n: int, n0: int,
 
 def it_inv_sweep_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
                          accum_dtype=None, unroll: bool = True,
-                         structure=None):
+                         structure=None, overlap: bool = False):
     """Build the (un-jitted) shard_map program for the SWEEP against
     pre-inverted diagonal faces: (L_cyc, Dt, B_cyc) -> X_cyc.
 
@@ -302,7 +394,12 @@ def it_inv_sweep_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
     per-column update spans are baked in as static slice bounds, zero
     blocks are skipped at trace time, and the loop is force-unrolled
     (skip decisions need a trace-time i).  Dense/None compiles the
-    byte-identical program this function always built."""
+    byte-identical program this function always built.
+
+    ``overlap`` compiles the DOUBLE-BUFFERED sweep (DESIGN.md Sec. 16):
+    panel i+1's z-allgather is started before panel i's update
+    executes — bit-identical output (same ops, different issue order),
+    structure-aware (skipped spans skip the prefetch)."""
     check_divisibility(n, k, n0, grid)
     spans = None
     if structure is not None and not structure.is_dense:
@@ -312,7 +409,7 @@ def it_inv_sweep_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
     body = functools.partial(_sweep_shard, n=n, k=k, n0=n0,
                              p1=grid.p1, p2=grid.p2,
                              accum_dtype=accum_dtype, unroll=unroll,
-                             spans=spans)
+                             spans=spans, overlap=overlap)
     return compat.shard_map(body, mesh=grid.mesh,
                             in_specs=(grid.spec_L(), SPEC_DT,
                                       grid.spec_B()),
@@ -332,7 +429,8 @@ def pick_phase1_mode(n: int, n0: int, grid: TrsmGrid) -> str:
 
 def it_inv_trsm_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
                         block_inv: Callable | None = None,
-                        mode: str | None = None, accum_dtype=None):
+                        mode: str | None = None, accum_dtype=None,
+                        overlap: bool = False):
     """Build the (un-jitted) shard_map program for fixed shapes, for
     composition inside larger jitted pipelines (repro.core.session).
 
@@ -343,6 +441,10 @@ def it_inv_trsm_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
     ``accum_dtype``: GEMM accumulation precision for the sweep (and the
     phase-1 block inversions); defaults to the operand dtype.  With
     bf16 operands pass float32 so the MXU accumulates at full width.
+
+    ``overlap`` software-pipelines the sweep's panel collective and
+    starts panel 0's gather before phase 1 (DESIGN.md Sec. 16); the
+    output stays bit-identical to the sequential program.
     """
     check_divisibility(n, k, n0, grid)
     mode = mode or pick_phase1_mode(n, n0, grid)
@@ -352,7 +454,8 @@ def it_inv_trsm_sharded(grid: TrsmGrid, n: int, k: int, n0: int,
 
     body = functools.partial(_it_inv_trsm_shard, n=n, k=k, n0=n0,
                              p1=grid.p1, p2=grid.p2, block_inv=binv,
-                             mode=mode, accum_dtype=accum_dtype)
+                             mode=mode, accum_dtype=accum_dtype,
+                             overlap=overlap)
     # Pallas interpret-mode kernels use an internal while_loop whose
     # vma bookkeeping trips shard_map's checker (jax#...); disable the
     # check only when a kernel hook is plugged in.

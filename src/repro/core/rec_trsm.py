@@ -41,19 +41,30 @@ from repro.core.mm3d import mm3d_shard
 MESH_AXES = ("x", "y", "z")
 
 
-def _base_case(Lloc, Bloc, *, n0, k, p1, p2, accum_dtype=None):
+def _base_case(Lloc, Bloc, *, n0, k, p1, p2, accum_dtype=None,
+               pregathered=None):
     """Solve an n0 x n0 subproblem with substitution (paper lines 5-9).
 
     The local substitution runs at ``accum_dtype`` (cast up, solve,
     cast back) so low-precision operands do not serialize rounding
-    error through the recurrence."""
+    error through the recurrence.
+
+    ``pregathered`` accepts a handle from ``comm.all_gather_start`` on
+    ``Lloc`` over the whole mesh: the overlapped recursion issues the
+    base case's L-gather BEFORE the trailing-update MM that produces
+    this base case's RHS (the gather reads only L, DESIGN.md Sec. 16),
+    and this function merely finishes it — same collective, same
+    operand, bit-identical result."""
     p = p1 * p1 * p2
     kc = k // (p1 * p2)            # local column count
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None \
         else Bloc.dtype
 
     # line 6: allgather L over the whole grid and reassemble.
-    Lg = comm.all_gather(Lloc, MESH_AXES, axis=0, tiled=False)  # (p, a, b)
+    if pregathered is not None:
+        Lg = comm.all_gather_finish(pregathered)           # (p, a, b)
+    else:
+        Lg = comm.all_gather(Lloc, MESH_AXES, axis=0, tiled=False)
     a, b = Lloc.shape
     R = Lg.reshape(p1, p1, p2, a, b)               # [x, y, z, l, c']
     R = jnp.transpose(R, (3, 0, 4, 2, 1))          # [l, x, c', z, y]
@@ -84,7 +95,8 @@ def _base_case(Lloc, Bloc, *, n0, k, p1, p2, accum_dtype=None):
     return Xloc
 
 
-def _rec(Lloc, Bloc, *, n, k, n0, p1, p2, accum_dtype=None):
+def _rec(Lloc, Bloc, *, n, k, n0, p1, p2, accum_dtype=None,
+         overlap=False):
     if n <= n0:
         return _base_case(Lloc, Bloc, n0=n, k=k, p1=p1, p2=p2,
                           accum_dtype=accum_dtype)
@@ -94,11 +106,21 @@ def _rec(Lloc, Bloc, *, n, k, n0, p1, p2, accum_dtype=None):
     L21 = Lloc[hl:, :hc]
     L22 = Lloc[hl:, hc:]
     X1 = _rec(L11, Bloc[:hl], n=h, k=k, n0=n0, p1=p1, p2=p2,
-              accum_dtype=accum_dtype)
+              accum_dtype=accum_dtype, overlap=overlap)
+    pre22 = None
+    if overlap and h <= n0:
+        # the second half is a base case: start its L-gather now so it
+        # rides under the trailing-update MM (which never reads it)
+        pre22 = comm.all_gather_start(L22, MESH_AXES, axis=0,
+                                      tiled=False)
     U = mm3d_shard(L21, X1, m=h, n=h, k=k, p1=p1, p2=p2,
                    accum_dtype=accum_dtype)
-    X2 = _rec(L22, Bloc[hl:] - U, n=h, k=k, n0=n0, p1=p1, p2=p2,
-              accum_dtype=accum_dtype)
+    if pre22 is not None:
+        X2 = _base_case(L22, Bloc[hl:] - U, n0=h, k=k, p1=p1, p2=p2,
+                        accum_dtype=accum_dtype, pregathered=pre22)
+    else:
+        X2 = _rec(L22, Bloc[hl:] - U, n=h, k=k, n0=n0, p1=p1, p2=p2,
+                  accum_dtype=accum_dtype, overlap=overlap)
     return jnp.concatenate([X1, X2], axis=0)
 
 
@@ -123,19 +145,22 @@ def default_n0(n: int, k: int, p1: int, p2: int) -> int:
 
 
 def rec_trsm_sharded(grid: TrsmGrid, n: int, k: int,
-                     n0: int | None = None, accum_dtype=None):
+                     n0: int | None = None, accum_dtype=None,
+                     overlap: bool = False):
     """Un-jitted shard_map Rec-TRSM for fixed shapes (cyclic storage),
     for composition inside larger jitted pipelines (repro.core.session).
 
     L: (n, n) P("x", ("z","y"));  B: (n, k) P("x", ("z","y"));
     X returned in the same layout as B.  ``accum_dtype``: precision for
     the MM updates and base-case substitution (defaults to the operand
-    dtype)."""
+    dtype).  ``overlap`` prefetches each base case's L-gather under the
+    preceding trailing-update MM (bit-identical output, DESIGN.md
+    Sec. 16)."""
     n0 = n0 or default_n0(n, k, grid.p1, grid.p2)
     assert k % (grid.p1 * grid.p1 * grid.p2) == 0, (k, grid.p)
     body = functools.partial(_rec, n=n, k=k, n0=n0,
                              p1=grid.p1, p2=grid.p2,
-                             accum_dtype=accum_dtype)
+                             accum_dtype=accum_dtype, overlap=overlap)
     spec = P("x", ("z", "y"))
     return compat.shard_map(body, mesh=grid.mesh, in_specs=(spec, spec),
                          out_specs=spec)

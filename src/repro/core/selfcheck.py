@@ -401,6 +401,50 @@ def check_bank() -> int:
     return fails
 
 
+def check_overlap() -> int:
+    """Bit-identity of the software-pipelined sweep (DESIGN.md
+    Sec. 16): overlap on/off runs the SAME collectives on the same
+    operands in a different issue order, so the solve output must be
+    byte-equal — per method, per grid shape (degenerate p2=1 and
+    p1=1 included), and per structure."""
+    from repro import api
+    from repro.core import grid as gridlib
+    from repro.core.structure import FactorStructure
+
+    jax.config.update("jax_enable_x64", True)
+    fails = 0
+    cases = [
+        # (p1, p2, method, n, k, n0, structure)
+        (2, 2, "inv", 64, 8, 16, None),
+        (2, 1, "inv", 64, 8, 16, None),      # degenerate z axis
+        (1, 2, "inv", 64, 8, 16, None),      # degenerate x/y axes
+        (2, 2, "rec", 64, 8, 16, None),
+        (2, 2, "inv", 64, 8, 16, FactorStructure.banded(16)),
+    ]
+    for (p1, p2, method, n, k, n0, st) in cases:
+        grid = gridlib.make_trsm_mesh(p1, p2)
+        L = _random_tril(n, n)
+        if st is not None and st.kind == "banded":
+            ii = np.arange(n)
+            L *= np.abs(ii[:, None] - ii[None, :]) < st.bandwidth
+        B = np.random.default_rng(k).standard_normal((n, k))
+        outs = {}
+        for ov in ("on", "off"):
+            solver = api.Solver.from_factor(
+                L, grid, method=method, n0=n0, structure=st, overlap=ov)
+            outs[ov] = np.asarray(solver.solve(B, donate=False))
+        bit = outs["on"].tobytes() == outs["off"].tobytes()
+        err = np.abs(L @ outs["on"] - B).max()
+        ok = bit and err < 1e-7
+        tag = st.kind if st is not None else "dense"
+        print(f"overlap p1={p1} p2={p2} {method} {tag}: "
+              f"bit-identical={bit} err={err:.2e} "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails += 1
+    return fails
+
+
 CHECKS = {
     "order": check_collective_order,
     "it_inv_trsm": check_it_inv_trsm,
@@ -412,6 +456,7 @@ CHECKS = {
     "lu": check_lu,
     "session": check_session,
     "bank": check_bank,
+    "overlap": check_overlap,
 }
 
 

@@ -349,7 +349,8 @@ def _build_solver(spec) -> SolverProgram:
             # Sec. 14), which needs the unroll and overrides the cap.
             sweep = _map_factors(inv_trsm.it_inv_sweep_sharded(
                 grid, n, k, n0, accum_dtype=accum,
-                unroll=(n // n0) <= 64, structure=spec.structure))
+                unroll=(n // n0) <= 64, structure=spec.structure,
+                overlap=spec.overlap == "on"))
 
             def base_solve(L_pair, B):
                 B_cyc = gridlib.cyclic_rows_device(
@@ -361,7 +362,9 @@ def _build_solver(spec) -> SolverProgram:
             sharded = inv_trsm.it_inv_trsm_sharded(grid, n, k, n0,
                                                    block_inv=block_inv,
                                                    mode=resolved_mode,
-                                                   accum_dtype=accum)
+                                                   accum_dtype=accum,
+                                                   overlap=spec.overlap
+                                                   == "on")
 
             def base_solve(L_cyc, B):
                 B_cyc = gridlib.cyclic_rows_device(
@@ -373,7 +376,8 @@ def _build_solver(spec) -> SolverProgram:
         from repro.core import rec_trsm
         resolved_mode = None
         sharded = rec_trsm.rec_trsm_sharded(grid, n, k, n0,
-                                            accum_dtype=accum)
+                                            accum_dtype=accum,
+                                            overlap=spec.overlap == "on")
         if bank is not None:
             sharded = _map_factors(sharded)
         rhs_spec = P(None, ("z", "y"))

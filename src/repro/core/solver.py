@@ -146,6 +146,24 @@ def resolve_plan(grid: TrsmGrid, n: int, k: int, *, method: str = "inv",
     return method, n0
 
 
+def _normalize_overlap(overlap) -> str | None:
+    """Normalize an overlap request to its cache-key spelling.
+
+    ``"off"``/``False``/``None`` -> ``None`` — byte-for-byte the key
+    (and the program) pre-overlap specs always had, exactly like
+    ``structure=dense -> None``.  ``"auto"``/``"on"``/``True`` ->
+    ``"on"``: both methods support the pipelined sweep on every grid
+    (degenerate meshes included — the prefetch degrades to the
+    sequential issue order) and the result is bit-identical, so auto
+    has no reason to ever resolve off (DESIGN.md Sec. 16)."""
+    if overlap in (None, False, "off"):
+        return None
+    if overlap in (True, "auto", "on"):
+        return "on"
+    raise ValueError(f"overlap must be 'auto' | 'on' | 'off' | bool | "
+                     f"None, got {overlap!r}")
+
+
 # ------------------------------- SolveSpec -------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -175,6 +193,13 @@ class SolveSpec:
       key (``__post_init__`` normalizes dense to ``None``), so a
       dense-structured spec compiles — and bit-identically runs — the
       exact program the unstructured path always has.
+    * overlap — software pipelining of the steady-state sweep
+      (DESIGN.md Sec. 16): ``"auto"`` (default) and ``"on"``/``True``
+      normalize to ``"on"`` (prefetch panel j+1's collectives under
+      panel j's compute); ``"off"``/``False`` normalize to ``None`` —
+      the SAME cache key the pre-overlap specs always spelled, keying
+      the bit-identical sequential-issue program (the
+      structure-normalization discipline, applied again).
 
     Every field changes the compiled artifact, which is exactly why
     the spec is the cache key: two call sites that build equal specs
@@ -194,12 +219,15 @@ class SolveSpec:
     bank_width: int | None = None
     map_mode: str | None = None
     structure: FactorStructure | None = None
+    overlap: str | bool | None = "auto"
 
     def __post_init__(self):
         if self.method not in ("inv", "rec"):
             raise ValueError(
                 f"spec method must be 'inv' or 'rec', got {self.method!r}"
                 f" (resolve 'auto' through SolveSpec.auto)")
+        object.__setattr__(self, "overlap",
+                           _normalize_overlap(self.overlap))
         if self.bank_width is not None and self.bank_width < 1:
             raise ValueError(f"bank width must be >= 1, got "
                              f"{self.bank_width}")
@@ -260,7 +288,8 @@ class SolveSpec:
              bank_width: int | None = None,
              map_mode: str | None = None,
              hoisted: bool | None = None,
-             structure: FactorStructure | None = None) -> "SolveSpec":
+             structure: FactorStructure | None = None,
+             overlap: str | bool | None = "auto") -> "SolveSpec":
         """The a-priori front door: resolve the plan ONCE from the
         Sec. VIII cost model and freeze it into a spec.
 
@@ -301,7 +330,7 @@ class SolveSpec:
                    method=method, n0=n0, mode=mode, lower=lower,
                    transpose=transpose, block_inv=block_inv,
                    bank_width=bank_width, map_mode=map_mode,
-                   structure=structure).validate()
+                   structure=structure, overlap=overlap).validate()
 
     @classmethod
     def from_plan(cls, plan, *, k: int | None = None,
@@ -376,10 +405,17 @@ class UpdateSpec:
     chunk: int = 1               # contiguous slots written per dispatch
     pad_from: int | None = None  # incoming factor order d (< n) or None
     structure: FactorStructure | None = None
+    overlap: str | bool | None = None
 
     def __post_init__(self):
         if self.ingest not in ("natural", "cyclic"):
             raise ValueError(f"unknown ingest {self.ingest!r}")
+        # the admission pipeline has no sweep to pipeline (phase 1's
+        # doubling recurrence is serially dependent), so EVERY overlap
+        # request normalizes to None: banks built with overlap on or
+        # off share one compiled updater
+        _normalize_overlap(self.overlap)       # validate the spelling
+        object.__setattr__(self, "overlap", None)
         if self.structure is not None and self.structure.is_dense:
             object.__setattr__(self, "structure", None)
         if self.structure is not None:
@@ -485,6 +521,7 @@ class Solver:
                     dtype=None, precision=None, map_mode: str = "vmap",
                     k_hint: int | None = None,
                     structure: FactorStructure | None = None,
+                    overlap: str | bool | None = "auto",
                     cache=None) -> "Solver":
         """A width-1 solver around one natural-layout (n, n) factor
         (the former ``TrsmSession``).  ``method="auto"`` resolves the
@@ -509,7 +546,8 @@ class Solver:
                           machine=machine, block_inv=block_inv,
                           dtype=None if precision is not None else L.dtype,
                           precision=precision, map_mode=map_mode,
-                          structure=structure, cache=cache)
+                          structure=structure, overlap=overlap,
+                          cache=cache)
         bank.admit(L)
         return cls(bank, cache=cache)
 
@@ -521,6 +559,7 @@ class Solver:
                      dtype=None, precision=None, map_mode: str = "vmap",
                      capacity: int | None = None,
                      structure: FactorStructure | None = None,
+                     overlap: str | bool | None = "auto",
                      cache=None) -> "Solver":
         """A width-M solver over an (M, n, n) natural-layout stack,
         admitted in one stacked gather (the former bank construction +
@@ -539,7 +578,7 @@ class Solver:
                           else Ls.dtype,
                           precision=precision, map_mode=map_mode,
                           capacity=capacity, structure=structure,
-                          cache=cache)
+                          overlap=overlap, cache=cache)
         bank.admit_stack(Ls)
         return cls(bank, cache=cache)
 
@@ -581,7 +620,7 @@ class Solver:
                           precision=spec.policy,
                           map_mode=spec.map_mode or "vmap",
                           capacity=capacity, structure=spec.structure,
-                          cache=cache)
+                          overlap=spec.overlap, cache=cache)
         solver = cls(bank, cache=cache)
         if factors is not None:
             factors = jnp.asarray(factors)
@@ -651,7 +690,8 @@ class Solver:
                          method=b.method, n0=n0, mode=b.mode,
                          lower=b.lower, transpose=b.transpose,
                          block_inv=b.block_inv, bank_width=b.width,
-                         map_mode=b.map_mode, structure=b.structure)
+                         map_mode=b.map_mode, structure=b.structure,
+                         overlap=b.overlap)
 
     def program_for(self, k: int):
         """The compiled :class:`~repro.core.session.SolverProgram` for

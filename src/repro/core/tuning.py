@@ -12,9 +12,49 @@ sizes and processor grids a priori", Sec. I).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 from repro.core import cost_model as cm
+
+
+# ------------------- calibrated default machine -------------------
+
+@functools.lru_cache(maxsize=1)
+def calibration() -> cm.Calibration | None:
+    """The committed measured-cost calibration
+    (``benchmarks/BENCH_overlap.json``, DESIGN.md Sec. 16), or None
+    when absent.  Cached for the process lifetime: planners consult it
+    on every decision."""
+    return cm.load_calibration()
+
+
+@functools.lru_cache(maxsize=1)
+def default_machine() -> cm.Machine:
+    """The machine every planner prices with when the caller passes
+    none: the TPU v5e preset RESCALED by the committed calibration, so
+    ``SolveSpec.auto``, :func:`serving_n0`,
+    :func:`choose_serving_method` and ``fleet.plan_fleet`` all plan
+    from measured-cost-corrected numbers.  Falls back to the nominal
+    preset when no calibration is committed.  An explicit ``machine=``
+    argument anywhere in this module bypasses calibration entirely
+    (the caller knows its hardware)."""
+    m = cm.tpu_v5e()
+    cal = calibration()
+    return cal.apply(m) if cal is not None else m
+
+
+def default_dispatch_s(fallback: float) -> float:
+    """Per-program dispatch overhead in the SAME units as the
+    calibrated steady costs: the measured value from the committed
+    calibration when present, else ``fallback`` (the fleet planner's
+    nominal constant).  Comparing calibrated steady seconds against an
+    uncalibrated dispatch constant would skew every absolute-seconds
+    decision (bucket merges, queue-wait admission)."""
+    cal = calibration()
+    if cal is not None and cal.dispatch_s is not None:
+        return cal.dispatch_s
+    return fallback
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,8 +218,10 @@ def tune(n: int, k: int, p: int,
     machine shifts the argmin toward larger n0 / more replication,
     exactly the paper's Sec. IX sensitivity.  Precision does not enter
     the plan: a bf16 sweep changes gamma and beta by the same factor
-    at leading order, leaving the argmin unchanged."""
-    machine = machine or cm.tpu_v5e()
+    at leading order, leaving the argmin unchanged.  The default
+    machine is CALIBRATED when a committed measurement file exists
+    (:func:`default_machine`, DESIGN.md Sec. 16)."""
+    machine = machine or default_machine()
     grids = feasible_grids(p)
     if not grids:
         # p admits no power-of-two p1^2 * p2 == p factorization (e.g.
@@ -206,7 +248,7 @@ def tune_for_grid(n: int, k: int, grid,
     TrsmGrid — this is what ``repro.core.session.resolve_plan`` calls
     when a solver is requested without an explicit n0, so it is the
     default-n0 policy of the whole serving stack."""
-    machine = machine or cm.tpu_v5e()
+    machine = machine or default_machine()
     p1, p2 = grid.p1, grid.p2
     p = grid.p
     best = None
@@ -256,12 +298,13 @@ def serving_n0(n: int, grid, structure=None) -> int:
     if structure is None or structure.is_dense:
         return max(cands)
     from repro.core.structure import analyze
-    machine = cm.tpu_v5e()
+    machine = default_machine()
     best = None
     for n0 in sorted(cands, reverse=True):   # ties -> larger block
         info = analyze(structure, n, n0)
         t = cm.it_inv_trsm_steady_cost(
-            n, 16, n0, grid.p1, grid.p2, structure=structure
+            n, 16, n0, grid.p1, grid.p2, structure=structure,
+            overlap=True
         ).time(machine)
         t += machine.alpha * (info.m + info.update_cols)
         if best is None or t < best[0]:
@@ -271,7 +314,8 @@ def serving_n0(n: int, grid, structure=None) -> int:
 
 def serving_steady_s(n: int, k: int, grid, *,
                      machine: cm.Machine | None = None,
-                     n0: int | None = None, structure=None) -> float:
+                     n0: int | None = None, structure=None,
+                     overlap: bool = True) -> float:
     """Modeled steady-state seconds for one order-n, width-k solve on
     the grid — the HOISTED It-Inv sweep, i.e. the serving
     configuration (DESIGN.md Secs. 9, 15).  The one spelling of this
@@ -279,12 +323,17 @@ def serving_steady_s(n: int, k: int, grid, *,
     admission controller seeds its queue-wait estimates with it, so
     both control decisions price the same model.  ``n0`` defaults to
     the hoisted-serving argmin; ``structure`` prices the
-    level-scheduled sweep's skipped blocks."""
-    machine = machine or cm.tpu_v5e()
+    level-scheduled sweep's skipped blocks; ``overlap`` (on by
+    default, matching the serving tier's resolved ``SolveSpec.overlap``)
+    prices the double-buffered sweep's ``max(comm, comp)`` pipeline
+    (Sec. 16).  The default machine is calibrated when a committed
+    measurement exists."""
+    machine = machine or default_machine()
     n0 = n0 if n0 is not None else serving_n0(n, grid,
                                               structure=structure)
     return cm.it_inv_trsm_steady_cost(
-        n, k, n0, grid.p1, grid.p2, structure=structure).time(machine)
+        n, k, n0, grid.p1, grid.p2, structure=structure,
+        overlap=overlap).time(machine)
 
 
 def tuning_table(n: int, k: int, p: int) -> dict:
@@ -302,8 +351,10 @@ def choose_method(n: int, k: int, p: int,
     The paper's latency-for-bandwidth trade wins on high-alpha networks
     (MPI clusters, cross-pod DCN) and for latency-dominated shapes
     (k << n); on low-alpha ICI with n ~ k the recursive algorithm's
-    lower bandwidth wins.  Returns (method, plan, modeled_times)."""
-    machine = machine or cm.tpu_v5e()
+    lower bandwidth wins.  Returns (method, plan, modeled_times).
+    The default machine is calibrated when a committed measurement
+    exists (Sec. 16)."""
+    machine = machine or default_machine()
     plan = tune(n, k, p, machine)
     t_inv = plan.cost.time(machine)
     t_rec = cm.rec_trsm_cost(n, k, p).time(machine)
@@ -316,7 +367,7 @@ def choose_serving_method(n: int, k: int, grid,
                           machine: cm.Machine | None = None,
                           n0: int | None = None,
                           rec_model: str = "paper",
-                          structure=None):
+                          structure=None, overlap: bool = True):
     """Auto-dispatch for the HOISTED steady state (a resident factor:
     phase 1 — the Diagonal-Inverter — runs once at admission).
 
@@ -332,15 +383,26 @@ def choose_serving_method(n: int, k: int, grid,
     (:func:`repro.core.cost_model.rec_trsm_cost`) — the fleet planner's
     setting, so recursion is not over-credited.
 
-    ``structure`` prices the It-Inv side with the level-scheduled
-    sweep's skipped blocks; the recursive side stays priced dense
-    (it cannot skip them), so structured factors shift the dispatch
-    toward "inv" exactly as far as the skips are real."""
-    machine = machine or cm.tpu_v5e()
+    ``structure`` prices BOTH sides from the declared block structure:
+    the It-Inv side with the level-scheduled sweep's skipped blocks,
+    and the recursive side from the ``StructureInfo`` nnz counts (the
+    admission mask zeroes the factor, so rec's L-proportional words
+    and flops shrink with the fill even though its schedule cannot
+    skip messages — ``cost_model.rec_trsm_cost``).  Pricing rec dense,
+    as before, over-priced it on banded/block-sparse specs and biased
+    the dispatch toward "inv" beyond what the skips justify.
+
+    ``overlap`` (default on, matching the serving tier's resolved
+    ``SolveSpec.overlap``) prices the It-Inv sweep pipelined; the
+    default machine is calibrated when a committed measurement exists
+    (Sec. 16)."""
+    machine = machine or default_machine()
     n0 = n0 if n0 is not None else serving_n0(n, grid,
                                               structure=structure)
     t_inv = cm.it_inv_trsm_steady_cost(n, k, n0, grid.p1, grid.p2,
-                                       structure=structure).time(machine)
-    t_rec = cm.rec_trsm_cost(n, k, grid.p, model=rec_model).time(machine)
+                                       structure=structure,
+                                       overlap=overlap).time(machine)
+    t_rec = cm.rec_trsm_cost(n, k, grid.p, model=rec_model,
+                             structure=structure).time(machine)
     method = "inv" if t_inv <= t_rec else "rec"
     return method, n0, {"inv": t_inv, "rec": t_rec}

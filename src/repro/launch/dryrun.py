@@ -163,7 +163,8 @@ def build_decode(cfg, sh, mesh, arch, kv_dtype=jnp.bfloat16):
 SPEC_REGIMES = [(16384, 128, 64), (16384, 512, 256), (256, 65536, 64)]
 
 
-def run_spec_smoke(triples, structure: str | None = None) -> int:
+def run_spec_smoke(triples, structure: str | None = None,
+                   overlap: str = "auto") -> int:
     """Resolve and print the a-priori plan (SolveSpec.auto) for each
     (n, k, p) — pure cost-model arithmetic, no devices touched.
 
@@ -171,12 +172,23 @@ def run_spec_smoke(triples, structure: str | None = None) -> int:
     the HOISTED serving plan for a structured factor instead: the
     structured n0 argmin + sweep-only dispatch, with the analyzed
     level schedule printed next to the modeled times (DESIGN.md
-    Sec. 14) — still no devices, nothing compiled."""
+    Sec. 14) — still no devices, nothing compiled.
+
+    ``overlap`` ("auto" | "on" | "off") prices the steady-state sweep
+    pipelined (prefetched collectives under compute) or sequential;
+    every plan line is followed by the steady cost on the paper-model
+    machine AND — when a committed calibration exists
+    (benchmarks/BENCH_overlap.json, DESIGN.md Sec. 16) — the
+    calibrated machine, so predicted-vs-calibrated is one flag away."""
     from repro.core import cost_model as cm, tuning
-    from repro.core.solver import SolveSpec
+    from repro.core.solver import SolveSpec, _normalize_overlap
+    ov = _normalize_overlap(overlap) == "on"
+    base = cm.tpu_v5e()
+    cal = tuning.calibration()
+    cal_machine = tuning.default_machine()
     for (n, k, p) in triples:
         if structure is None:
-            spec = SolveSpec.auto(n, k, p=p)
+            spec = SolveSpec.auto(n, k, p=p, overlap=overlap)
             method, plan, times = tuning.choose_method(n, k, p)
             assert method == spec.method, (method, spec.method)
             print(f"[spec] n={n} k={k} p={p}: "
@@ -185,24 +197,39 @@ def run_spec_smoke(triples, structure: str | None = None) -> int:
                   f"{plan.p2} n0={spec.n0} r=({plan.r1},{plan.r2}) "
                   f"modeled inv={times['inv']:.3e}s "
                   f"rec={times['rec']:.3e}s "
-                  f"(machine: {cm.tpu_v5e().name})")
-            continue
-        from repro.core.structure import FactorStructure, analyze
-        st = FactorStructure.parse(structure, n=n)
-        spec = SolveSpec.auto(n, k, p=p, structure=st, hoisted=True)
-        _, _, times = tuning.choose_serving_method(
-            n, k, spec.grid, structure=spec.structure)
-        line = (f"[spec] n={n} k={k} p={p} structure={st.kind}: "
-                f"-> method={spec.method} grid={spec.grid.p1}x"
-                f"{spec.grid.p1}x{spec.grid.p2} n0={spec.n0} "
-                f"modeled inv={times['inv']:.3e}s "
-                f"rec={times['rec']:.3e}s")
-        if spec.structure is not None:
-            info = analyze(spec.structure, n, spec.n0)
-            dense_off = info.m * (info.m - 1) // 2
-            line += (f" levels={info.n_levels}/{info.m} "
-                     f"offdiag={info.nnz_offdiag}/{dense_off}")
-        print(line)
+                  f"(machine: {cal_machine.name})")
+        else:
+            from repro.core.structure import FactorStructure, analyze
+            st = FactorStructure.parse(structure, n=n)
+            spec = SolveSpec.auto(n, k, p=p, structure=st, hoisted=True,
+                                  overlap=overlap)
+            _, _, times = tuning.choose_serving_method(
+                n, k, spec.grid, structure=spec.structure, overlap=ov)
+            line = (f"[spec] n={n} k={k} p={p} structure={st.kind}: "
+                    f"-> method={spec.method} grid={spec.grid.p1}x"
+                    f"{spec.grid.p1}x{spec.grid.p2} n0={spec.n0} "
+                    f"modeled inv={times['inv']:.3e}s "
+                    f"rec={times['rec']:.3e}s")
+            if spec.structure is not None:
+                info = analyze(spec.structure, n, spec.n0)
+                dense_off = info.m * (info.m - 1) // 2
+                line += (f" levels={info.n_levels}/{info.m} "
+                         f"offdiag={info.nnz_offdiag}/{dense_off}")
+            print(line)
+        # predicted vs calibrated steady cost at the resolved plan
+        if spec.method == "inv" and spec.n0 is not None:
+            c = cm.it_inv_trsm_steady_cost(
+                n, k, spec.n0, spec.grid.p1, spec.grid.p2,
+                structure=spec.structure, overlap=ov)
+            steady = (f"[spec]   steady overlap={'on' if ov else 'off'} "
+                      f"predicted={c.time(base):.3e}s")
+            if cal is not None:
+                steady += (f" calibrated={c.time(cal_machine):.3e}s "
+                           f"(a={cal.a:.3g} b={cal.b:.3g} "
+                           f"g={cal.g:.3g})")
+            else:
+                steady += " calibrated=n/a (no BENCH_overlap.json)"
+            print(steady)
     return 0
 
 
@@ -219,17 +246,28 @@ def run_fleet_smoke(p1: int = 2, p2: int = 2, k: int = 16) -> int:
     grid, no devices touched (DESIGN.md Sec. 12).  The recursive
     alternative inside each bucket's method pick is priced with the
     Tang 2024 bandwidth correction (arXiv:2407.00871)."""
-    from repro.core import fleet as fleetlib
+    from repro.core import cost_model as cm, fleet as fleetlib
     from repro.core.solver import plan_grid
     grid = plan_grid(p1, p2)
-    plan = fleetlib.plan_fleet(FLEET_MANIFEST, grid, k=k)
+    # the calibrated default first (whatever the measured dispatch
+    # overhead and fitted rates price), then the pinned nominal
+    # high-dispatch regime where merging must pay — the structural
+    # assert lives on the latter
+    plan_cal = fleetlib.plan_fleet(FLEET_MANIFEST, grid, k=k)
     print(f"[fleet] manifest={FLEET_MANIFEST} on p1={p1} p2={p2} "
-          f"(p={grid.p}) k={k} dispatch_s={plan.dispatch_s:.1e}")
+          f"(p={grid.p}) k={k} dispatch_s={plan_cal.dispatch_s:.1e} "
+          f"(calibrated default)")
+    print(plan_cal.table())
+    plan = fleetlib.plan_fleet(FLEET_MANIFEST, grid, k=k,
+                               machine=cm.tpu_v5e(), dispatch_s=5e-5)
+    print(f"[fleet] nominal high-dispatch regime dispatch_s=5.0e-05:")
     print(plan.table())
+    for p_ in (plan_cal, plan):
+        orders = sum(len(b.orders) for b in p_.buckets)
+        assert orders == len(FLEET_MANIFEST), (orders, FLEET_MANIFEST)
     orders = sum(len(b.orders) for b in plan.buckets)
-    print(f"[fleet] {orders} orders -> {len(plan.buckets)} bucket(s); "
-          f"per-wave dispatches {orders} -> {len(plan.buckets)}")
-    assert orders == len(FLEET_MANIFEST), (orders, FLEET_MANIFEST)
+    print(f"[fleet] {orders} orders -> {len(plan.buckets)} bucket(s) "
+          f"at 5.0e-05; calibrated default -> {len(plan_cal.buckets)}")
     assert len(plan.buckets) < orders, "planner merged nothing"
     return 0
 
@@ -329,12 +367,18 @@ def main():
                     help="with --spec: resolve the hoisted serving "
                          "plan for a structured factor (structured n0 "
                          "argmin + level schedule; DESIGN.md Sec. 14)")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="with --spec: price the steady-state sweep "
+                         "software-pipelined (on/auto) or sequential "
+                         "(off); DESIGN.md Sec. 16")
     args = ap.parse_args()
 
     if args.spec is not None:
         triples = [tuple(int(x) for x in s.split(","))
                    for s in args.spec] or SPEC_REGIMES
-        return run_spec_smoke(triples, structure=args.structure)
+        return run_spec_smoke(triples, structure=args.structure,
+                              overlap=args.overlap)
     if args.fleet:
         return run_fleet_smoke()
 

@@ -89,7 +89,8 @@ def serve_trsm(args):
     solver = api.Solver.from_factor(L, grid, method=args.method,
                                     n0=args.n0, precision=args.precision,
                                     k_hint=args.panel_k,
-                                    structure=structure)
+                                    structure=structure,
+                                    overlap=args.overlap)
     server = api.SolveServer(solver, args.panel_k).warmup()
     widths = rng.integers(1, args.panel_k + 1, args.requests)
     t0 = time.time()
@@ -127,7 +128,8 @@ def serve_trsm_bank(args):
     solver = api.Solver.from_factors(Ls, grid, method=args.method,
                                      n0=args.n0,
                                      precision=args.precision,
-                                     map_mode=args.map_mode)
+                                     map_mode=args.map_mode,
+                                     overlap=args.overlap)
     server = api.SolveServer(solver, args.panel_k).warmup()
     widths = rng.integers(1, args.panel_k + 1, args.requests)
     t0 = time.time()
@@ -170,7 +172,8 @@ def serve_trsm_churn(args):
     bank = api.FactorBank(grid, n, method=args.method, n0=args.n0,
                           precision=args.precision,
                           dtype=None if args.precision else dt,
-                          map_mode=args.map_mode, capacity=C)
+                          map_mode=args.map_mode, capacity=C,
+                          overlap=args.overlap)
     solver = api.Solver.from_bank(bank)
     server = api.SolveServer(solver, args.panel_k).warmup()  # EMPTY warmup
     for _ in range(max(C // 2, 1)):          # start at half occupancy
@@ -253,7 +256,8 @@ def serve_trsm_fleet(args):
     manifest = {d: 4 for d in orders}
     plan = api.plan_fleet(manifest, grid, k=args.panel_k,
                           precision=args.precision, dtype=None
-                          if args.precision else dt)
+                          if args.precision else dt,
+                          overlap=args.overlap)
     print(plan.table())
     fleet = api.SolverFleet(grid, plan)
     handles = {}
@@ -355,7 +359,8 @@ def serve_trsm_traffic(args):
             manifest[d] = manifest.get(d, 0) + 1
         plan = api.plan_fleet(manifest, grid, k=args.panel_k,
                               precision=args.precision,
-                              dtype=None if args.precision else dt)
+                              dtype=None if args.precision else dt,
+                              overlap=args.overlap)
         fleet = api.SolverFleet(grid, plan)
         tags = []
         for j, d in enumerate(orders):
@@ -371,7 +376,8 @@ def serve_trsm_traffic(args):
         Ls = np.stack([fresh(n) for _ in range(M)])
         solver = api.Solver.from_factors(Ls, grid, method=args.method,
                                          n0=args.n0,
-                                         precision=args.precision)
+                                         precision=args.precision,
+                                         overlap=args.overlap)
         server = api.AsyncSolveServer(
             solver, args.panel_k, queue_depth=args.queue_depth,
             slo_ms=args.slo_ms).warmup()
@@ -484,6 +490,12 @@ def main():
                     metavar="dense|banded[:BW]|block-sparse",
                     help="factor block structure for the trsm workload "
                          "(level-scheduled sweep; DESIGN.md Sec. 14)")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="software-pipeline the steady-state sweep "
+                         "(prefetch the next panel's collectives under "
+                         "this panel's compute; bit-identical results; "
+                         "DESIGN.md Sec. 16)")
     ap.add_argument("--method", default="inv",
                     choices=["inv", "rec", "auto"])
     ap.add_argument("--bank", type=int, default=16,

@@ -27,7 +27,7 @@ pytestmark = pytest.mark.slow
 
 @pytest.mark.parametrize("check", ["order", "mm3d", "tri_inv", "rec_trsm",
                                    "it_inv_trsm", "doubling", "cholesky",
-                                   "lu", "session", "bank"])
+                                   "lu", "session", "bank", "overlap"])
 def test_selfcheck(check):
     out = run_selfcheck(check)
     assert "FAIL" not in out

@@ -122,10 +122,13 @@ def test_tune_matches_ideal_regime_shape():
 
 
 def test_it_inv_cost_beats_rec_latency_in_3d():
-    # the headline claim: S improvement Theta((n/k)^{1/6} p^{2/3})
+    # the headline claim: S improvement Theta((n/k)^{1/6} p^{2/3}).
+    # Pinned to the NOMINAL machine: the claim is the paper's, about
+    # the model — the committed host calibration (whose gamma-heavy
+    # fit legitimately shifts argmins) must not enter here.
     n, k, p = 1 << 16, 1 << 10, 1 << 9
     rec = cm.rec_trsm_cost(n, k, p)
-    plan = tuning.tune(n, k, p)
+    plan = tuning.tune(n, k, p, machine=cm.tpu_v5e())
     it = plan.cost
     assert it.s < rec.s / 20   # orders of magnitude, conservatively
     # flops within the paper's 2x

@@ -56,7 +56,12 @@ def test_plan_fleet_structure_and_routing():
     routing map resolves planned AND unplanned orders."""
     g = api.plan_grid(2, 2)
     manifest = {16384: 2, 8192: 4, 1024: 8, 512: 16, 256: 32, 128: 32}
-    plan = api.plan_fleet(manifest, g, k=16, headroom=1)
+    # explicit nominal high-dispatch regime: this test exercises the
+    # planner's merge STRUCTURE, which the calibrated default machine
+    # (gamma-heavy fit + ~10x smaller measured dispatch_s)
+    # legitimately prices out of merging
+    plan = api.plan_fleet(manifest, g, k=16, headroom=1,
+                          machine=cm.tpu_v5e(), dispatch_s=5e-5)
     covered = {}
     for b in plan.buckets:
         assert b.n == max(b.orders)

@@ -158,6 +158,45 @@ def test_auto_planned_specs_are_feasible(n, k, p, hoisted):
     assert hash(spec) == hash(SolveSpec.auto(n, k, p=p, hoisted=hoisted))
 
 
+@given(n=st.sampled_from([2 ** e for e in range(4, 13)]),
+       k=st.integers(1, 1 << 12), p=st.integers(1, 1024),
+       hoisted=st.booleans(),
+       structure=st.sampled_from(["banded8", "banded4", "block", None]),
+       overlap=st.sampled_from(["auto", "on", "off"]))
+@settings(max_examples=120, deadline=None)
+def test_auto_planned_structured_specs_are_feasible(n, k, p, hoisted,
+                                                    structure, overlap):
+    """The same always-feasible property over the full spec surface:
+    a non-dense structure (which swings BOTH sides of the rec/inv
+    dispatch pricing) and any overlap spelling must still yield a
+    valid, stable-keyed plan."""
+    from repro.core.solver import SolveSpec
+    from repro.core.structure import FactorStructure
+    stx = {"banded8": FactorStructure.banded(max(n // 8, 1)),
+           "banded4": FactorStructure.banded(max(n // 4, 1)),
+           "block": FactorStructure.block_sparse(
+               [[True, False], [True, True]]),
+           None: None}[structure]
+    spec = SolveSpec.auto(n, k, p=p, hoisted=hoisted, structure=stx,
+                          overlap=overlap)
+    assert spec.n0 >= 1 and n % spec.n0 == 0
+    g = spec.grid
+    assert g.p1 ** 2 * g.p2 <= p
+    if spec.method == "inv":
+        assert spec.n0 % (g.p1 * g.p2) == 0
+    assert spec.overlap == ("on" if overlap in ("auto", "on") else None)
+    spec.validate()
+    assert hash(spec) == hash(SolveSpec.auto(n, k, p=p, hoisted=hoisted,
+                                             structure=stx,
+                                             overlap=overlap))
+    # structure-aware pricing holds on both sides of the dispatch
+    if stx is not None:
+        from repro.core import cost_model as cm
+        rd, rs = (cm.rec_trsm_cost(n, k, p),
+                  cm.rec_trsm_cost(n, k, p, structure=stx))
+        assert rs.s == rd.s and rs.w <= rd.w and rs.f <= rd.f
+
+
 @given(n=pow2, p=pow2, reverse=st.booleans(), k=st.sampled_from([1, 3, 8]))
 @settings(max_examples=40, deadline=None)
 def test_device_cyclic_rows_matches_numpy(n, p, reverse, k):

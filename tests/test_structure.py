@@ -330,9 +330,17 @@ def test_structured_cost_prices_skipped_blocks():
     steady_s = cm.it_inv_trsm_steady_cost(n, k, n0, 2, 1, structure=st)
     solve = cm.solve_phase_cost(n, k, n0, 2, 1)
     assert steady_s.f - solve.f == pytest.approx(strct.f)
-    # rec is priced dense regardless (honest dispatch)
-    assert cm.rec_trsm_cost(n, k, 4, structure=st) == \
-        cm.rec_trsm_cost(n, k, 4)
+    # rec is now priced from the structure's whole-factor block fill:
+    # its L-proportional words/flops shrink, its message count (the
+    # structure-blind recursion depth) does not
+    rec_d = cm.rec_trsm_cost(n, k, 4)
+    rec_s = cm.rec_trsm_cost(n, k, 4, structure=st)
+    assert rec_s.s == rec_d.s
+    assert rec_s.f < rec_d.f
+    assert rec_s.w <= rec_d.w
+    # and a dense FactorStructure prices identically to None
+    assert cm.rec_trsm_cost(n, k, 4, structure=FactorStructure.dense()) \
+        == rec_d
 
 
 def test_auto_resolves_structured_plan_without_compiling():
